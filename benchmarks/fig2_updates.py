@@ -1,0 +1,91 @@
+"""Paper Fig. 2a/2b: update latency vs accumulated updates.
+
+2a: sequentially add baskets — incremental O(1) vs baseline O(n) retrain.
+2b: delete baskets from end / start / random — near-constant / linear /
+    in-between; baseline is O(n) everywhere.
+
+Setup follows §6.2: single user, single-item baskets [{1},{1},...].
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import RefEngine, TifuParams
+from repro.core.tifu import default_group_sizes, user_vector_ragged
+
+P = TifuParams(n_items=1, group_size=7, r_b=0.9, r_g=0.7)
+BASKET = np.array([0])
+
+
+def _time(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        fn()
+        best = min(best, time.perf_counter_ns() - t0)
+    return best / 1e3  # µs
+
+
+def fig2a_additions(n_max=4000, sample_every=250):
+    """Returns rows (n, t_incremental_us, t_baseline_us)."""
+    eng = RefEngine(P)
+    hist = []
+    rows = []
+    for n in range(1, n_max + 1):
+        t_incr = _time(lambda: eng.add_basket(0, BASKET), reps=1)
+        hist.append(BASKET)
+        if n % sample_every == 0 or n == 1:
+            t_base = _time(lambda: user_vector_ragged(
+                hist, default_group_sizes(len(hist), P.group_size), P))
+            rows.append((n, t_incr, t_base))
+    return rows
+
+
+def _build(n):
+    eng = RefEngine(P)
+    for _ in range(n):
+        eng.add_basket(0, BASKET)
+    return eng
+
+
+def fig2b_deletions(n0=2000, n_del=1500, sample_every=100, seed=0):
+    """Returns rows (k_deleted, t_end_us, t_start_us, t_random_us,
+    t_baseline_us)."""
+    rng = np.random.default_rng(seed)
+    eng_end, eng_start, eng_rand = _build(n0), _build(n0), _build(n0)
+    rows = []
+    for k in range(1, n_del + 1):
+        n_now = n0 - k + 1
+        t_end = _time(lambda: eng_end.delete_basket(0, n_now - 1), reps=1)
+        t_start = _time(lambda: eng_start.delete_basket(0, 0), reps=1)
+        pos = int(rng.integers(0, n_now))
+        t_rand = _time(lambda: eng_rand.delete_basket(0, pos), reps=1)
+        if k % sample_every == 0 or k == 1:
+            hist = eng_end.state(0).history
+            t_base = _time(lambda: user_vector_ragged(
+                hist, eng_end.state(0).group_sizes, P))
+            rows.append((k, t_end, t_start, t_rand, t_base))
+    return rows
+
+
+def main():
+    print("# fig2a: n,t_incr_us,t_baseline_us")
+    rows = fig2a_additions(n_max=3000, sample_every=500)
+    for r in rows:
+        print(f"fig2a,{r[0]},{r[1]:.1f},{r[2]:.1f}")
+    # the paper's claim: incremental time does not grow with n
+    t_first, t_last = rows[0][1], rows[-1][1]
+    print(f"# incr latency at n=1: {t_first:.1f}us; at n={rows[-1][0]}: "
+          f"{t_last:.1f}us (constant)")
+    print(f"# baseline grows: {rows[0][2]:.1f} → {rows[-1][2]:.1f}us")
+
+    print("# fig2b: k,t_end_us,t_start_us,t_random_us,t_baseline_us")
+    for r in fig2b_deletions(n0=1500, n_del=1000, sample_every=250):
+        print(f"fig2b,{r[0]},{r[1]:.1f},{r[2]:.1f},{r[3]:.1f},{r[4]:.1f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

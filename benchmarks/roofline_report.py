@@ -1,0 +1,40 @@
+"""§Roofline report: read the dry-run JSON and print the full per-cell
+table (three terms, bottleneck, useful-FLOPs ratio, memory fit)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = ["results/dryrun_single_pod.json", "results/dryrun_multi_pod.json"]
+
+
+def fmt(r):
+    rt = r.get("roofline", {})
+    mf = r.get("model_flops_per_device") or 0
+    uf = r.get("useful_flops_ratio")
+    return (f"{r['arch']},{r['shape']},{r['mesh']},"
+            f"{rt.get('t_compute_s', 0):.3e},{rt.get('t_memory_s', 0):.3e},"
+            f"{rt.get('t_collective_s', 0):.3e},{rt.get('bottleneck','-')},"
+            f"{(uf if uf is not None else 0):.3f},"
+            f"{r.get('peak_adjusted_bytes', 0)/2**30:.2f},"
+            f"{r.get('fits_16GiB_adjusted', False)}")
+
+
+def main():
+    print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+          "bottleneck,useful_flops_ratio,peak_adj_GiB,fits")
+    for path in RESULTS:
+        if not os.path.exists(path):
+            print(f"# missing {path} — run launch/dryrun.py first")
+            continue
+        with open(path) as f:
+            for r in json.load(f):
+                if "error" in r:
+                    print(f"{r['arch']},{r['shape']},{r['mesh']},ERROR,,,,,,")
+                else:
+                    print(fmt(r))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

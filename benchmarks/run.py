@@ -1,0 +1,120 @@
+"""Benchmark harness — one entry per paper table/figure (+ system
+benchmarks).  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_table2(quick: bool):
+    """Paper Table 2: ranking metrics baseline vs incr vs decr."""
+    from benchmarks.table2_predictive import run
+    scale = 0.04 if quick else 0.12
+    for ds in ("tafeng", "instacart", "valuedshopper"):
+        t0 = time.perf_counter()
+        rows, vec_diff = run(ds, scale=scale if ds != "valuedshopper"
+                             else scale / 2)
+        dt = (time.perf_counter() - t0) * 1e6
+        for r in rows:
+            _row(f"table2.{ds}.{r[1]}", dt / len(rows),
+                 f"base={r[2]:.4f};incr={r[3]:.4f};decr={r[4]:.4f}")
+        assert vec_diff < 1e-10, f"incremental not exact: {vec_diff}"
+
+
+def bench_fig2a(quick: bool):
+    from benchmarks.fig2_updates import fig2a_additions
+    rows = fig2a_additions(n_max=1000 if quick else 3000,
+                           sample_every=500)
+    first, last = rows[0], rows[-1]
+    _row("fig2a.incremental_update", last[1],
+         f"t(n={first[0]})={first[1]:.1f}us;t(n={last[0]})={last[1]:.1f}us;"
+         f"constant")
+    _row("fig2a.baseline_retrain", last[2],
+         f"grows {first[2]:.1f}->{last[2]:.1f}us")
+
+
+def bench_fig2b(quick: bool):
+    from benchmarks.fig2_updates import fig2b_deletions
+    rows = fig2b_deletions(n0=600 if quick else 1500,
+                           n_del=400 if quick else 1000, sample_every=200)
+    med = rows[len(rows) // 2]
+    _row("fig2b.delete_from_end", med[1], "near-constant")
+    _row("fig2b.delete_from_start", med[2], "suffix-linear (spiky)")
+    _row("fig2b.delete_random", med[3], "between")
+    _row("fig2b.baseline_retrain", med[4], "O(n)")
+
+
+def bench_fig2c(quick: bool):
+    from benchmarks.fig2c_error import deletions_to, run
+    for dtype in (np.float64, np.float32):
+        t0 = time.perf_counter()
+        rows = run(dtype, n0=420, n_del=200 if quick else 400)
+        us = (time.perf_counter() - t0) * 1e6 / len(rows)
+        d1 = deletions_to(rows, 1e-2)
+        _row(f"fig2c.error_growth.{np.dtype(dtype).name}", us,
+             f"deletions_to_1pct={d1}")
+
+
+def bench_streaming(quick: bool):
+    from benchmarks.streaming_throughput import run
+    for bs in ((256,) if quick else (64, 256, 1024)):
+        n, dt, _ = run(bs, n_events=1024 if quick else 4096)
+        _row(f"streaming.batch{bs}", dt / max(n, 1) * 1e6,
+             f"{n/dt:,.0f} events/s")
+
+
+def bench_kernels(quick: bool):
+    """Kernel schedules (portable paths; Pallas targets TPU)."""
+    import jax.numpy as jnp
+    from repro.core.knn import streaming_topk
+    from repro.kernels.ref import knn_topk_ref
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(65536 if quick else 262144, 128)),
+                    jnp.float32)
+    for name, fn in (
+            ("knn.materialized", lambda: knn_topk_ref(q, c, 100)),
+            ("knn.streaming", lambda: streaming_topk(q, c, 100,
+                                                     chunk=16384))):
+        fn()[0].block_until_ready()          # compile
+        t0 = time.perf_counter()
+        fn()[0].block_until_ready()
+        _row(f"kernel.{name}", (time.perf_counter() - t0) * 1e6,
+             f"Q=256xM={c.shape[0]}")
+
+
+def bench_roofline(quick: bool):
+    import json
+    import os
+    path = "results/dryrun_single_pod.json"
+    if not os.path.exists(path):
+        _row("roofline.missing", 0, "run launch/dryrun.py --all first")
+        return
+    with open(path) as f:
+        cells = [r for r in json.load(f) if "error" not in r]
+    for r in cells:
+        rt = r["roofline"]
+        dom = max(rt["t_compute_s"], rt["t_memory_s"], rt["t_collective_s"])
+        _row(f"roofline.{r['arch']}.{r['shape']}", dom * 1e6,
+             f"bound={rt['bottleneck']};fits={r['fits_16GiB_adjusted']}")
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    print("name,us_per_call,derived")
+    for bench in (bench_fig2a, bench_fig2b, bench_fig2c, bench_table2,
+                  bench_streaming, bench_kernels, bench_roofline):
+        bench(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.pytree import (AsyncCheckpointer, latest_step,
+                                     restore_pytree, save_pytree)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore_pytree",
+           "save_pytree"]

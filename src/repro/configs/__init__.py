@@ -1,0 +1,26 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from repro.configs import (bert4rec_cfg, command_r_plus_104b, deepfm_cfg,
+                           deepseek_v3_671b, dimenet_cfg, dlrm_mlperf,
+                           gemma3_27b, granite_3_2b, qwen2_moe_a2_7b,
+                           tifu_knn, two_tower_retrieval)
+from repro.configs.base import ArchDef, CellProgram
+
+REGISTRY = {a.ARCH.name: a.ARCH for a in (
+    qwen2_moe_a2_7b, deepseek_v3_671b, command_r_plus_104b, gemma3_27b,
+    granite_3_2b, dimenet_cfg, dlrm_mlperf, deepfm_cfg, bert4rec_cfg,
+    two_tower_retrieval, tifu_knn)}
+
+ASSIGNED = [n for n in REGISTRY if n != "tifu-knn"]   # the 10 assigned archs
+
+
+def get_arch(name: str) -> ArchDef:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def all_cells():
+    """Every (arch, shape) pair — 40 assigned cells + 2 tifu-knn cells."""
+    for name, arch in REGISTRY.items():
+        for shape in arch.cells:
+            yield name, shape

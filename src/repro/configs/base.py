@@ -1,0 +1,220 @@
+"""Cell builders: (architecture × input shape) → lowerable program.
+
+Each assigned architecture registers an ``ArchDef`` whose ``cells`` map
+shape names to builders.  A builder returns a ``CellProgram``:
+``jax.jit(fn, in_shardings, donate).lower(*args)`` must compile on the
+production meshes (launch/dryrun.py runs every cell on both meshes).
+
+All inputs are ``ShapeDtypeStruct`` stand-ins — nothing is allocated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.optim import (adamw, adafactor, adamw_state_pspecs,
+                         adafactor_state_pspecs)
+from repro.parallel.sharding import ShardingRules, batch_axes
+
+
+@dataclasses.dataclass
+class CellProgram:
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    donate_argnums: tuple = ()
+    static_argnums: tuple = ()
+    description: str = ""
+    model_flops_per_step: float = 0.0   # 6·N·D (train) / 2·N·D (serve)
+
+
+@dataclasses.dataclass
+class ArchDef:
+    name: str
+    family: str                       # "lm" | "gnn" | "recsys" | "tifu"
+    cells: Dict[str, Callable]        # shape → (mesh, rules) → CellProgram
+    make_smoke: Callable              # () -> (config, smoke_fn)
+    notes: str = ""
+
+
+def named(mesh, tree_of_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shardable(n, mesh, axes):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    return total > 1 and n % total == 0
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def lm_train_flops(c, batch, seq):
+    return 6.0 * c.n_active_params() * batch * seq
+
+
+def lm_train_cell(make_config, global_batch: int, seq: int,
+                  optimizer: str = "adamw"):
+    from repro.models import transformer as T
+
+    def build(mesh: Mesh, rules: ShardingRules) -> CellProgram:
+        c = make_config()
+        params = T.abstract_params(c)
+        pspecs = T.param_pspecs(c, mesh, rules)
+        opt = adamw(total_steps=10000) if optimizer == "adamw" \
+            else adafactor()
+        opt_state = jax.eval_shape(opt.init, params)
+        opt_pspecs = adamw_state_pspecs(pspecs) if optimizer == "adamw" \
+            else adafactor_state_pspecs(params, pspecs)
+        b_ax = batch_axes(mesh, rules)
+        bspec = P(b_ax if _shardable(global_batch, mesh, b_ax) else None,
+                  None)
+        batch = {"tokens": sds((global_batch, seq), jnp.int32),
+                 "labels": sds((global_batch, seq), jnp.int32)}
+        bshard = {"tokens": NamedSharding(mesh, bspec),
+                  "labels": NamedSharding(mesh, bspec)}
+        fn = T.make_train_step(c, opt, mesh, rules)
+        return CellProgram(
+            fn=fn, args=(params, opt_state, batch),
+            in_shardings=(named(mesh, pspecs), named(mesh, opt_pspecs),
+                          bshard),
+            donate_argnums=(0, 1),
+            description=f"train_step B={global_batch} S={seq}",
+            model_flops_per_step=lm_train_flops(c, global_batch, seq))
+    return build
+
+
+def _cache_pspecs(c, batch: int, mesh, rules):
+    """KV-cache sharding: B over batch axes when divisible, S over the
+    context axis ('model'; + 'data' too when B is unshardable)."""
+    from repro.models import transformer as T
+    b_ax = batch_axes(mesh, rules)
+    b_ok = _shardable(batch, mesh, b_ax)
+    if b_ok:
+        s_ax = rules.context if rules.context in mesh.axis_names else None
+        bs = b_ax
+    else:
+        axes = tuple(a for a in ("data", "model") if a in mesh.axis_names)
+        s_ax, bs = axes, None
+
+    def one(sd):
+        if len(sd.shape) == 5:      # [L,B,S,kv,dh]
+            return P(None, bs, s_ax, None, None)
+        return P(None, bs, s_ax, None)  # MLA latent [L,B,S,r]
+
+    return jax.tree.map(one, T.cache_shapes(c, batch, 1),
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def lm_decode_cell(make_config, global_batch: int, cache_len: int):
+    from repro.models import transformer as T
+
+    def build(mesh: Mesh, rules: ShardingRules) -> CellProgram:
+        c = make_config()
+        params = T.abstract_params(c)
+        pspecs = T.param_pspecs(c, mesh, rules)
+        caches = T.cache_shapes(c, global_batch, cache_len)
+        cache_ps = _cache_pspecs(c, global_batch, mesh, rules)
+        b_ax = batch_axes(mesh, rules)
+        bspec = P(b_ax if _shardable(global_batch, mesh, b_ax) else None,
+                  None)
+        token = sds((global_batch, 1), jnp.int32)
+        pos = sds((), jnp.int32)
+
+        def fn(params, caches, token, pos):
+            return T.decode_step(params, caches, token, pos, c, mesh, rules)
+
+        return CellProgram(
+            fn=fn, args=(params, caches, token, pos),
+            in_shardings=(named(mesh, pspecs), named(mesh, cache_ps),
+                          NamedSharding(mesh, bspec),
+                          NamedSharding(mesh, P())),
+            donate_argnums=(1,),
+            description=f"decode_step B={global_batch} cache={cache_len}",
+            model_flops_per_step=2.0 * c.n_active_params() * global_batch)
+    return build
+
+
+def lm_prefill_cell(make_config, global_batch: int, seq: int):
+    from repro.models import transformer as T
+
+    def build(mesh: Mesh, rules: ShardingRules) -> CellProgram:
+        c = make_config()
+        params = T.abstract_params(c)
+        pspecs = T.param_pspecs(c, mesh, rules)
+        b_ax = batch_axes(mesh, rules)
+        bspec = P(b_ax if _shardable(global_batch, mesh, b_ax) else None,
+                  None)
+        tokens = sds((global_batch, seq), jnp.int32)
+
+        def fn(params, tokens):
+            return T.prefill(params, tokens, c, max_len=seq, mesh=mesh,
+                             rules=rules)
+
+        return CellProgram(
+            fn=fn, args=(params, tokens),
+            in_shardings=(named(mesh, pspecs), NamedSharding(mesh, bspec)),
+            description=f"prefill B={global_batch} S={seq}",
+            model_flops_per_step=2.0 * c.n_active_params() * global_batch
+            * seq)
+    return build
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def recsys_cell(module, make_config, batch_builder, kind: str,
+                flops_fn=None, train: bool = False, serve_fn="serve_step",
+                train_kwargs: Optional[dict] = None, pass_mesh: bool = False):
+    """Generic builder for the recsys/GNN models.
+
+    ``batch_builder(c, mesh, rules) -> (batch_sds, batch_shardings)``.
+    ``pass_mesh``: forward (mesh, rules) into the model step (models with
+    a shard_map distributed path, e.g. DimeNet).
+    """
+    def build(mesh: Mesh, rules: ShardingRules) -> CellProgram:
+        c = make_config()
+        params = module.abstract_params(c)
+        pspecs = module.param_pspecs(c, mesh, rules)
+        batch, bshard = batch_builder(c, mesh, rules)
+        mesh_kw = {"mesh": mesh, "rules": rules} if pass_mesh else {}
+        if train:
+            opt = adamw(total_steps=10000)
+            opt_state = jax.eval_shape(opt.init, params)
+            opt_pspecs = adamw_state_pspecs(pspecs)
+            fn = module.make_train_step(c, opt, **(train_kwargs or {}),
+                                        **mesh_kw)
+            return CellProgram(
+                fn=fn, args=(params, opt_state, batch),
+                in_shardings=(named(mesh, pspecs), named(mesh, opt_pspecs),
+                              bshard),
+                donate_argnums=(0, 1), description=kind,
+                model_flops_per_step=flops_fn(c) if flops_fn else 0.0)
+
+        def fn(params, batch):
+            return getattr(module, serve_fn)(params, batch, c, **mesh_kw)
+
+        return CellProgram(
+            fn=fn, args=(params, batch),
+            in_shardings=(named(mesh, pspecs), bshard),
+            description=kind,
+            model_flops_per_step=flops_fn(c) if flops_fn else 0.0)
+    return build
+
+
+def batch_spec(mesh, rules, n):
+    b_ax = batch_axes(mesh, rules)
+    return b_ax if _shardable(n, mesh, b_ax) else None

@@ -1,0 +1,41 @@
+"""bert4rec [arXiv:1904.06690] — embed_dim=64 2 blocks 2 heads seq=200,
+bidirectional cloze training; 1M-item catalogue (padded)."""
+from repro.configs import recsys_shapes as rs
+from repro.configs.base import ArchDef, recsys_cell
+from repro.models import bert4rec
+
+
+def make_config():
+    return bert4rec.Bert4RecConfig()
+
+
+def smoke_config():
+    return bert4rec.Bert4RecConfig(n_items=500, embed_dim=32, n_blocks=2,
+                                   n_heads=2, seq_len=16, d_ff=64)
+
+
+def _flops_train(c):
+    per_tok = c.n_blocks * (4 * c.embed_dim ** 2 + 2 * c.embed_dim * c.d_ff)
+    return 6.0 * per_tok * rs.TRAIN_BATCH * c.seq_len
+
+
+ARCH = ArchDef(
+    name="bert4rec", family="recsys",
+    cells={
+        "train_batch": recsys_cell(
+            bert4rec, make_config, rs.bert4rec_batch(rs.TRAIN_BATCH),
+            "sampled-cloze train B=65536", train=True, pass_mesh=True,
+            train_kwargs={"sampled": True}, flops_fn=_flops_train),
+        "serve_p99": recsys_cell(
+            bert4rec, make_config,
+            rs.bert4rec_batch(rs.SERVE_P99, train=False), "serve B=512", pass_mesh=True),
+        "serve_bulk": recsys_cell(
+            bert4rec, make_config,
+            rs.bert4rec_batch(rs.SERVE_BULK, train=False), "serve B=262144", pass_mesh=True),
+        "retrieval_cand": recsys_cell(
+            bert4rec, make_config, rs.bert4rec_retrieval_batch(),
+            "1 query vs 1M candidates", serve_fn="retrieval_step", pass_mesh=True),
+    },
+    make_smoke=smoke_config,
+    notes="encoder-only (no decode shapes); paper's closed-form unlearning "
+          "does NOT apply (learned seq model) — DESIGN.md §4.")

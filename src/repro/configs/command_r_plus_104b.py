@@ -1,0 +1,29 @@
+"""command-r-plus-104b [hf:CohereForAI/c4ai-command-r-plus]
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000, no-bias."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.configs.lm_shapes import standard_lm_cells
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="command-r-plus-104b", n_layers=64, d_model=12288, n_heads=96,
+        n_kv_heads=8, d_head=128, d_ff=33792, vocab_size=256000,
+        tie_embeddings=True, dtype=jnp.bfloat16)
+
+
+def smoke_config():
+    return TransformerConfig(
+        name="command-r-smoke", n_layers=2, d_model=96, n_heads=6,
+        n_kv_heads=2, d_head=16, d_ff=256, vocab_size=128,
+        q_block=8, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="command-r-plus-104b", family="lm",
+    cells=standard_lm_cells(make_config),
+    make_smoke=smoke_config,
+    notes="dense GQA 104B; kv=8 → attention FSDP-only TP fallback; "
+          "d_ff TP-sharded (33792/16=2112).")

@@ -1,0 +1,40 @@
+"""deepfm [arXiv:1703.04247] — 39 fields, embed_dim=10, FM + 400-400-400."""
+from repro.configs import recsys_shapes as rs
+from repro.configs.base import ArchDef, recsys_cell
+from repro.models import deepfm
+
+
+def make_config():
+    return deepfm.DeepFMConfig()
+
+
+def smoke_config():
+    return deepfm.DeepFMConfig(vocab_sizes=tuple([32] * 39), embed_dim=10,
+                               mlp=(32, 32))
+
+
+def _flops_train(c):
+    mlp = c.n_params() - c.table.padded_rows() * (c.embed_dim + 1)
+    return 6.0 * mlp * rs.TRAIN_BATCH
+
+
+ARCH = ArchDef(
+    name="deepfm", family="recsys",
+    cells={
+        "train_batch": recsys_cell(deepfm, make_config,
+                                   rs.deepfm_batch(rs.TRAIN_BATCH),
+                                   "train B=65536", train=True, pass_mesh=True,
+                                   flops_fn=_flops_train),
+        "serve_p99": recsys_cell(deepfm, make_config,
+                                 rs.deepfm_batch(rs.SERVE_P99, train=False),
+                                 "serve B=512", pass_mesh=True),
+        "serve_bulk": recsys_cell(deepfm, make_config,
+                                  rs.deepfm_batch(rs.SERVE_BULK, train=False),
+                                  "serve B=262144", pass_mesh=True),
+        "retrieval_cand": recsys_cell(
+            deepfm, make_config,
+            rs.deepfm_batch(rs.N_CANDIDATES, train=False),
+            "score 1M candidates", pass_mesh=True),
+    },
+    make_smoke=smoke_config,
+    notes="FM sum-square identity; embedding bag maintenance per paper.")

@@ -1,0 +1,46 @@
+"""dlrm-mlperf [arXiv:1906.00091] — MLPerf/Criteo-1TB DLRM.
+n_dense=13 n_sparse=26 embed_dim=128 bot=13-512-256-128
+top=1024-1024-512-256-1 interaction=dot.  ~24B embedding params,
+row-sharded over every mesh axis."""
+from repro.configs import recsys_shapes as rs
+from repro.configs.base import ArchDef, recsys_cell
+from repro.models import dlrm
+
+
+def make_config():
+    return dlrm.DLRMConfig()
+
+
+def smoke_config():
+    return dlrm.DLRMConfig(vocab_sizes=tuple([64] * 26), embed_dim=16,
+                           bot_mlp=(32, 16), top_mlp=(64, 32, 1))
+
+
+def _flops_train(c):
+    # fwd+bwd MLP flops dominate compute; 6 × (MLP params) × batch
+    mlp = c.n_params() - c.table.padded_rows() * c.embed_dim
+    return 6.0 * mlp * rs.TRAIN_BATCH
+
+
+ARCH = ArchDef(
+    name="dlrm-mlperf", family="recsys",
+    cells={
+        "train_batch": recsys_cell(dlrm, make_config,
+                                   rs.dlrm_batch(rs.TRAIN_BATCH),
+                                   "train B=65536", train=True, pass_mesh=True,
+                                   flops_fn=_flops_train),
+        "serve_p99": recsys_cell(dlrm, make_config,
+                                 rs.dlrm_batch(rs.SERVE_P99, train=False),
+                                 "serve B=512", pass_mesh=True),
+        "serve_bulk": recsys_cell(dlrm, make_config,
+                                  rs.dlrm_batch(rs.SERVE_BULK, train=False),
+                                  "serve B=262144", pass_mesh=True),
+        # ranking model: candidate scoring = 1M-row forward where the
+        # candidate-item feature column varies (documented in DESIGN.md)
+        "retrieval_cand": recsys_cell(
+            dlrm, make_config, rs.dlrm_batch(rs.N_CANDIDATES, train=False),
+            "score 1M candidates", pass_mesh=True),
+    },
+    make_smoke=smoke_config,
+    notes="embedding lookup is the hot path; paper technique attaches to "
+          "bag maintenance (DESIGN.md §4).")

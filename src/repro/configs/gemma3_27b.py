@@ -1,0 +1,31 @@
+"""gemma3-27b [hf:google/gemma-3-*]
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144,
+5:1 local:global sliding-window attention (window 1024), 128k context."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.configs.lm_shapes import standard_lm_cells
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="gemma3-27b", n_layers=62, d_model=5376, n_heads=32,
+        n_kv_heads=16, d_head=128, d_ff=21504, vocab_size=262144,
+        sliding_window=1024, global_every=6,   # layers 6,12,... are global
+        tie_embeddings=True, dtype=jnp.bfloat16)
+
+
+def smoke_config():
+    return TransformerConfig(
+        name="gemma3-smoke", n_layers=6, d_model=64, n_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, vocab_size=256,
+        sliding_window=4, global_every=6, q_block=8, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="gemma3-27b", family="lm",
+    cells=standard_lm_cells(make_config),
+    make_smoke=smoke_config,
+    notes="5:1 local:global; the ONLY assigned LM arch whose 500k PREFILL "
+          "is sub-quadratic (window=1024); long_500k decode runs for all.")

@@ -1,0 +1,30 @@
+"""granite-3-2b [hf:ibm-granite/granite-3.0-2b-base]
+40L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=49155 (padded to 49408)."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.configs.lm_shapes import standard_lm_cells
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="granite-3-2b", n_layers=40, d_model=2048, n_heads=32,
+        n_kv_heads=8, d_head=64, d_ff=8192,
+        vocab_size=49408,   # 49155 padded to a multiple of 256 (TP)
+        tie_embeddings=True, dtype=jnp.bfloat16)
+
+
+def smoke_config():
+    return TransformerConfig(
+        name="granite-smoke", n_layers=2, d_model=64, n_heads=8,
+        n_kv_heads=2, d_head=8, d_ff=128, vocab_size=128,
+        tie_embeddings=True, q_block=8, dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="granite-3-2b", family="lm",
+    cells=standard_lm_cells(make_config),
+    make_smoke=smoke_config,
+    notes="dense GQA; kv=8 < model axis → attention params FSDP-only "
+          "(see transformer.param_pspecs); vocab padded 49155→49408.")

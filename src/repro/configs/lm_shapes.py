@@ -1,0 +1,26 @@
+"""Shared LM shape-cell definitions (assignment: train_4k / prefill_32k /
+decode_32k / long_500k)."""
+from repro.configs.base import lm_decode_cell, lm_prefill_cell, lm_train_cell
+
+TRAIN_4K = dict(seq=4096, global_batch=256)
+PREFILL_32K = dict(seq=32768, global_batch=32)
+DECODE_32K = dict(cache=32768, global_batch=128)
+LONG_500K = dict(cache=524288, global_batch=1)
+
+
+def standard_lm_cells(make_config, optimizer="adamw"):
+    return {
+        "train_4k": lm_train_cell(make_config, TRAIN_4K["global_batch"],
+                                  TRAIN_4K["seq"], optimizer),
+        "prefill_32k": lm_prefill_cell(make_config,
+                                       PREFILL_32K["global_batch"],
+                                       PREFILL_32K["seq"]),
+        "decode_32k": lm_decode_cell(make_config, DECODE_32K["global_batch"],
+                                     DECODE_32K["cache"]),
+        # long_500k lowers ONE decode step against a 512k-token KV cache —
+        # O(S), runnable for every arch. A 500k PREFILL would be quadratic
+        # and is only feasible for sliding-window archs (gemma3); see
+        # DESIGN.md §4 for the per-arch notes.
+        "long_500k": lm_decode_cell(make_config, LONG_500K["global_batch"],
+                                    LONG_500K["cache"]),
+    }

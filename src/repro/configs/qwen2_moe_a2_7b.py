@@ -1,0 +1,34 @@
+"""qwen2-moe-a2.7b [hf:Qwen/Qwen1.5-MoE-A2.7B]
+24L d_model=2048 16H (GQA kv=16) per-expert d_ff=1408 vocab=151936,
+60 routed experts top-4 + 4 shared experts (shared ffn 4*1408=5632)."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchDef
+from repro.configs.lm_shapes import standard_lm_cells
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="qwen2-moe-a2.7b", n_layers=24, d_model=2048, n_heads=16,
+        n_kv_heads=16, d_head=128, d_ff=5632, vocab_size=151936,
+        moe=True, n_experts=60, n_experts_padded=64,  # 64 % 16 == 0 (EP)
+        n_shared_experts=4, top_k=4, moe_d_ff=1408,
+        tie_embeddings=True, dtype=jnp.bfloat16)
+
+
+def smoke_config():
+    return TransformerConfig(
+        name="qwen2-moe-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_head=16, d_ff=128, vocab_size=256,
+        moe=True, n_experts=6, n_experts_padded=8, n_shared_experts=2,
+        top_k=2, moe_d_ff=32, capacity_factor=2.0, q_block=8,
+        dtype=jnp.float32)
+
+
+ARCH = ArchDef(
+    name="qwen2-moe-a2.7b", family="lm",
+    cells=standard_lm_cells(make_config),
+    make_smoke=smoke_config,
+    notes="60 routed experts padded to 64 for EP over the 16-way model "
+          "axis (pad experts receive no routes: router stays 60-wide).")

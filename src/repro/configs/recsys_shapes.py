@@ -1,0 +1,93 @@
+"""Shared recsys shape cells: train_batch=65536, serve_p99=512,
+serve_bulk=262144, retrieval_cand: batch=1 × 1M candidates."""
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import batch_spec, sds
+
+TRAIN_BATCH = 65536
+SERVE_P99 = 512
+SERVE_BULK = 262144
+N_CANDIDATES = 1_000_000
+
+
+def dlrm_batch(n, train=True):
+    def build(c, mesh, rules):
+        ax = batch_spec(mesh, rules, n)
+        batch = {"dense": sds((n, c.n_dense), jnp.float32),
+                 "sparse": sds((n, c.n_sparse), jnp.int32)}
+        shard = {"dense": NamedSharding(mesh, P(ax, None)),
+                 "sparse": NamedSharding(mesh, P(ax, None))}
+        if train:
+            batch["labels"] = sds((n,), jnp.float32)
+            shard["labels"] = NamedSharding(mesh, P(ax))
+        return batch, shard
+    return build
+
+
+def deepfm_batch(n, train=True):
+    def build(c, mesh, rules):
+        ax = batch_spec(mesh, rules, n)
+        batch = {"sparse": sds((n, c.n_fields), jnp.int32)}
+        shard = {"sparse": NamedSharding(mesh, P(ax, None))}
+        if train:
+            batch["labels"] = sds((n,), jnp.float32)
+            shard["labels"] = NamedSharding(mesh, P(ax))
+        return batch, shard
+    return build
+
+
+def bert4rec_batch(n, train=True, n_masked=20, n_negatives=8192):
+    def build(c, mesh, rules):
+        ax = batch_spec(mesh, rules, n)
+        batch = {"ids": sds((n, c.seq_len), jnp.int32)}
+        shard = {"ids": NamedSharding(mesh, P(ax, None))}
+        if train:
+            batch.update({"mask_pos": sds((n, n_masked), jnp.int32),
+                          "targets": sds((n, n_masked), jnp.int32),
+                          "negatives": sds((n_negatives,), jnp.int32)})
+            shard.update({"mask_pos": NamedSharding(mesh, P(ax, None)),
+                          "targets": NamedSharding(mesh, P(ax, None)),
+                          "negatives": NamedSharding(mesh, P(None))})
+        return batch, shard
+    return build
+
+
+def bert4rec_retrieval_batch(n_cand=N_CANDIDATES):
+    def build(c, mesh, rules):
+        tp = rules.tensor if rules.tensor in mesh.axis_names else None
+        batch = {"ids": sds((1, c.seq_len), jnp.int32),
+                 "candidates": sds((n_cand, c.embed_dim), jnp.float32)}
+        shard = {"ids": NamedSharding(mesh, P(None, None)),
+                 "candidates": NamedSharding(mesh, P(tp, None))}
+        return batch, shard
+    return build
+
+
+def two_tower_batch(n, train=True):
+    def build(c, mesh, rules):
+        ax = batch_spec(mesh, rules, n)
+        batch = {"user_id": sds((n,), jnp.int32),
+                 "history": sds((n, c.hist_len), jnp.int32),
+                 "item_id": sds((n,), jnp.int32),
+                 "item_cat": sds((n,), jnp.int32)}
+        shard = {k: NamedSharding(mesh, P(ax, None) if len(v.shape) == 2
+                                  else P(ax)) for k, v in batch.items()}
+        if train:
+            batch["logq"] = sds((n,), jnp.float32)
+            shard["logq"] = NamedSharding(mesh, P(ax))
+        return batch, shard
+    return build
+
+
+def two_tower_retrieval_batch(n_cand=N_CANDIDATES):
+    def build(c, mesh, rules):
+        tp = rules.tensor if rules.tensor in mesh.axis_names else None
+        batch = {"user_id": sds((1,), jnp.int32),
+                 "history": sds((1, c.hist_len), jnp.int32),
+                 "candidates": sds((n_cand, c.tower_mlp[-1]), jnp.float32)}
+        shard = {"user_id": NamedSharding(mesh, P(None)),
+                 "history": NamedSharding(mesh, P(None, None)),
+                 "candidates": NamedSharding(mesh, P(tp, None))}
+        return batch, shard
+    return build

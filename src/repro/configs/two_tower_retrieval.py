@@ -1,0 +1,47 @@
+"""two-tower-retrieval [RecSys'19 YouTube] — embed_dim=256,
+towers 1024-512-256, dot interaction, in-batch sampled softmax."""
+from repro.configs import recsys_shapes as rs
+from repro.configs.base import ArchDef, recsys_cell
+from repro.models import two_tower
+
+
+def make_config():
+    return two_tower.TwoTowerConfig()
+
+
+def smoke_config():
+    return two_tower.TwoTowerConfig(n_users=1000, n_items=500,
+                                    n_item_cats=20, hist_len=8,
+                                    embed_dim=16, tower_mlp=(32, 16))
+
+
+def _flops_train(c):
+    tower = sum(a * b for a, b in zip([2 * c.embed_dim, *c.tower_mlp[:-1]],
+                                      c.tower_mlp))
+    # two towers fwd+bwd + BxB in-batch logits fwd+bwd
+    return (6.0 * 2 * tower * rs.TRAIN_BATCH
+            + 6.0 * rs.TRAIN_BATCH ** 2 * c.tower_mlp[-1])
+
+
+ARCH = ArchDef(
+    name="two-tower-retrieval", family="recsys",
+    cells={
+        "train_batch": recsys_cell(
+            two_tower, make_config, rs.two_tower_batch(rs.TRAIN_BATCH),
+            "in-batch softmax B=65536", train=True, pass_mesh=True, flops_fn=_flops_train),
+        "serve_p99": recsys_cell(
+            two_tower, make_config,
+            rs.two_tower_batch(rs.SERVE_P99, train=False),
+            "pair scoring B=512", pass_mesh=True),
+        "serve_bulk": recsys_cell(
+            two_tower, make_config,
+            rs.two_tower_batch(rs.SERVE_BULK, train=False),
+            "pair scoring B=262144", pass_mesh=True),
+        "retrieval_cand": recsys_cell(
+            two_tower, make_config, rs.two_tower_retrieval_batch(),
+            "1 query vs 1M candidates", serve_fn="retrieval_step", pass_mesh=True),
+    },
+    make_smoke=smoke_config,
+    notes="CLOSEST match to the paper: user tower = embedding-bag user "
+          "vector (decayed-average maintenance applies); retrieval_cand "
+          "uses the kNN/top-k kernel shape (DESIGN.md §4).")

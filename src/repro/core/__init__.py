@@ -1,0 +1,16 @@
+"""Core: the paper's contribution — TIFU-kNN maintenance under additions
+and deletions of baskets and items (Wang & Schelter, ORSUM@RecSys'21)."""
+from repro.core.types import (PAD_ID, KIND_NOOP, KIND_ADD_BASKET,
+                              KIND_DEL_BASKET, KIND_DEL_ITEM,
+                              PAPER_HYPERPARAMS, RaggedUserState, StreamState,
+                              TifuParams, UpdateBatch)
+from repro.core import decay, knn, stability, tifu
+from repro.core.ref_engine import RefEngine
+from repro.core.updates import apply_update_batch, refresh_users
+
+__all__ = [
+    "PAD_ID", "KIND_NOOP", "KIND_ADD_BASKET", "KIND_DEL_BASKET",
+    "KIND_DEL_ITEM", "PAPER_HYPERPARAMS", "RaggedUserState", "StreamState",
+    "TifuParams", "UpdateBatch", "decay", "knn", "stability", "tifu",
+    "RefEngine", "apply_update_batch", "refresh_users",
+]

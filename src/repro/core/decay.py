@@ -1,0 +1,118 @@
+"""Maintenance rules for time-decayed averages (paper §4.1).
+
+The decaying average of a series ``S = [x_1 .. x_n]`` with decay ``r`` is
+
+    avg_n = (1/n) * sum_i r^(n-i) * x_i .
+
+This module implements the three maintenance rules of the paper — each in
+a shape-polymorphic form that works for scalars and for stacked vectors
+(``x_i`` of any trailing shape):
+
+  * ``incremental_add``  (Eq. 3)  O(1)
+  * ``decremental_delete`` (Eq. 4)  O(n - i)   (suffix only)
+  * ``inplace_update``   (Eq. 5)  O(1)
+
+plus ``decayed_average`` (the from-scratch oracle) and the closed-form
+suffix-coefficient helpers used by the batched JAX engine.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def decayed_average(xs, r, xp=np):
+    """From-scratch decaying average. ``xs``: [n, ...]; returns [...]."""
+    n = xs.shape[0]
+    if n == 0:
+        raise ValueError("decayed_average of an empty series")
+    weights = r ** xp.arange(n - 1, -1, -1, dtype=xs.dtype if hasattr(xs, "dtype") else None)
+    weights = xp.asarray(weights, dtype=xs.dtype)
+    return xp.tensordot(weights, xs, axes=(0, 0)) / n
+
+
+def incremental_add(avg_n, n, x_new, r):
+    """Eq. 3:  avg_{n+1} = (r * n * avg_n + x_{n+1}) / (n + 1).
+
+    O(1): only the current average, the count and the new element are
+    touched.  Exact (no approximation).
+    """
+    return (r * n * avg_n + x_new) / (n + 1)
+
+
+def suffix_coefficients(n: int, i: int, r: float, xp=np, dtype=None):
+    """Coefficients c_t with  D([x_i..x_n])^T R(r, n-i) = sum_t c_t x_t.
+
+    1-based positions; c_t = 0 for t < i,
+    c_i = -r^(n-i),  c_t = r^(n-t+1) - r^(n-t)  for i < t <= n.
+
+    Returns an array of length ``n`` (coefficient per series position).
+    This is the vectorised expansion of the first-order-difference dot
+    product from Eq. 4 — it lets the batched engine compute the suffix
+    term as a single masked contraction.
+    """
+    t = xp.arange(1, n + 1)
+    pow_nt = xp.asarray(r, dtype=dtype) ** (n - t)
+    coeff = xp.where(t == i, -pow_nt, pow_nt * (r - 1.0))
+    coeff = xp.where(t < i, xp.zeros_like(coeff), coeff)
+    return coeff.astype(dtype) if dtype is not None else coeff
+
+
+def decremental_delete(avg_n, n, xs_suffix, i, r, xp=np):
+    """Eq. 4: delete the i-th (1-based) element of an n-series.
+
+    ``xs_suffix`` must be the slice ``[x_i .. x_n]`` (length n - i + 1).
+    Only this suffix is accessed — O(n - i), matching the paper's claimed
+    complexity.  Numerically *unstable*: the result multiplies the
+    incoming error by n / ((n-1) r) > 1 (paper §6.3).
+
+    Returns avg'_{n-1}.
+    """
+    if n <= 1:
+        # deleting the only element: average ceases to exist; by convention
+        # return zeros (callers special-case this).
+        return xp.zeros_like(avg_n)
+    m = xs_suffix.shape[0]          # == n - i + 1
+    # D = [x_{i+1}-x_i, ..., x_n - x_{n-1}, -x_n]   (length m)
+    diffs = xp.concatenate(
+        [xs_suffix[1:] - xs_suffix[:-1], -xs_suffix[-1:]], axis=0)
+    # R = [r^(n-i), ..., r, 1]                      (length m)
+    decays = xp.asarray(r, dtype=diffs.dtype) ** xp.arange(m - 1, -1, -1)
+    decays = decays.astype(diffs.dtype)
+    suffix_term = xp.tensordot(decays, diffs, axes=(0, 0))
+    return (n * avg_n + suffix_term) / ((n - 1) * r)
+
+
+def inplace_update(avg_n, n, x_old, x_new, i, r):
+    """Eq. 5:  avg'_n = avg_n + r^(n-i) (x'_i - x_i) / n.   O(1)."""
+    return avg_n + (r ** (n - i)) * (x_new - x_old) / n
+
+
+# ---------------------------------------------------------------------------
+# Batched JAX variants (fixed shapes, mask-driven) used by streaming.engine.
+# ---------------------------------------------------------------------------
+
+def batched_suffix_coefficients(n, i, r, length):
+    """suffix_coefficients for traced scalars n, i over a fixed length grid.
+
+    Positions t = 1..length; entries for t > n are zeroed.  ``n``/``i`` may
+    be traced int scalars; ``length`` is static.
+    """
+    t = jnp.arange(1, length + 1)
+    pow_nt = jnp.asarray(r, jnp.float32) ** (n - t)
+    coeff = jnp.where(t == i, -pow_nt, pow_nt * (r - 1.0))
+    coeff = jnp.where((t < i) | (t > n), 0.0, coeff)
+    return coeff
+
+
+def error_growth_factor(n, r):
+    """Multiplicative worst-case error factor of one decremental update.
+
+    From §6.3 of the paper: u' = alpha u + C with alpha = n / ((n-1) r) > 1.
+    """
+    return n / ((n - 1.0) * r)
+
+
+def error_shrink_factor(n, r):
+    """Error factor of one incremental update: r n / (n+1) < 1 (stable)."""
+    return r * n / (n + 1.0)

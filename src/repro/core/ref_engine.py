@@ -1,0 +1,207 @@
+"""Paper-faithful reference engine (ragged numpy, per-update).
+
+Implements §4.2 (incremental) and §4.3 (decremental) of the paper exactly
+as written, one update at a time, touching only the data the paper's
+algorithms touch:
+
+  * ``add_basket``    — O(1)              (Eq. 7 / Eq. 8 + Eq. 9)
+  * ``delete_basket`` — O(|H| - p)        (Eq. 10 + Eq. 11 / Eq. 12)
+  * ``delete_item``   — O(m) or fallback  (Eq. 13 + Eq. 11)
+
+This engine is (a) the semantics oracle for the batched JAX engine and
+(b) the implementation whose per-update latencies reproduce Fig. 2a/2b/2c
+(benchmarks/fig2*).  Group vectors are recomputed from the history slice
+on demand (the paper's f_decr signature takes H for exactly this reason);
+only ``user_vec`` and ``last_group_vec`` are maintained as state, giving
+O(1) incremental updates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import decay
+from repro.core.tifu import (default_group_sizes, group_vector_ragged,
+                             multi_hot, user_vector_ragged)
+from repro.core.types import RaggedUserState, TifuParams
+
+
+class RefEngine:
+    """Maintains a set of RaggedUserState under additions and deletions."""
+
+    def __init__(self, params: TifuParams, dtype=np.float64,
+                 stability_threshold: Optional[float] = None):
+        """``stability_threshold``: if set, a user whose accumulated
+        worst-case error multiplier exceeds it is refreshed from scratch
+        (beyond-paper; see core.stability).  ``None`` reproduces the paper
+        exactly (unbounded error growth, §6.3)."""
+        self.params = params
+        self.dtype = dtype
+        self.stability_threshold = stability_threshold
+        self.users: dict[int, RaggedUserState] = {}
+
+    # -- state management ---------------------------------------------------
+
+    def state(self, user: int) -> RaggedUserState:
+        if user not in self.users:
+            self.users[user] = RaggedUserState.empty(self.params.n_items)
+            self.users[user].user_vec = self.users[user].user_vec.astype(self.dtype)
+            self.users[user].last_group_vec = (
+                self.users[user].last_group_vec.astype(self.dtype))
+        return self.users[user]
+
+    def fit_from_scratch(self, user: int, history: Sequence[np.ndarray]):
+        """Baseline "training": full recomputation (the paper's baseline)."""
+        st = self.state(user)
+        st.history = [np.asarray(b, dtype=np.int64) for b in history]
+        st.group_sizes = default_group_sizes(len(st.history),
+                                             self.params.group_size)
+        self._refresh(st)
+        return st
+
+    def _refresh(self, st: RaggedUserState):
+        """Recompute user_vec / last_group_vec from scratch; reset error."""
+        p = self.params
+        st.user_vec = user_vector_ragged(st.history, st.group_sizes, p,
+                                         self.dtype)
+        if st.group_sizes:
+            start = sum(st.group_sizes[:-1])
+            st.last_group_vec = group_vector_ragged(
+                st.history[start:], p.n_items, p.r_b, self.dtype)
+        else:
+            st.last_group_vec = np.zeros(p.n_items, dtype=self.dtype)
+        st.err_mult = 1.0
+
+    def _maybe_stabilize(self, st: RaggedUserState):
+        if (self.stability_threshold is not None
+                and st.err_mult > self.stability_threshold):
+            self._refresh(st)
+
+    # -- incremental updates (paper §4.2) ------------------------------------
+
+    def add_basket(self, user: int, basket: np.ndarray) -> RaggedUserState:
+        """f_incr: O(1) w.r.t. history size."""
+        p = self.params
+        st = self.state(user)
+        basket = np.asarray(basket, dtype=np.int64)
+        v_b = multi_hot(basket, p.n_items, self.dtype)
+        k = st.n_groups
+        tau = st.group_sizes[-1] if k else 0
+        if k == 0 or tau >= p.group_size:
+            # Scenario 1 (Eq. 7): open a new group containing one basket.
+            st.user_vec = (k * p.r_g * st.user_vec + v_b) / (k + 1)
+            st.last_group_vec = v_b
+            st.group_sizes.append(1)
+            # Eq. 7 scales the old user vector (and its error) by k*r_g/(k+1).
+            st.err_mult *= decay.error_shrink_factor(k, p.r_g) if k else 0.0
+            st.err_mult = max(st.err_mult, 1.0e-30)
+        else:
+            # Scenario 2 (Eq. 8 + Eq. 9): append to the last group.
+            v_gk = st.last_group_vec
+            v_gk_new = (tau * p.r_b * v_gk + v_b) / (tau + 1)
+            st.user_vec = st.user_vec + (v_gk_new - v_gk) / k
+            st.last_group_vec = v_gk_new
+            st.group_sizes[-1] = tau + 1
+            # Eq. 9 adds a correction; the user-vector error is unchanged.
+        st.history.append(basket)
+        return st
+
+    # -- decremental updates (paper §4.3) ------------------------------------
+
+    def _locate(self, st: RaggedUserState, pos: int):
+        """Group index j (0-based) and in-group position i (1-based)."""
+        if not 0 <= pos < st.n_baskets:
+            raise IndexError(f"basket position {pos} out of range "
+                             f"(n={st.n_baskets})")
+        start = 0
+        for j, tau in enumerate(st.group_sizes):
+            if pos < start + tau:
+                return j, pos - start + 1, start, tau
+            start += tau
+        raise AssertionError("inconsistent group bookkeeping")
+
+    def delete_basket(self, user: int, pos: int) -> RaggedUserState:
+        """f_decr for a basket: O(|H| - pos)."""
+        p = self.params
+        st = self.state(user)
+        j, i, start, tau = self._locate(st, pos)
+        k = st.n_groups
+        if tau > 1:
+            # Scenario 1 (Eq. 10 + Eq. 11): delete inside a multi-basket group.
+            group = st.history[start:start + tau]
+            v_gj = group_vector_ragged(group, p.n_items, p.r_b, self.dtype)
+            suffix = np.stack([multi_hot(b, p.n_items, self.dtype)
+                               for b in group[i - 1:]])
+            v_gj_new = decay.decremental_delete(v_gj, tau, suffix, i, p.r_b,
+                                                xp=np)
+            st.user_vec = st.user_vec + (
+                (p.r_g ** (k - 1 - j)) * (v_gj_new - v_gj) / k)
+            st.group_sizes[j] = tau - 1
+            if j == k - 1:
+                st.last_group_vec = v_gj_new
+            # v_gj is recomputed from history here, so the user-vector error
+            # does not grow through Eq. 10 in this engine (factor 1).
+        elif k == 1:
+            # Deleting the only basket of the only group: state vanishes.
+            st.user_vec = np.zeros(p.n_items, dtype=self.dtype)
+            st.last_group_vec = np.zeros(p.n_items, dtype=self.dtype)
+            st.group_sizes = []
+            st.err_mult = 1.0
+        else:
+            # Scenario 2 (Eq. 12): a single-basket group vanishes.
+            gvecs = []
+            s = start
+            for g in range(j, k):
+                tau_g = st.group_sizes[g]
+                gvecs.append(group_vector_ragged(
+                    st.history[s:s + tau_g], p.n_items, p.r_b, self.dtype))
+                s += tau_g
+            suffix = np.stack(gvecs)
+            st.user_vec = decay.decremental_delete(st.user_vec, k, suffix,
+                                                   j + 1, p.r_g, xp=np)
+            st.group_sizes.pop(j)
+            if j == k - 1:
+                # the previous group becomes the last one
+                s2 = sum(st.group_sizes[:-1])
+                st.last_group_vec = group_vector_ragged(
+                    st.history[s2:s2 + st.group_sizes[-1]] if st.group_sizes
+                    else [], p.n_items, p.r_b, self.dtype) \
+                    if st.group_sizes else np.zeros(p.n_items, self.dtype)
+            st.err_mult *= decay.error_growth_factor(k, p.r_g)
+        del st.history[pos]
+        self._maybe_stabilize(st)
+        return st
+
+    def delete_item(self, user: int, pos: int, item: int) -> RaggedUserState:
+        """f_decr for a single item (scenario 3, Eq. 13 + Eq. 11)."""
+        p = self.params
+        st = self.state(user)
+        j, i, start, tau = self._locate(st, pos)
+        basket = st.history[pos]
+        if item not in basket:
+            return st  # nothing to forget
+        if len(basket) == 1:
+            # the basket vanishes: fall back to basket deletion
+            return self.delete_basket(user, pos)
+        k = st.n_groups
+        new_basket = basket[basket != item]
+        delta = -multi_hot(np.array([item]), p.n_items, self.dtype)
+        # Eq. 13: in-place update of the group vector.
+        group = st.history[start:start + tau]
+        v_gj = group_vector_ragged(group, p.n_items, p.r_b, self.dtype)
+        v_gj_new = v_gj + (p.r_b ** (tau - i)) * delta / tau
+        # Eq. 11: in-place update of the user vector.
+        st.user_vec = st.user_vec + (
+            (p.r_g ** (k - 1 - j)) * (v_gj_new - v_gj) / k)
+        if j == k - 1:
+            st.last_group_vec = st.last_group_vec + (
+                (p.r_b ** (tau - i)) * delta / tau)
+        st.history[pos] = new_basket
+        self._maybe_stabilize(st)
+        return st
+
+    # -- bulk accessors -------------------------------------------------------
+
+    def user_matrix(self, user_ids: Sequence[int]) -> np.ndarray:
+        return np.stack([self.state(u).user_vec for u in user_ids])

@@ -1,0 +1,220 @@
+"""Core datatypes for the TIFU-kNN maintenance system.
+
+Two state representations coexist (see DESIGN.md §3):
+
+* ``RaggedUserState`` — per-user ragged numpy state, used by the
+  paper-faithful reference engine (``core.ref_engine``).  Updates touch
+  exactly the suffix the paper's algorithms touch, so latency benchmarks
+  reproduce the paper's asymptotics (Fig. 2a/2b).
+
+* ``StreamState`` — struct-of-arrays padded JAX state for ``M`` users,
+  used by the batched SPMD streaming engine (``streaming.engine``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD_ID = -1  # padding value for item ids in basket arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class TifuParams:
+    """TIFU-kNN hyper-parameters (Table 1 of the paper).
+
+    Attributes:
+      n_items: vocabulary size ``|I|``.
+      group_size: nominal group size ``m``.
+      r_b: within-group (basket) time-decay rate, ``0 < r_b <= 1``.
+      r_g: across-group time-decay rate, ``0 < r_g <= 1``.
+      k_neighbors: number of nearest neighbours for the CF component.
+      alpha: weight of the personal component in the final prediction.
+    """
+
+    n_items: int
+    group_size: int = 7
+    r_b: float = 0.9
+    r_g: float = 0.7
+    k_neighbors: int = 300
+    alpha: float = 0.7
+
+    def __post_init__(self):
+        if not (0.0 < self.r_b <= 1.0):
+            raise ValueError(f"r_b must be in (0, 1], got {self.r_b}")
+        if not (0.0 < self.r_g <= 1.0):
+            raise ValueError(f"r_g must be in (0, 1], got {self.r_g}")
+        if self.group_size < 1:
+            raise ValueError("group_size must be >= 1")
+
+
+# Hyper-parameters used in the paper's experiments (Table 1):
+#   [m, r_b, r_g, k, alpha]
+PAPER_HYPERPARAMS = {
+    "tafeng": TifuParams(n_items=11997, group_size=7, r_b=0.9, r_g=0.7,
+                         k_neighbors=300, alpha=0.7),
+    "instacart": TifuParams(n_items=7999, group_size=3, r_b=0.9, r_g=0.7,
+                            k_neighbors=900, alpha=0.9),
+    "valuedshopper": TifuParams(n_items=7874, group_size=7, r_b=1.0, r_g=0.6,
+                                k_neighbors=300, alpha=0.7),
+}
+
+
+@dataclasses.dataclass
+class RaggedUserState:
+    """Paper-faithful per-user state (ragged, numpy).
+
+    ``history`` is a list of baskets, each basket a 1-D int array of item
+    ids.  ``group_sizes[j]`` is the number of baskets in group ``j`` under
+    the *varying group size* relaxation (paper §4.3).  ``user_vec`` and
+    ``last_group_vec`` are dense ``|I|`` vectors.  ``err_mult`` tracks the
+    worst-case multiplicative error factor accumulated by decremental
+    updates (beyond-paper stability tracker, see core.stability).
+    """
+
+    history: List[np.ndarray]
+    group_sizes: List[int]
+    user_vec: np.ndarray
+    last_group_vec: np.ndarray
+    err_mult: float = 1.0
+
+    @property
+    def n_baskets(self) -> int:
+        return len(self.history)
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.group_sizes)
+
+    @staticmethod
+    def empty(n_items: int) -> "RaggedUserState":
+        return RaggedUserState(
+            history=[],
+            group_sizes=[],
+            user_vec=np.zeros(n_items, dtype=np.float64),
+            last_group_vec=np.zeros(n_items, dtype=np.float64),
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StreamState:
+    """Padded struct-of-arrays state for ``M`` users (JAX path).
+
+    Shapes (``M`` users, ``N`` max baskets, ``B`` max basket size,
+    ``K`` max groups, ``I`` items):
+
+      user_vecs:       f32[M, I]
+      last_group_vecs: f32[M, I]
+      history:         i32[M, N, B]   (PAD_ID padded)
+      group_sizes:     i32[M, K]
+      n_baskets:       i32[M]
+      n_groups:        i32[M]
+      err_mult:        f32[M]
+    """
+
+    user_vecs: jax.Array
+    last_group_vecs: jax.Array
+    history: jax.Array
+    group_sizes: jax.Array
+    n_baskets: jax.Array
+    n_groups: jax.Array
+    err_mult: jax.Array
+
+    def tree_flatten(self):
+        children = (self.user_vecs, self.last_group_vecs, self.history,
+                    self.group_sizes, self.n_baskets, self.n_groups,
+                    self.err_mult)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n_users(self) -> int:
+        return self.user_vecs.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        return self.user_vecs.shape[1]
+
+    @property
+    def max_baskets(self) -> int:
+        return self.history.shape[1]
+
+    @property
+    def max_basket_size(self) -> int:
+        return self.history.shape[2]
+
+    @property
+    def max_groups(self) -> int:
+        return self.group_sizes.shape[1]
+
+    @staticmethod
+    def zeros(n_users: int, n_items: int, max_baskets: int,
+              max_basket_size: int, max_groups: int | None = None,
+              dtype=jnp.float32) -> "StreamState":
+        if max_groups is None:
+            max_groups = max_baskets  # worst case: all groups of size 1
+        return StreamState(
+            user_vecs=jnp.zeros((n_users, n_items), dtype),
+            last_group_vecs=jnp.zeros((n_users, n_items), dtype),
+            history=jnp.full((n_users, max_baskets, max_basket_size), PAD_ID,
+                             jnp.int32),
+            group_sizes=jnp.zeros((n_users, max_groups), jnp.int32),
+            n_baskets=jnp.zeros((n_users,), jnp.int32),
+            n_groups=jnp.zeros((n_users,), jnp.int32),
+            err_mult=jnp.ones((n_users,), dtype),
+        )
+
+
+# Update kinds for the streaming engine (Algorithm 1 generalised).
+KIND_NOOP = 0
+KIND_ADD_BASKET = 1
+KIND_DEL_BASKET = 2
+KIND_DEL_ITEM = 3
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class UpdateBatch:
+    """A fixed-shape micro-batch of updates (adds and deletes mixed).
+
+    kind:         i32[U]    one of KIND_*
+    user:         i32[U]    target user row
+    basket_items: i32[U, B] item ids for adds (PAD_ID padded)
+    basket_pos:   i32[U]    global basket index for deletions
+    item:         i32[U]    item id for item deletions
+    """
+
+    kind: jax.Array
+    user: jax.Array
+    basket_items: jax.Array
+    basket_pos: jax.Array
+    item: jax.Array
+
+    def tree_flatten(self):
+        return (self.kind, self.user, self.basket_items, self.basket_pos,
+                self.item), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.kind.shape[0]
+
+    @staticmethod
+    def noop(batch: int, max_basket_size: int) -> "UpdateBatch":
+        return UpdateBatch(
+            kind=jnp.zeros((batch,), jnp.int32),
+            user=jnp.zeros((batch,), jnp.int32),
+            basket_items=jnp.full((batch, max_basket_size), PAD_ID, jnp.int32),
+            basket_pos=jnp.zeros((batch,), jnp.int32),
+            item=jnp.full((batch,), PAD_ID, jnp.int32),
+        )

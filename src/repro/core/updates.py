@@ -1,0 +1,315 @@
+"""Batched JAX incremental/decremental updates (the TPU production path).
+
+Fixed-shape, mask-driven implementations of the paper's update rules,
+``vmap``-able over a micro-batch of users.  Semantics are validated
+against ``core.ref_engine`` (the paper-faithful oracle) in
+``tests/test_updates_jax.py``.
+
+Design notes (DESIGN.md §3.2): the variable-length suffix contractions of
+Eq. 10/12 are computed as *masked fixed-shape* weighted multi-hot
+scatters using the closed-form coefficient expansion in
+``decay.batched_suffix_coefficients`` — no data-dependent shapes, so one
+compiled program serves every deletion position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import decay
+from repro.core.tifu import (closed_form_basket_weights,
+                             last_group_vector_padded,
+                             weighted_multihot_scatter, user_vector_padded)
+from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM,
+                              KIND_NOOP, PAD_ID, StreamState, TifuParams,
+                              UpdateBatch)
+
+
+# ---------------------------------------------------------------------------
+# Helpers on padded per-user state
+# ---------------------------------------------------------------------------
+
+def _multi_hot(items, n_items):
+    """items: i32[B] (PAD_ID padded) → f32[I]."""
+    valid = items >= 0
+    ids = jnp.where(valid, items, 0)
+    return jnp.zeros((n_items,), jnp.float32).at[ids].add(
+        valid.astype(jnp.float32))
+
+
+def _row_group_geometry(group_sizes, max_baskets):
+    """Per-history-row group index g (0-based), in-group pos p (1-based),
+    group size tau, for fixed max_baskets rows."""
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    starts = ends - sizes
+    t = jnp.arange(max_baskets)
+    g = jnp.clip(jnp.searchsorted(ends, t, side="right"), 0,
+                 sizes.shape[0] - 1)
+    tau = sizes[g]
+    p = t - starts[g] + 1
+    return g, p, tau
+
+
+def _locate(group_sizes, pos):
+    """Group index j (0-based) and in-group position i (1-based) of a
+    global basket index ``pos`` (traced)."""
+    sizes = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(sizes)
+    starts = ends - sizes
+    j = jnp.clip(jnp.searchsorted(ends, pos, side="right"), 0,
+                 sizes.shape[0] - 1)
+    i = pos - starts[j] + 1
+    return j, i
+
+
+# ---------------------------------------------------------------------------
+# Single-user updates (to be vmapped)
+# ---------------------------------------------------------------------------
+
+def _add_basket(user_vec, last_group_vec, history, group_sizes, n_baskets,
+                n_groups, err_mult, items, params: TifuParams):
+    n_items = user_vec.shape[0]
+    v_b = _multi_hot(items, n_items).astype(user_vec.dtype)
+    k = n_groups
+    tau = jnp.where(k > 0, group_sizes[jnp.maximum(k - 1, 0)], 0)
+    new_group = (k == 0) | (tau >= params.group_size)
+
+    # Scenario 1 (Eq. 7): new single-basket group.
+    user_new_a = (k * params.r_g * user_vec + v_b) / (k + 1)
+    lgv_a = v_b
+    sizes_a = group_sizes.at[jnp.minimum(k, group_sizes.shape[0] - 1)].set(1)
+    err_a = jnp.maximum(
+        err_mult * jnp.where(k > 0, decay.error_shrink_factor(k, params.r_g),
+                             0.0), 1e-30)
+
+    # Scenario 2 (Eq. 8 + Eq. 9): append to the last group.
+    safe_tau = jnp.maximum(tau, 1)
+    lgv_b = (safe_tau * params.r_b * last_group_vec + v_b) / (safe_tau + 1)
+    user_new_b = user_vec + (lgv_b - last_group_vec) / jnp.maximum(k, 1)
+    sizes_b = group_sizes.at[jnp.maximum(k - 1, 0)].add(1)
+    err_b = err_mult
+
+    user_vec = jnp.where(new_group, user_new_a, user_new_b)
+    last_group_vec = jnp.where(new_group, lgv_a, lgv_b)
+    group_sizes = jnp.where(new_group, sizes_a, sizes_b)
+    err_mult = jnp.where(new_group, err_a, err_b)
+    history = history.at[jnp.minimum(n_baskets, history.shape[0] - 1)].set(items)
+    return (user_vec, last_group_vec, history, group_sizes, n_baskets + 1,
+            n_groups + new_group.astype(jnp.int32), err_mult)
+
+
+def _delete_basket(user_vec, last_group_vec, history, group_sizes, n_baskets,
+                   n_groups, err_mult, pos, params: TifuParams):
+    n_items = user_vec.shape[0]
+    max_baskets = history.shape[0]
+    k = n_groups
+    j, i = _locate(group_sizes, pos)
+    tau_j = group_sizes[j]
+    g, p, tau = _row_group_geometry(group_sizes, max_baskets)
+    t = jnp.arange(max_baskets)
+    valid_row = t < n_baskets
+    in_group_j = valid_row & (g == j)
+    f32 = user_vec.dtype
+
+    # ---- Scenario 1 (Eq. 10 + Eq. 11): tau_j > 1 -------------------------
+    safe_tau = jnp.maximum(tau_j, 2)
+    # recompute v_gj from the group's rows (O(tau) real work, masked here)
+    w_gj = jnp.where(in_group_j,
+                     jnp.asarray(params.r_b, f32) ** (tau_j - p)
+                     / jnp.maximum(tau_j, 1).astype(f32), 0.0)
+    v_gj = weighted_multihot_scatter(history, w_gj, n_items).astype(f32)
+    # suffix coefficients inside group j, positions p >= i
+    pow_tp = jnp.asarray(params.r_b, f32) ** (tau_j - p)
+    c_row = jnp.where(p == i, -pow_tp, pow_tp * (params.r_b - 1.0))
+    c_row = jnp.where(in_group_j & (p >= i), c_row, 0.0)
+    suffix_g = weighted_multihot_scatter(history, c_row, n_items).astype(f32)
+    v_gj_new = (tau_j * v_gj + suffix_g) / ((safe_tau - 1) * params.r_b)
+    user_s1 = user_vec + (jnp.asarray(params.r_g, f32) ** (k - 1 - j)
+                          * (v_gj_new - v_gj) / jnp.maximum(k, 1))
+    sizes_s1 = group_sizes.at[j].add(-1)
+    groups_s1 = k
+
+    # ---- Scenario 2 (Eq. 12): tau_j == 1, k > 1 ---------------------------
+    # suffix over group vectors j..k-1, expanded to per-basket weights:
+    # coeff per group c_g (1-based group pos = g+1), times within-group
+    # decayed-average weight r_b^(tau-p)/tau.
+    cg = decay.batched_suffix_coefficients(k, j + 1,
+                                           jnp.asarray(params.r_g, f32),
+                                           group_sizes.shape[0]).astype(f32)
+    w_row_s2 = jnp.where(valid_row,
+                         cg[g] * jnp.asarray(params.r_b, f32) ** (tau - p)
+                         / jnp.maximum(tau, 1).astype(f32), 0.0)
+    suffix_u = weighted_multihot_scatter(history, w_row_s2, n_items).astype(f32)
+    safe_k = jnp.maximum(k, 2)
+    user_s2 = (k * user_vec + suffix_u) / ((safe_k - 1) * params.r_g)
+    sizes_s2 = _remove_entry(group_sizes, j)
+    groups_s2 = k - 1
+    err_s2 = err_mult * decay.error_growth_factor(safe_k.astype(f32),
+                                                  params.r_g)
+
+    # ---- Scenario 3: tau_j == 1 and k == 1 → empty state ------------------
+    user_s3 = jnp.zeros_like(user_vec)
+    sizes_s3 = jnp.zeros_like(group_sizes)
+    groups_s3 = jnp.zeros_like(k)
+
+    single = tau_j == 1
+    last = k == 1
+    user_vec = jnp.where(single, jnp.where(last, user_s3, user_s2), user_s1)
+    group_sizes = jnp.where(single, jnp.where(last, sizes_s3, sizes_s2),
+                            sizes_s1)
+    n_groups = jnp.where(single, jnp.where(last, groups_s3, groups_s2),
+                         groups_s1)
+    err_mult = jnp.where(single, jnp.where(last, jnp.ones_like(err_mult),
+                                           err_s2), err_mult)
+
+    # ---- history compaction: shift rows > pos up by one --------------------
+    src = jnp.where(t >= pos, jnp.minimum(t + 1, max_baskets - 1), t)
+    history = history[src]
+    history = history.at[jnp.maximum(n_baskets - 1, 0)].set(
+        jnp.full((history.shape[1],), PAD_ID, jnp.int32))
+    n_baskets = n_baskets - 1
+
+    # last_group_vec: recompute from the new geometry (cheap, masked).
+    last_group_vec = last_group_vector_padded(
+        history, group_sizes, n_groups,
+        params).astype(f32)
+    return (user_vec, last_group_vec, history, group_sizes, n_baskets,
+            n_groups, err_mult)
+
+
+def _remove_entry(sizes, j):
+    """Remove entry j from a padded i32 vector (shift left, zero-fill)."""
+    n = sizes.shape[0]
+    t = jnp.arange(n)
+    src = jnp.where(t >= j, jnp.minimum(t + 1, n - 1), t)
+    out = sizes[src]
+    return out.at[n - 1].set(jnp.where(j <= n - 1, 0, out[n - 1]))
+
+
+def _delete_item(user_vec, last_group_vec, history, group_sizes, n_baskets,
+                 n_groups, err_mult, pos, item, params: TifuParams):
+    """Scenario 3 of §4.3 (Eq. 13 + Eq. 11) with basket-vanish fallback."""
+    n_items = user_vec.shape[0]
+    f32 = user_vec.dtype
+    row = history[pos]
+    present = jnp.any(row == item)
+    blen = jnp.sum(row >= 0)
+    vanish = present & (blen == 1)
+
+    # --- Eq. 13 path: remove the item from the basket in place -------------
+    j, i = _locate(group_sizes, pos)
+    k = n_groups
+    tau_j = jnp.maximum(group_sizes[j], 1)
+    delta = -_multi_hot(jnp.array([item]), n_items).astype(f32)
+    scale_g = jnp.asarray(params.r_b, f32) ** (tau_j - i) / tau_j
+    dg = scale_g * delta                       # v'_gj - v_gj
+    user_ip = user_vec + (jnp.asarray(params.r_g, f32) ** (k - 1 - j)
+                          * dg / jnp.maximum(k, 1))
+    lgv_ip = jnp.where(j == k - 1, last_group_vec + dg, last_group_vec)
+    new_row = jnp.where(row == item, PAD_ID, row)
+    hist_ip = history.at[pos].set(new_row)
+
+    # --- fallback: basket vanishes → full basket deletion -------------------
+    (user_db, lgv_db, hist_db, sizes_db, nb_db, ng_db, err_db) = \
+        _delete_basket(user_vec, last_group_vec, history, group_sizes,
+                       n_baskets, n_groups, err_mult, pos, params)
+
+    apply_ip = present & ~vanish
+    apply_db = vanish
+    user_vec = jnp.where(apply_ip, user_ip,
+                         jnp.where(apply_db, user_db, user_vec))
+    last_group_vec = jnp.where(apply_ip, lgv_ip,
+                               jnp.where(apply_db, lgv_db, last_group_vec))
+    history = jnp.where(apply_ip, hist_ip,
+                        jnp.where(apply_db, hist_db, history))
+    group_sizes = jnp.where(apply_db, sizes_db, group_sizes)
+    n_baskets = jnp.where(apply_db, nb_db, n_baskets)
+    n_groups = jnp.where(apply_db, ng_db, n_groups)
+    err_mult = jnp.where(apply_db, err_db, err_mult)
+    return (user_vec, last_group_vec, history, group_sizes, n_baskets,
+            n_groups, err_mult)
+
+
+def _single_update(user_vec, last_group_vec, history, group_sizes, n_baskets,
+                   n_groups, err_mult, kind, items, pos, item,
+                   params: TifuParams):
+    """Dispatch one update (Algorithm 1 generalised to 4 kinds)."""
+    state = (user_vec, last_group_vec, history, group_sizes, n_baskets,
+             n_groups, err_mult)
+    add = _add_basket(*state, items, params)
+    # guard delete positions for noop/add rows so gathers stay in-bounds
+    safe_pos = jnp.clip(pos, 0, jnp.maximum(n_baskets - 1, 0))
+    delb = _delete_basket(*state, safe_pos, params)
+    deli = _delete_item(*state, safe_pos, item, params)
+
+    def sel(a, b, c, d):
+        return jnp.where(kind == KIND_ADD_BASKET, b,
+                         jnp.where(kind == KIND_DEL_BASKET, c,
+                                   jnp.where(kind == KIND_DEL_ITEM, d, a)))
+
+    # suppress deletes on empty histories (no-op)
+    empty = n_baskets == 0
+    kind = jnp.where(empty & ((kind == KIND_DEL_BASKET)
+                              | (kind == KIND_DEL_ITEM)), KIND_NOOP, kind)
+    return tuple(sel(s, a, b, c)
+                 for s, a, b, c in zip(state, add, delb, deli))
+
+
+# ---------------------------------------------------------------------------
+# Micro-batch application
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_update_batch(state: StreamState, batch: UpdateBatch,
+                       params: TifuParams) -> StreamState:
+    """Apply a micro-batch of updates (one per distinct user).
+
+    INVARIANT (enforced by streaming.engine): within one batch each user
+    appears at most once among non-noop rows.  Results are written back
+    as *deltas* with scatter-add, so noop rows (delta 0) may alias any
+    user.
+    """
+    u = batch.user
+    gathered = (state.user_vecs[u], state.last_group_vecs[u],
+                state.history[u], state.group_sizes[u], state.n_baskets[u],
+                state.n_groups[u], state.err_mult[u])
+    updated = jax.vmap(
+        lambda uv, lgv, h, gs, nb, ng, em, kind, items, pos, item:
+        _single_update(uv, lgv, h, gs, nb, ng, em, kind, items, pos, item,
+                       params))(
+        *gathered, batch.kind, batch.basket_items, batch.basket_pos,
+        batch.item)
+    deltas = tuple(new - old for new, old in zip(updated, gathered))
+    return StreamState(
+        user_vecs=state.user_vecs.at[u].add(deltas[0]),
+        last_group_vecs=state.last_group_vecs.at[u].add(deltas[1]),
+        history=state.history.at[u].add(deltas[2]),
+        group_sizes=state.group_sizes.at[u].add(deltas[3]),
+        n_baskets=state.n_baskets.at[u].add(deltas[4]),
+        n_groups=state.n_groups.at[u].add(deltas[5]),
+        err_mult=state.err_mult.at[u].add(deltas[6]),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def refresh_users(state: StreamState, users, params: TifuParams) -> StreamState:
+    """Exact from-scratch refresh of selected users (stability tracker)."""
+    h = state.history[users]
+    gs = state.group_sizes[users]
+    ng = state.n_groups[users]
+    fresh = jax.vmap(lambda hh, gg, nn: user_vector_padded(hh, gg, nn, params))(
+        h, gs, ng).astype(state.user_vecs.dtype)
+    lgv = jax.vmap(lambda hh, gg, nn: last_group_vector_padded(
+        hh, gg, nn, params))(h, gs, ng).astype(state.user_vecs.dtype)
+    return StreamState(
+        user_vecs=state.user_vecs.at[users].set(fresh),
+        last_group_vecs=state.last_group_vecs.at[users].set(lgv),
+        history=state.history,
+        group_sizes=state.group_sizes,
+        n_baskets=state.n_baskets,
+        n_groups=state.n_groups,
+        err_mult=state.err_mult.at[users].set(1.0),
+    )

@@ -1,0 +1,3 @@
+from repro.data import graph_sampler, stream, synthetic
+
+__all__ = ["graph_sampler", "stream", "synthetic"]

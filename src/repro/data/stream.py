@@ -1,0 +1,65 @@
+"""Event-stream generation for the streaming engine (paper §6.1 setup).
+
+The paper's deletion scenario: ~1/1000 users issue GDPR requests, each
+deleting 10% of their baskets; deletions interleave with new-basket
+arrivals.  ``make_stream`` emits a chronological Event list.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
+from repro.streaming.engine import Event
+
+
+def make_stream(histories: Dict[int, List[np.ndarray]],
+                deletion_user_rate: float = 1e-3,
+                deletion_basket_frac: float = 0.10,
+                item_deletion_rate: float = 0.0,
+                seed: int = 0) -> List[Event]:
+    """Interleave basket additions (round-robin over users, preserving
+    each user's chronological order) with deletion requests."""
+    rng = np.random.default_rng(seed)
+    events: List[Event] = []
+    # additions: round-robin so growth interleaves across users
+    cursors = {u: 0 for u in histories}
+    added = {u: 0 for u in histories}
+    active = [u for u in histories if histories[u]]
+    while active:
+        nxt = []
+        for u in active:
+            events.append(Event(KIND_ADD_BASKET, u,
+                                items=histories[u][cursors[u]]))
+            cursors[u] += 1
+            added[u] += 1
+            if cursors[u] < len(histories[u]):
+                nxt.append(u)
+        active = nxt
+
+    # deletion requests (appended post-load; engine interleaves by batch)
+    users = list(histories)
+    n_del_users = max(1, int(len(users) * deletion_user_rate))
+    del_users = rng.choice(users, size=n_del_users, replace=False)
+    for u in del_users:
+        n = added[u]
+        n_del = max(1, int(n * deletion_basket_frac))
+        # positions re-evaluated against the shrinking history
+        remaining = n
+        for _ in range(n_del):
+            if remaining == 0:
+                break
+            pos = int(rng.integers(0, remaining))
+            events.append(Event(KIND_DEL_BASKET, int(u), pos=pos))
+            remaining -= 1
+    if item_deletion_rate > 0:
+        for u in rng.choice(users, size=max(1, int(len(users)
+                                                   * item_deletion_rate)),
+                            replace=False):
+            if added[u] == 0:
+                continue
+            pos = int(rng.integers(0, max(added[u] - 1, 1)))
+            item = int(histories[u][pos][0])
+            events.append(Event(KIND_DEL_ITEM, int(u), pos=pos, item=item))
+    return events

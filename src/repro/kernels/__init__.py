@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (+ pure-jnp oracles and jit dispatchers).
+
+knn_topk          — fused similarity × streaming top-k (TIFU serving,
+                    retrieval_cand cells)
+decayed_scatter   — one-hot-matmul weighted multi-hot scatter (TIFU
+                    user vectors; EmbeddingBag substrate)
+flash_attention   — blocked online-softmax attention (LM train/prefill)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import flash_attention, knn_topk, multihot_scatter
+
+__all__ = ["ops", "ref", "flash_attention", "knn_topk", "multihot_scatter"]

@@ -1,0 +1,80 @@
+"""Decayed multi-hot scatter as a one-hot matmul Pallas kernel (TPU).
+
+Builds TIFU-kNN user vectors (closed-form weighted multi-hot sum,
+DESIGN.md §3.1) and doubles as the TPU-native EmbeddingBag-transpose:
+
+    out[i] = Σ_{n,b} w[n] · [ ids[n,b] == i ]        (ids PAD=-1)
+
+TPUs dislike data-dependent scatter; the MXU/VPU love regular compare +
+reduce.  Grid = (I / bi) item tiles × (N / bn) row tiles (rows inner,
+sequential): each step builds the [bn·B, bi] one-hot tile by comparing
+the id block against the tile's iota and accumulates ``wᵀ @ onehot``
+into a VMEM accumulator; only [I] leaves the chip.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, w_ref, out_ref, acc, *, bi: int):
+    ii = pl.program_id(0)
+    ni = pl.program_id(1)
+    nn = pl.num_programs(1)
+
+    @pl.when(ni == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    ids = ids_ref[...]                               # [bn, B] i32
+    w = w_ref[...]                                   # [bn]
+    flat = ids.reshape(-1)                           # [bn*B]
+    wf = jnp.repeat(w, ids.shape[1])                 # [bn*B]
+    base = ii * bi
+    # one-hot against this item tile: [bn*B, bi]
+    tile_ids = base + jax.lax.broadcasted_iota(jnp.int32, (flat.shape[0],
+                                                           bi), 1)
+    onehot = (flat[:, None] == tile_ids).astype(jnp.float32)
+    acc[...] += jnp.sum(onehot * wf[:, None], axis=0)
+
+    @pl.when(ni == nn - 1)
+    def _done():
+        out_ref[...] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_items", "bi", "bn",
+                                             "interpret"))
+def decayed_scatter(ids, weights, n_items: int, bi: int = 512, bn: int = 256,
+                    interpret: bool = False):
+    """ids i32[N, B] (PAD=-1), weights f32[N] → f32[n_items]."""
+    n, b = ids.shape
+    bi = min(bi, n_items)
+    bn = min(bn, n)
+    assert n_items % bi == 0 and n % bn == 0, (n_items, bi, n, bn)
+    grid = (n_items // bi, n // bn)
+    # PAD ids (-1) never match a non-negative tile id → contribute 0.
+    return pl.pallas_call(
+        functools.partial(_kernel, bi=bi),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, b), lambda ii, ni: (ni, 0)),
+            pl.BlockSpec((bn,), lambda ii, ni: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((bi,), lambda ii, ni: (ii,)),
+        out_shape=jax.ShapeDtypeStruct((n_items,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bi,), jnp.float32)],
+        interpret=interpret,
+    )(ids, weights)
+
+
+@functools.partial(jax.jit, static_argnames=("n_items", "interpret"))
+def batched_decayed_scatter(ids, weights, n_items: int,
+                            interpret: bool = False):
+    """vmap over users: ids [U, N, B], weights [U, N] → [U, n_items]."""
+    return jax.vmap(lambda i, w: decayed_scatter(i, w, n_items,
+                                                 interpret=interpret))(
+        ids, weights)

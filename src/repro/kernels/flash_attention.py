@@ -1,0 +1,102 @@
+"""Blocked online-softmax attention Pallas kernel (TPU target).
+
+The TPU fast path for the LM archs' train/prefill attention: grid =
+(batch·heads, Q blocks, KV blocks) with the KV dimension innermost;
+running (max, sum, acc) live in VMEM scratch, so the [S, S] score matrix
+never exists in HBM.  Supports causal and sliding-window masks (the
+gemma3 5:1 pattern passes ``window``).
+
+The portable lowering used by the dry-run is
+``models.transformer.flash_attention`` (same schedule via lax.scan);
+this kernel is validated against ``ref.flash_attention_ref`` in
+interpret mode (tests/test_kernels.py sweeps shapes/dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_i, l_i, acc,
+            *, bq: int, bk: int, scale: float, causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_i[...] = jnp.full_like(m_i, NEG_INF)
+        l_i[...] = jnp.zeros_like(l_i)
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[0]                                   # [bq, d]
+    k = k_ref[0]                                   # [bk, d]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_i[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_i[...] = l_i[...] * alpha + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * alpha[:, None] \
+        + jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                              (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    m_i[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0] = (acc[...] / jnp.maximum(l_i[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q,k,v: [B, S, H, D] (H == KV heads) → [B, S, H, D]."""
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    bq = min(bq, s)
+    bk = min(bk, sk)
+    assert s % bq == 0 and sk % bk == 0
+    scale = 1.0 / (d ** 0.5)
+    # fold batch × heads into the leading grid dim
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    grid = (b * h, s // bq, sk // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bk=bk, scale=scale, causal=causal,
+                          window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda g, qi, ki: (g, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qi, ki: (g, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda g, qi, ki: (g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda g, qi, ki: (g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),      # running max
+            pltpu.VMEM((bq,), jnp.float32),      # running denom
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,93 @@
+"""Fused similarity × streaming top-k Pallas kernel (TPU target).
+
+Serves TIFU-kNN neighbour search (paper §2.2) and the two-tower /
+bert4rec ``retrieval_cand`` cells: Q queries against M corpus rows,
+returning per-query top-k WITHOUT materializing the [Q, M] score matrix
+in HBM — the win over the reference path at M = 10⁶.
+
+Design (DESIGN.md §3.3):
+  grid = (Q/bq, M/bm), M innermost (sequential).  Per step the MXU
+  computes a [bq, bm] score tile in VMEM (2·q@cᵀ − |c|², the monotone
+  euclidean surrogate); a running [bq, k] top-k buffer lives in VMEM
+  scratch and is merged tile-by-tile; only [Q, k] leaves the chip.
+
+  The merge uses lax.top_k on the concatenated [bq, k+bm] tile.  On
+  current Mosaic this lowers through sort; if a target toolchain lacks
+  it, set merge="iterative" (k-round max-mask) — same results.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, c_ref, cn_ref, vals_ref, idx_ref, acc_vals, acc_idx,
+            *, k: int, bm: int, metric: str):
+    mi = pl.program_id(1)
+    nm = pl.num_programs(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_vals[...] = jnp.full_like(acc_vals, -jnp.inf)
+        acc_idx[...] = jnp.zeros_like(acc_idx)
+
+    q = q_ref[...]                                   # [bq, D]
+    c = c_ref[...]                                   # [bm, D]
+    scores = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)          # [bq, bm]
+    if metric == "euclidean":
+        scores = 2.0 * scores - cn_ref[...][None, :]
+    tile_idx = mi * bm + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+
+    merged_vals = jnp.concatenate([acc_vals[...], scores], axis=1)
+    merged_idx = jnp.concatenate([acc_idx[...], tile_idx], axis=1)
+    top_vals, top_pos = jax.lax.top_k(merged_vals, k)
+    acc_vals[...] = top_vals
+    acc_idx[...] = jnp.take_along_axis(merged_idx, top_pos, axis=1)
+
+    @pl.when(mi == nm - 1)
+    def _done():
+        vals_ref[...] = acc_vals[...]
+        idx_ref[...] = acc_idx[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bq", "bm", "metric", "interpret"))
+def knn_topk(queries, corpus, k: int, bq: int = 128, bm: int = 512,
+             metric: str = "euclidean", interpret: bool = False):
+    """queries [Q, D] × corpus [M, D] → (vals [Q, k], idx [Q, k])."""
+    qn, d = queries.shape
+    m = corpus.shape[0]
+    bq = min(bq, qn)
+    bm = min(bm, m)
+    assert qn % bq == 0 and m % bm == 0, (qn, bq, m, bm)
+    cnorm = jnp.sum(corpus.astype(jnp.float32) ** 2, axis=-1)
+    grid = (qn // bq, m // bm)
+    kernel = functools.partial(_kernel, k=k, bm=bm, metric=metric)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda qi, mi: (qi, 0)),
+            pl.BlockSpec((bm, d), lambda qi, mi: (mi, 0)),
+            pl.BlockSpec((bm,), lambda qi, mi: (mi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda qi, mi: (qi, 0)),
+            pl.BlockSpec((bq, k), lambda qi, mi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),   # running top-k vals
+            pltpu.VMEM((bq, k), jnp.int32),     # running top-k idx
+        ],
+        interpret=interpret,
+    )(queries, corpus, cnorm)

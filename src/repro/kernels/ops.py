@@ -1,0 +1,53 @@
+"""Jit'd dispatch wrappers: Pallas on TPU, interpret/reference on CPU.
+
+The public entry points the rest of the system calls; each picks the
+fastest implementation available for the current backend and is
+guaranteed (by tests/test_kernels.py shape/dtype sweeps) to match the
+ref.py oracles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decayed_scatter import (batched_decayed_scatter,
+                                           decayed_scatter)
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.knn_topk import knn_topk as _knn_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def knn_topk(queries, corpus, k: int, impl: str = "auto", **kw):
+    """Fused similarity + top-k. impl: auto | pallas | interpret | ref."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.knn_topk_ref(queries, corpus, k,
+                                kw.get("metric", "euclidean"))
+    return _knn_pallas(queries, corpus, k,
+                       interpret=(impl == "interpret" or not _on_tpu()),
+                       **kw)
+
+
+def multihot_scatter(ids, weights, n_items: int, impl: str = "auto"):
+    """Weighted multi-hot scatter (TIFU user-vector builder)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.decayed_scatter_ref(ids, weights, n_items)
+    if ids.ndim == 3:
+        return batched_decayed_scatter(ids, weights, n_items,
+                                       interpret=(impl == "interpret"
+                                                  or not _on_tpu()))
+    return decayed_scatter(ids, weights, n_items,
+                           interpret=(impl == "interpret" or not _on_tpu()))
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    impl: str = "auto", **kw):
+    """Blocked attention. [B,S,H,D] each → [B,S,H,D]."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.flash_attention_ref(q, k, v, causal, window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         interpret=(impl == "interpret" or not _on_tpu()),
+                         **kw)

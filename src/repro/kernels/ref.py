@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's tests sweep shapes/dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_topk_ref(queries, corpus, k: int, metric: str = "euclidean"):
+    """Top-k (scores, indices) of each query against the corpus.
+
+    euclidean uses the monotone surrogate 2qc − |c|² (per-query |q|² is
+    rank-irrelevant and omitted, matching the kernel).
+    """
+    if metric == "euclidean":
+        scores = (2.0 * queries @ corpus.T
+                  - jnp.sum(corpus * corpus, axis=-1)[None, :])
+    elif metric == "dot":
+        scores = queries @ corpus.T
+    else:
+        raise ValueError(metric)
+    return jax.lax.top_k(scores.astype(jnp.float32), k)
+
+
+def decayed_scatter_ref(ids, weights, n_items: int):
+    """Weighted multi-hot scatter: out[i] = Σ_{n,b} w[n]·[ids[n,b] == i].
+
+    ids: i32[N, B] (PAD=-1), weights: f32[N] → f32[n_items].
+    This is the TIFU-kNN user-vector builder AND the EmbeddingBag-grad
+    shape (one-hot-matmul on TPU).
+    """
+    flat = ids.reshape(-1)
+    w = jnp.repeat(weights, ids.shape[1])
+    valid = flat >= 0
+    return jnp.zeros((n_items,), jnp.float32).at[
+        jnp.where(valid, flat, 0)].add(jnp.where(valid, w, 0.0))
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                        scale: float | None = None):
+    """Plain attention oracle. q,k,v: [B,S,H,D] (H == KV heads here)."""
+    b, s, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,6 @@
+"""Launch: production meshes, the multi-pod dry-run, training and
+serving drivers, roofline analysis."""
+from repro.launch.mesh import (make_production_mesh, make_rules,
+                               make_test_mesh)
+
+__all__ = ["make_production_mesh", "make_rules", "make_test_mesh"]

@@ -1,0 +1,266 @@
+"""HLO-text cost model with correct while-loop accounting.
+
+``compiled.cost_analysis()`` counts each while body ONCE — for scan-based
+models (layers, flash blocks, CE chunks) this under-reports FLOPs by the
+trip count (measured 26× on granite train_4k).  This module re-derives
+per-device cost by walking the optimized HLO:
+
+  * builds the computation call graph (fusion ``calls=``, while
+    ``body=/condition=``, ``to_apply=``);
+  * multiplies while bodies by ``known_trip_count`` from backend_config;
+  * FLOPs: 2 × prod(result dims) × prod(lhs contracting dims) per dot;
+  * HBM bytes: operand + result bytes of every top-level (unfused) op —
+    fusion internals excluded, views (bitcast/gte/tuple) excluded;
+  * collective bytes: result bytes per collective op kind.
+
+Everything is per-device (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f4e2m1fn": 1,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPERANDS_RE = re.compile(r"\(((?:%[\w\.\-]+(?:,\s*)?)+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# ops whose results are views / free
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "custom-call", "partition-id",
+             "replica-id"}
+
+
+def _parse_shapes(text: str):
+    """All array shapes in a type string → list of (dtype, [dims])."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x] or [1]
+        out.append((dt, d))
+    return out
+
+
+def _nbytes(text: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * _prod(d) for dt, d in _parse_shapes(text))
+
+
+def _prod(dims):
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Optional[Dict[str, float]] = None
+
+    def __post_init__(self):
+        if self.coll is None:
+            self.coll = defaultdict(float)
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.bytes * k,
+                     defaultdict(float, {a: b * k for a, b in
+                                         self.coll.items()}))
+
+    def add(self, other: "Costs"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] += v
+
+    @property
+    def coll_bytes(self):
+        return sum(self.coll.values())
+
+
+_CONVERT_RE = re.compile(
+    r"=\s*f32\[([0-9,]+)\][^=]*convert\(%([\w\.\-]+)\)")
+
+
+def estimate_f32_shadow_bytes(hlo_text: str, min_bytes: int = 1 << 26):
+    """Estimate CPU-only float-normalization overhead.
+
+    XLA's CPU backend has no native bf16 FMA: a float-normalization pass
+    rewrites bf16 dots to f32 and materializes f32 copies of bf16 weight/
+    activation stacks (hoisted out of while loops).  A TPU build never
+    creates these.  We detect large ``f32 = convert(bf16)`` results and
+    report their total as the upper-bound correction to peak memory
+    (dryrun reports BOTH raw and adjusted peaks).
+    """
+    sym = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            sym[m.group(1)] = m.group(2)
+    total = 0
+    seen_ops = set()
+    for line in hlo_text.splitlines():
+        m = _CONVERT_RE.search(line)
+        if not m:
+            continue
+        dm = _DEF_RE.match(line)
+        name = dm.group(1) if dm else line
+        if name in seen_ops:
+            continue
+        seen_ops.add(name)
+        dims, operand = m.groups()
+        src = sym.get(operand, "")
+        if not src.startswith("bf16["):
+            continue
+        size = 4 * _prod([int(x) for x in dims.split(",") if x])
+        if size >= min_bytes:
+            total += size
+    return total
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations = self._split(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo: Dict[str, Costs] = {}
+
+    @staticmethod
+    def _split(text: str):
+        comps, cur, name = {}, None, None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR_RE.match(line.strip())
+                if m and line.rstrip().endswith("{"):
+                    name, cur = m.group(1), []
+            else:
+                if line.strip() == "}":
+                    comps[name] = cur
+                    cur, name = None, None
+                else:
+                    cur.append(line)
+        return comps
+
+    @staticmethod
+    def _find_entry(text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    return m.group(1)
+        raise ValueError("no ENTRY computation found")
+
+    def cost(self) -> Costs:
+        return self._cost_of(self.entry)
+
+    # -- internals ----------------------------------------------------------
+
+    def _cost_of(self, comp: str) -> Costs:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Costs()
+        lines = self.computations.get(comp, [])
+        # symbol table: var -> full type text (for operand byte/shape lookup)
+        sym = {}
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                sym[m.group(1)] = m.group(2)
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            opm = re.match(r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+                           r"([a-z0-9\-]+)", rhs)
+            if not opm:
+                continue
+            result_type, op = opm.group(1), opm.group(2)
+            if op == "while":
+                body = _BODY_RE.search(rhs)
+                cond = _COND_RE.search(rhs)
+                trip = 1
+                tm = _TRIP_RE.search(rhs)
+                if tm:
+                    trip = int(tm.group(1))
+                inner = Costs()
+                if body:
+                    inner.add(self._cost_of(body.group(1)))
+                if cond:
+                    inner.add(self._cost_of(cond.group(1)))
+                total.add(inner.scaled(max(trip, 1)))
+                continue
+            if op in ("fusion", "call", "conditional", "async-start"):
+                cm = _CALLS_RE.search(rhs)
+                if cm:
+                    total.add(self._cost_of(cm.group(1)))
+                if op == "fusion":
+                    total.bytes += self._io_bytes(rhs, result_type, sym)
+                continue
+            if op.startswith(tuple(_COLLECTIVES)):
+                kind = next(c for c in _COLLECTIVES if op.startswith(c))
+                if op.endswith("-done"):
+                    continue  # counted at -start
+                total.coll[kind] += _nbytes(result_type)
+                total.bytes += self._io_bytes(rhs, result_type, sym)
+                continue
+            if op in _FREE_OPS or op.endswith("-done"):
+                continue
+            if op == "convert":
+                # bf16↔f32 converts are CPU float-normalization artifacts;
+                # TPU reads bf16 natively — exclude from memory traffic.
+                continue
+            if op in ("dot", "convolution"):
+                total.flops += self._dot_flops(rhs, result_type, sym)
+            # reductions called via to_apply: flops ≈ result+operand elems
+            total.bytes += self._io_bytes(rhs, result_type, sym)
+        self._memo[comp] = total
+        return total
+
+    def _dot_flops(self, rhs: str, result_type: str, sym) -> float:
+        shapes = _parse_shapes(result_type)
+        if not shapes:
+            return 0.0
+        res_elems = sum(_prod(d) for _, d in shapes)
+        ops = _OPERANDS_RE.search(rhs)
+        contract = 1
+        cm = _LHS_CONTRACT_RE.search(rhs)
+        if ops and cm:
+            lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+            lhs_type = sym.get(lhs_name, "")
+            lhs_shapes = _parse_shapes(lhs_type)
+            if lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for idx in cm.group(1).split(","):
+                    if idx and int(idx) < len(dims):
+                        contract *= dims[int(idx)]
+        return 2.0 * res_elems * contract
+
+    def _io_bytes(self, rhs: str, result_type: str, sym) -> float:
+        b = _nbytes(result_type)
+        ops = _OPERANDS_RE.search(rhs)
+        if ops:
+            for name in ops.group(1).split(","):
+                t = sym.get(name.strip().lstrip("%"))
+                if t:
+                    b += _nbytes(t.split(" ")[0])
+        return float(b)

@@ -1,0 +1,33 @@
+"""Production meshes. v5e-256 per pod: single-pod (16,16) = 256 chips,
+multi-pod (2,16,16) = 512 chips.  A FUNCTION so importing this module
+never touches jax device state (dryrun sets the device-count env first).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh=None) -> ShardingRules:
+    """Default sharding rules: batch/FSDP over (pod,data), TP over model."""
+    return ShardingRules(batch=("pod", "data"), fsdp=("pod", "data"),
+                         tensor="model", expert="model", context="model")
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CI-size dry-runs (subprocess tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e).
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~per chip per direction)
+HBM_PER_CHIP = 16 * 2 ** 30    # 16 GiB

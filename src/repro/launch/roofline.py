@@ -1,0 +1,144 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (EXPERIMENTS.md §Roofline):
+
+  compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory     = HLO_bytes / (chips × HBM_bw)
+  collective = Σ per-collective (bytes / chips) / link_bw
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis — we parse the optimized HLO text and sum
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %ag = bf16[2,1024,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([0-9,]*)\][^)]*?\s(" + "|".join(_COLLECTIVES)
+    + r")[\s(]")
+# tuple-result collectives:  = (f32[..], f32[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(((?:[a-z0-9]+\[[0-9,]*\][^,)]*,?\s*)+)\)\s*("
+    + "|".join(_COLLECTIVES) + r")[\s(]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total result bytes per collective kind (result size ≈ moved bytes
+    order; all-gather result = gathered size, all-reduce = tensor size)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if not any(c in line for c in _COLLECTIVES):
+            continue
+        if "-start" in line or "-done" in line:
+            # async pairs: count only the -start to avoid double counting
+            if "-done" in line:
+                continue
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            for dtype, dims in _SHAPE_RE.findall(shapes):
+                out[kind] += _shape_bytes(dtype, dims)
+            counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    chips: int
+    coll_detail: Dict[str, int]
+
+    # NOTE: compiled.cost_analysis() and the partitioned HLO are PER-DEVICE
+    # quantities (verified against a hand-computed sharded matmul), so the
+    # roofline terms divide by per-chip peaks directly.
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self):
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "coll_detail": {k: v for k, v in self.coll_detail.items()
+                            if k != "_counts"},
+            "coll_counts": self.coll_detail.get("_counts", {}),
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int) -> RooflineTerms:
+    """Roofline terms from the compiled artifact.
+
+    FLOPs/bytes/collectives come from the HLO-walking cost model
+    (launch.hlo_cost) which multiplies while bodies by their trip count —
+    ``compiled.cost_analysis()`` counts loop bodies once and under-reports
+    scan-heavy models ~26× (see hlo_cost docstring).  cost_analysis values
+    are kept as a cross-check in ``coll_detail['_xla_flops']``.
+    """
+    from repro.launch.hlo_cost import HloCostModel
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    model = HloCostModel(hlo_text)
+    costs = model.cost()
+    coll = dict(costs.coll)
+    coll["_xla_flops"] = xla_flops
+    coll["_xla_bytes"] = xla_bytes
+    return RooflineTerms(flops=max(costs.flops, xla_flops),
+                         hbm_bytes=max(costs.bytes, xla_bytes),
+                         coll_bytes=costs.coll_bytes,
+                         chips=chips, coll_detail=coll)

@@ -1,0 +1,5 @@
+from repro.models import (bert4rec, deepfm, dimenet, dlrm, embedding,
+                          transformer, two_tower)
+
+__all__ = ["bert4rec", "deepfm", "dimenet", "dlrm", "embedding",
+           "transformer", "two_tower"]

@@ -1,0 +1,72 @@
+"""Shared building blocks for the non-LM model zoo."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_mlp(key, dims, dtype=jnp.float32, bias=True):
+    """dims = [in, h1, ..., out]. Returns list of {"w","b"} dicts."""
+    layers = []
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, (a, b) in zip(keys, zip(dims[:-1], dims[1:])):
+        w = (jax.random.normal(k, (a, b), jnp.float32)
+             * np.sqrt(2.0 / a)).astype(dtype)
+        layers.append({"w": w, "b": jnp.zeros((b,), dtype)} if bias
+                      else {"w": w})
+    return layers
+
+
+def apply_mlp(layers, x, act=jax.nn.relu, final_act=None):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + (l.get("b", 0.0))
+        if i < len(layers) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+def mlp_shapes(dims, bias=True):
+    out = []
+    for a, b in zip(dims[:-1], dims[1:]):
+        out.append({"w": (a, b), "b": (b,)} if bias else {"w": (a, b)})
+    return out
+
+
+def bce_with_logits(logits, labels):
+    """Binary cross-entropy on logits (f32 accumulation)."""
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def map_batch_chunks(fn, batch: dict, chunk: int, keys=None):
+    """Run ``fn(sub_batch)`` over batch chunks with lax.map and re-stack.
+
+    Bounds serve-time transients (attention scores, gathers) for the
+    offline bulk-scoring cells.  ``keys``: which batch entries carry the
+    batch dim (default: all)."""
+    keys = list(batch) if keys is None else keys
+    b = batch[keys[0]].shape[0]
+    if b <= chunk or b % chunk:
+        return fn(batch)
+    n = b // chunk
+    split = dict(batch)
+    for k in keys:
+        split[k] = batch[k].reshape(n, chunk, *batch[k].shape[1:])
+    rest = {k: v for k, v in batch.items() if k not in keys}
+
+    def body(sub):
+        return fn({**{k: sub[k] for k in keys}, **rest})
+
+    out = jax.lax.map(body, {k: split[k] for k in keys})
+    return jax.tree.map(lambda x: x.reshape(n * chunk, *x.shape[2:]), out)
+
+
+def layer_norm(x, w, b, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b

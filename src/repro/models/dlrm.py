@@ -1,0 +1,149 @@
+"""DLRM (Naumov et al., arXiv:1906.00091) — MLPerf Criteo-1TB config.
+
+dense [B,13] → bottom MLP → [B,128]
+sparse ids [B,26] → row-sharded embedding lookup → [B,26,128]
+dot-interaction over the 27 vectors → lower triangle (351) ++ dense
+→ top MLP → CTR logit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import apply_mlp, bce_with_logits, init_mlp, mlp_shapes
+from repro.models.embedding import TableSpec, embedding_lookup, init_table
+
+# Public Criteo-Terabyte per-feature cardinalities (facebookresearch/dlrm).
+CRITEO_1TB_VOCABS = (
+    39884406, 39043, 17289, 7420, 20263, 3, 7120, 1543, 63, 38532951,
+    2953546, 403346, 10, 2208, 11938, 155, 4, 976, 14, 39979771, 25641295,
+    39664984, 585935, 12972, 108, 36)
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    name: str = "dlrm-mlperf"
+    n_dense: int = 13
+    vocab_sizes: tuple = CRITEO_1TB_VOCABS
+    embed_dim: int = 128
+    bot_mlp: tuple = (512, 256, 128)
+    top_mlp: tuple = (1024, 1024, 512, 256, 1)
+    dtype: Optional[object] = jnp.float32
+
+    @property
+    def n_sparse(self):
+        return len(self.vocab_sizes)
+
+    @property
+    def table(self) -> TableSpec:
+        return TableSpec(self.vocab_sizes, self.embed_dim)
+
+    @property
+    def n_interactions(self):
+        f = self.n_sparse + 1
+        return f * (f - 1) // 2
+
+    def n_params(self) -> int:
+        n = self.table.padded_rows() * self.embed_dim
+        dims_b = [self.n_dense, *self.bot_mlp]
+        dims_t = [self.n_interactions + self.embed_dim, *self.top_mlp]
+        for d in (dims_b, dims_t):
+            n += sum(a * b + b for a, b in zip(d[:-1], d[1:]))
+        return n
+
+
+def init_params(c: DLRMConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "table": init_table(k1, c.table, c.dtype),
+        "bot": init_mlp(k2, [c.n_dense, *c.bot_mlp], c.dtype),
+        "top": init_mlp(k3, [c.n_interactions + c.embed_dim, *c.top_mlp],
+                        c.dtype),
+    }
+
+
+def abstract_params(c: DLRMConfig):
+    shapes = {
+        "table": (c.table.padded_rows(), c.embed_dim),
+        "bot": mlp_shapes([c.n_dense, *c.bot_mlp]),
+        "top": mlp_shapes([c.n_interactions + c.embed_dim, *c.top_mlp]),
+    }
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, c.dtype), shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_pspecs(c: DLRMConfig, mesh, rules):
+    """Embedding rows sharded over EVERY mesh axis (the classic DLRM
+    model-parallel-embeddings split, extended across pods); MLPs are
+    small → replicated (data-parallel)."""
+    n_dev = int(np.prod(mesh.devices.shape))
+    rows = tuple(mesh.axis_names) if c.table.padded_rows() % n_dev == 0 \
+        else (rules.tensor if rules.tensor in mesh.axis_names else None)
+    mlp_spec = lambda layers: [{k: P(*([None] * len(s)))
+                                for k, s in l.items()} for l in layers]
+    return {
+        "table": P(rows, None),
+        "bot": mlp_spec(mlp_shapes([c.n_dense, *c.bot_mlp])),
+        "top": mlp_spec(mlp_shapes([c.n_interactions + c.embed_dim,
+                                    *c.top_mlp])),
+    }
+
+
+def dot_interaction(vectors):
+    """vectors [B, F, D] → lower-triangle pairwise dots [B, F(F-1)/2]."""
+    b, f, d = vectors.shape
+    z = jnp.einsum("bfd,bgd->bfg", vectors, vectors)
+    iu, ju = np.tril_indices(f, k=-1)
+    return z[:, iu, ju]
+
+
+def _constrain_batchwise(x, mesh, rules, batch_size):
+    """Pin the batch dim to the (pod,data) axes — GSPMD otherwise
+    replicates gather outputs from the row-sharded table."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import batch_axes
+    import numpy as np
+    ax = batch_axes(mesh, rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = int(np.prod([sizes[a] for a in ax])) if ax else 1
+    if n <= 1 or batch_size % n:
+        return x
+    spec = P(ax, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def forward(params, batch, c: DLRMConfig, mesh=None, rules=None):
+    """batch: {"dense": f32[B,13], "sparse": i32[B,26]} → logits [B]."""
+    b = batch["dense"].shape[0]
+    dense = apply_mlp(params["bot"], batch["dense"].astype(c.dtype))
+    sparse = embedding_lookup(params["table"], batch["sparse"], c.table)
+    sparse = _constrain_batchwise(sparse, mesh, rules, b)
+    feats = jnp.concatenate([dense[:, None, :], sparse], axis=1)  # [B,27,D]
+    inter = dot_interaction(feats)
+    top_in = jnp.concatenate([dense, inter], axis=-1)
+    return apply_mlp(params["top"], top_in)[..., 0]
+
+
+def loss_fn(params, batch, c: DLRMConfig, mesh=None, rules=None):
+    return bce_with_logits(forward(params, batch, c, mesh, rules),
+                           batch["labels"])
+
+
+def make_train_step(c: DLRMConfig, optimizer, mesh=None, rules=None):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, c, mesh, rules))(params)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+    return train_step
+
+
+def serve_step(params, batch, c: DLRMConfig, mesh=None, rules=None):
+    return jax.nn.sigmoid(forward(params, batch, c, mesh, rules))

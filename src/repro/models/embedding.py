@@ -1,0 +1,108 @@
+"""Embedding tables + EmbeddingBag for the recsys family (JAX-native).
+
+JAX has no ``nn.EmbeddingBag`` and no CSR sparse — per the assignment this
+substrate IS part of the system:
+
+  * reference path: ``jnp.take`` + ``jax.ops.segment_sum`` (this module);
+  * TPU fast path: ``kernels.decayed_scatter`` one-hot-matmul (the same
+    kernel that builds TIFU-kNN user vectors — DESIGN.md §3.1: a bag sum
+    is the r=1 special case of the paper's decayed average, and bag
+    add/remove uses the paper's Eq. 3/4 maintenance rules).
+
+Tables from many features are concatenated row-wise into ONE
+``[total_rows, dim]`` matrix with per-feature offsets, row-sharded over
+the "model" mesh axis (classic DLRM model-parallel embeddings +
+data-parallel MLPs split).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    vocab_sizes: tuple        # rows per feature
+    dim: int
+    dtype: str = "float32"
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]])
+
+    @property
+    def total_rows(self) -> int:
+        return int(np.sum(self.vocab_sizes))
+
+    def padded_rows(self, multiple: int = 1024) -> int:
+        # multiple of 1024 ⇒ row-shardable over the 512-chip multi-pod mesh
+        t = self.total_rows
+        return (t + multiple - 1) // multiple * multiple
+
+
+def init_table(key, spec: TableSpec, dtype=jnp.float32):
+    return (jax.random.normal(key, (spec.padded_rows(), spec.dim),
+                              jnp.float32)
+            / np.sqrt(spec.dim)).astype(dtype)
+
+
+def flat_ids(ids, spec: TableSpec):
+    """Per-feature local ids [B, F] (or [B,F,H]) → global row ids."""
+    offs = jnp.asarray(spec.offsets, jnp.int32)
+    if ids.ndim == 2:
+        return ids + offs[None, :]
+    return ids + offs[None, :, None]
+
+
+def embedding_lookup(table, ids, spec: TableSpec, chunk: int = 65536):
+    """Single-hot lookup: ids [B, F] → [B, F, dim].
+
+    For huge batches the lookup runs in ``chunk``-row slices (lax.map):
+    XLA's distributed gather from an all-axes row-sharded table
+    materializes a replicated output before resharding — chunking bounds
+    that transient to [chunk, F, dim] (measured: DLRM retrieval_cand 1M
+    rows: 25 GiB → ~2 GiB peak)."""
+    b = ids.shape[0]
+    if chunk and b > chunk:
+        while b % chunk:           # largest divisor of b not above chunk
+            chunk -= 1
+        chunks = ids.reshape(b // chunk, chunk, *ids.shape[1:])
+        out = jax.lax.map(
+            lambda i: jnp.take(table, flat_ids(i, spec), axis=0), chunks)
+        return out.reshape(b, *out.shape[2:])
+    return jnp.take(table, flat_ids(ids, spec), axis=0)
+
+
+def embedding_bag(table, ids, spec: TableSpec, weights=None, mode="sum"):
+    """Multi-hot bag: ids [B, F, H] (−1 padded) → [B, F, dim].
+
+    Reference EmbeddingBag: gather + masked (weighted) reduction.
+    """
+    gids = flat_ids(jnp.maximum(ids, 0), spec)
+    emb = jnp.take(table, gids, axis=0)                   # [B,F,H,dim]
+    mask = (ids >= 0).astype(emb.dtype)[..., None]
+    if weights is not None:
+        mask = mask * weights[..., None]
+    out = jnp.sum(emb * mask, axis=2)
+    if mode == "mean":
+        out = out / jnp.maximum(jnp.sum(mask, axis=2), 1.0)
+    return out
+
+
+def bag_incremental_add(bag_sum, count, new_vec, r: float = 1.0):
+    """Paper Eq. 3 applied to a bag (r=1 ⇒ plain running mean).
+
+    Maintains the *decayed average* of a user's interaction embeddings —
+    how the paper's technique attaches to DLRM/DeepFM/two-tower user
+    state (DESIGN.md §4)."""
+    return (r * count * bag_sum + new_vec) / (count + 1)
+
+
+def bag_decremental_delete(bag_avg, count, suffix_vecs, i: int, r: float = 1.0):
+    """Paper Eq. 4 applied to a bag of interaction embeddings."""
+    from repro.core.decay import decremental_delete
+    return decremental_delete(bag_avg, count, suffix_vecs, i, r, xp=jnp)

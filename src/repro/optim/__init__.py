@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (adamw, adafactor, sgd, clip_by_global_norm,
+                                    OptState, Optimizer, adamw_state_pspecs,
+                                    adafactor_state_pspecs, sgd_state_pspecs)
+
+__all__ = ["adamw", "adafactor", "sgd", "clip_by_global_norm", "OptState",
+           "Optimizer", "adamw_state_pspecs", "adafactor_state_pspecs",
+           "sgd_state_pspecs"]

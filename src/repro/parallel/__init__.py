@@ -1,0 +1,6 @@
+from repro.parallel.sharding import (ShardingRules, logical_to_physical,
+                                     shard_params_pytree, zero_like_sharded,
+                                     pick_fsdp_dim)
+
+__all__ = ["ShardingRules", "logical_to_physical", "shard_params_pytree",
+           "zero_like_sharded", "pick_fsdp_dim"]

@@ -1,0 +1,120 @@
+"""Sharding rules: map parameter/activation *logical axes* to mesh axes.
+
+Strategy (DESIGN.md §5):
+
+* **Tensor parallelism** over ``"model"``: attention heads, FFN hidden,
+  vocabulary, MoE experts, embedding-table rows, kNN item dim.
+* **FSDP / ZeRO** over ``"data"``: the largest remaining dim of each
+  large parameter is additionally sharded over ``"data"`` (params are
+  all-gathered per layer at use; gradients reduce-scattered). Optimizer
+  state inherits the param sharding → ZeRO for free.
+* **Batch** over ``("pod", "data")`` (the pod axis composes with data
+  parallelism; hierarchical gradient reduction crosses DCI once).
+* **Sequence/context** over ``"model"`` for long-context decode caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Named logical axes → physical mesh axes.
+
+    ``fsdp`` may span several axes (e.g. ("pod","data") on the multi-pod
+    mesh) — parameters are then ZeRO-3 sharded across all of them.
+    """
+    batch: tuple = ("pod", "data")
+    fsdp: tuple = ("pod", "data")
+    tensor: str = "model"
+    expert: str = "model"
+    context: str = "model"     # long-sequence KV cache sharding
+
+    def fsdp_axes(self, mesh: Mesh) -> tuple:
+        return tuple(a for a in self.fsdp if a in mesh.axis_names)
+
+    def fsdp_size(self, mesh: Mesh) -> int:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return int(np.prod([sizes[a] for a in self.fsdp_axes(mesh)])) \
+            if self.fsdp_axes(mesh) else 1
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                            for a in axis]))
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+
+
+def batch_axes(mesh: Mesh, rules: ShardingRules):
+    """The batch sharding axes present in this mesh (pod may be absent)."""
+    return tuple(a for a in rules.batch if a in mesh.axis_names)
+
+
+def logical_to_physical(mesh: Mesh, rules: ShardingRules, logical: tuple):
+    """Translate a tuple of logical axis names (or None) to a NamedSharding.
+
+    Example: ("vocab_tp", "fsdp") → P("model", "data").
+    Mapping: "batch"→rules.batch axes, "tp"→model, "fsdp"→data,
+    "expert"→model, "ctx"→model, None→replicated.
+    """
+    table = {
+        None: None,
+        "batch": batch_axes(mesh, rules),
+        "tp": rules.tensor,
+        "fsdp": rules.fsdp_axes(mesh),
+        "expert": rules.expert,
+        "ctx": rules.context,
+    }
+    spec = P(*[table[x] for x in logical])
+    return NamedSharding(mesh, spec)
+
+
+def pick_fsdp_dim(shape, mesh: Mesh, rules: ShardingRules,
+                  taken: Optional[int] = None) -> Optional[int]:
+    """Choose a dim (not ``taken``) divisible by the fsdp axis size.
+
+    Prefers the largest eligible dim. Returns None if nothing divides.
+    """
+    n = rules.fsdp_size(mesh)
+    if n <= 1:
+        return None
+    candidates = [(d, s) for d, s in enumerate(shape)
+                  if d != taken and s % n == 0 and s >= n]
+    if not candidates:
+        return None
+    return max(candidates, key=lambda t: t[1])[0]
+
+
+def param_spec(shape, mesh: Mesh, rules: ShardingRules,
+               tp_dim: Optional[int] = None) -> P:
+    """TP on ``tp_dim`` (if divisible) + FSDP on the best other dim."""
+    axes = [None] * len(shape)
+    if tp_dim is not None and rules.tensor in mesh.axis_names:
+        n = _mesh_axis_size(mesh, rules.tensor)
+        if shape[tp_dim] % n == 0 and shape[tp_dim] >= n:
+            axes[tp_dim] = rules.tensor
+        else:
+            tp_dim = None
+    fs = pick_fsdp_dim(shape, mesh, rules, taken=tp_dim)
+    if fs is not None:
+        axes[fs] = rules.fsdp_axes(mesh)
+    return P(*axes)
+
+
+def shard_params_pytree(params, spec_fn, mesh: Mesh):
+    """Build NamedShardings for a pytree of params via spec_fn(path, leaf)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    shardings = [NamedSharding(mesh, spec_fn(path, leaf))
+                 for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def zero_like_sharded(params_shardings):
+    """Optimizer-state shardings = param shardings (ZeRO via FSDP dims)."""
+    return params_shardings

@@ -1,0 +1,7 @@
+"""Streaming: micro-batch state maintenance (Spark Structured Streaming
+analog — paper §5), exactly-once recovery, stability-triggered refresh."""
+from repro.streaming.engine import Event, StreamingEngine
+from repro.streaming.state_store import StateStore, StoreConfig, state_shardings
+
+__all__ = ["Event", "StreamingEngine", "StateStore", "StoreConfig",
+           "state_shardings"]

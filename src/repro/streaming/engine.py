@@ -1,0 +1,200 @@
+"""Micro-batch streaming engine — the Spark Structured Streaming analog.
+
+Implements Algorithm 1 of the paper (joint incremental/decremental state
+updates) as a batched SPMD program:
+
+  * incoming events (basket additions, basket/item deletion requests)
+    are buffered and cut into fixed-shape ``UpdateBatch`` micro-batches;
+
+  * within a micro-batch each user appears at most once (conflicting
+    events for the same user stay in the buffer for the next batch —
+    this preserves per-user sequential semantics while letting
+    independent users update in parallel, exactly the paper's
+    user-level parallelism);
+
+  * an idempotent update log (sequence numbers + processed watermark)
+    makes recovery exactly-once: after restoring a checkpoint, events
+    with seqno <= watermark are skipped on replay;
+
+  * users whose numerical-error bound crossed the stability threshold
+    are refreshed from scratch after the batch (core.stability).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from collections import deque
+from typing import Iterable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stability
+from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
+                              KIND_DEL_ITEM, PAD_ID, TifuParams, UpdateBatch)
+from repro.core.updates import apply_update_batch, refresh_users
+from repro.streaming.state_store import StateStore
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One streaming event. ``seqno`` is assigned by the engine."""
+    kind: int
+    user: int
+    items: Optional[np.ndarray] = None   # for adds
+    pos: int = 0                         # for deletes
+    item: int = PAD_ID                   # for item deletes
+    seqno: int = -1
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    events_processed: int = 0
+    batches: int = 0
+    refreshes: int = 0
+    last_batch_seconds: float = 0.0
+
+
+class StreamingEngine:
+    """Joint incremental/decremental state maintenance (Algorithm 1)."""
+
+    def __init__(self, store: StateStore, params: TifuParams,
+                 batch_size: int = 256,
+                 stability_target_rel_err: Optional[float] = 1e-2):
+        self.store = store
+        self.params = params
+        self.batch_size = batch_size
+        self.buffer: deque[Event] = deque()
+        # Exactly-once bookkeeping.  Conflict deferral (one event per user
+        # per micro-batch) processes events OUT of seqno order, so a plain
+        # high-watermark would drop deferred-but-unprocessed events on
+        # replay.  We track the contiguous frontier + the sparse set of
+        # processed seqnos above it.
+        self.watermark = -1                 # all seqnos <= this are done
+        self._processed_above: set[int] = set()
+        self._next_seqno = 0
+        self.metrics = EngineMetrics()
+        if stability_target_rel_err is not None:
+            self.err_threshold = stability.refresh_threshold(
+                stability_target_rel_err, np.finfo(np.float32).eps)
+        else:
+            self.err_threshold = None
+
+    # -- ingestion ------------------------------------------------------------
+
+    def submit(self, events: Iterable[Event]) -> None:
+        for ev in events:
+            if ev.seqno < 0:
+                ev = dataclasses.replace(ev, seqno=self._next_seqno)
+                self._next_seqno += 1
+            elif ev.seqno <= self.watermark \
+                    or ev.seqno in self._processed_above:
+                continue  # replay of an already-processed event: skip
+            else:
+                self._next_seqno = max(self._next_seqno, ev.seqno + 1)
+            self.buffer.append(ev)
+
+    def add_basket(self, user: int, items: Sequence[int]) -> None:
+        self.submit([Event(KIND_ADD_BASKET, user,
+                           items=np.asarray(items, np.int32))])
+
+    def delete_basket(self, user: int, pos: int) -> None:
+        self.submit([Event(KIND_DEL_BASKET, user, pos=pos)])
+
+    def delete_item(self, user: int, pos: int, item: int) -> None:
+        self.submit([Event(KIND_DEL_ITEM, user, pos=pos, item=item)])
+
+    # -- micro-batch processing -------------------------------------------------
+
+    def _cut_batch(self) -> List[Event]:
+        """Take up to batch_size events, at most one per user, preserving
+        per-user order (later events for a busy user stay buffered)."""
+        taken, skipped, users = [], [], set()
+        while self.buffer and len(taken) < self.batch_size:
+            ev = self.buffer.popleft()
+            if ev.user in users:
+                skipped.append(ev)
+            else:
+                users.add(ev.user)
+                taken.append(ev)
+        # NOTE: extendleft reverses; re-insert in original order.
+        for ev in reversed(skipped):
+            self.buffer.appendleft(ev)
+        return taken
+
+    def _to_update_batch(self, events: List[Event]) -> UpdateBatch:
+        u = self.batch_size
+        b = self.store.cfg.max_basket_size
+        kind = np.zeros(u, np.int32)
+        user = np.zeros(u, np.int32)
+        items = np.full((u, b), PAD_ID, np.int32)
+        pos = np.zeros(u, np.int32)
+        item = np.full(u, PAD_ID, np.int32)
+        for r, ev in enumerate(events):
+            kind[r] = ev.kind
+            user[r] = ev.user
+            pos[r] = ev.pos
+            item[r] = ev.item
+            if ev.items is not None:
+                ids = np.asarray(ev.items, np.int32)[:b]
+                items[r, :len(ids)] = ids
+        return UpdateBatch(kind=jnp.asarray(kind), user=jnp.asarray(user),
+                           basket_items=jnp.asarray(items),
+                           basket_pos=jnp.asarray(pos),
+                           item=jnp.asarray(item))
+
+    def step(self) -> int:
+        """Process one micro-batch. Returns number of events applied."""
+        events = self._cut_batch()
+        if not events:
+            return 0
+        t0 = time.perf_counter()
+        batch = self._to_update_batch(events)
+        self.store.state = apply_update_batch(self.store.state, batch,
+                                              self.params)
+        if self.err_threshold is not None:
+            err = np.asarray(self.store.state.err_mult)
+            bad = np.nonzero(err > self.err_threshold)[0]
+            if bad.size:
+                self.store.state = refresh_users(
+                    self.store.state, jnp.asarray(bad, jnp.int32),
+                    self.params)
+                self.metrics.refreshes += int(bad.size)
+        for ev in events:
+            self._processed_above.add(ev.seqno)
+        while self.watermark + 1 in self._processed_above:
+            self.watermark += 1
+            self._processed_above.discard(self.watermark)
+        self.metrics.events_processed += len(events)
+        self.metrics.batches += 1
+        self.metrics.last_batch_seconds = time.perf_counter() - t0
+        return len(events)
+
+    def run_until_drained(self, max_batches: int = 10_000) -> int:
+        total = 0
+        for _ in range(max_batches):
+            n = self.step()
+            if n == 0:
+                break
+            total += n
+        return total
+
+    # -- recovery ---------------------------------------------------------------
+
+    def checkpoint(self, directory: str, step: int) -> None:
+        self.store.checkpoint(directory, step)
+        with open(os.path.join(directory, "ENGINE"), "w") as f:
+            json.dump({"watermark": self.watermark,
+                       "processed_above": sorted(self._processed_above),
+                       "next_seqno": self._next_seqno}, f)
+
+    def restore(self, directory: str) -> None:
+        self.store.restore(directory)
+        with open(os.path.join(directory, "ENGINE")) as f:
+            meta = json.load(f)
+        self.watermark = meta["watermark"]
+        self._processed_above = set(meta.get("processed_above", []))
+        self._next_seqno = meta["next_seqno"]
+        self.buffer.clear()

@@ -1,0 +1,69 @@
+"""Gradient compression: quantization error bounds, error-feedback
+unbiasedness over steps, hierarchical reduction parity."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.compression import (compress_with_feedback, decompress,
+                                     dequantize_int8, init_error_feedback,
+                                     quantize_int8)
+
+
+def test_quantize_roundtrip_error_bound(rng):
+    x = jnp.asarray(rng.normal(size=(256,)) * 3.0, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, scale) - x)))
+    assert err <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_steps(rng):
+    """Σ decoded_t ≈ Σ g_t (the residual carries the rounding error)."""
+    grads = {"w": jnp.asarray(rng.normal(size=(64,)), jnp.float32)}
+    err = init_error_feedback(grads)
+    total_true = np.zeros(64)
+    total_sent = np.zeros(64)
+    for t in range(30):
+        g = {"w": jnp.asarray(rng.normal(size=(64,)) * 0.01, jnp.float32)}
+        q, scales, err = compress_with_feedback(g, err)
+        dec = decompress(q, scales)
+        total_true += np.asarray(g["w"])
+        total_sent += np.asarray(dec["w"])
+    # residual bound: remaining error ≤ last quantization step size
+    resid = np.max(np.abs(total_true - total_sent))
+    assert resid <= float(scales["w"]) + 1e-6
+
+
+def test_hierarchical_psum_matches_plain():
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.optim.compression import hierarchical_psum_mean
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+x = jnp.arange(8 * 64, dtype=jnp.float32).reshape(8, 64) * 0.01
+
+def body(xl):
+    out, _ = hierarchical_psum_mean(xl[0], "data", "pod", err=None)
+    return out[None]
+
+with jax.set_mesh(mesh):
+    out = jax.jit(jax.shard_map(body, mesh=mesh,
+                                in_specs=P(("pod", "data"), None),
+                                out_specs=P(("pod", "data"), None),
+                                check_vma=False))(x)
+expect = np.mean(np.asarray(x), axis=0)
+got = np.asarray(out)
+for row in got:
+    np.testing.assert_allclose(row, expect, rtol=2e-2, atol=1e-3)
+print("HIER_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=580,
+                       cwd="/root/repo")
+    assert "HIER_OK" in r.stdout, r.stdout[-1500:] + r.stderr[-1500:]

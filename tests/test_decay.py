@@ -1,0 +1,117 @@
+"""Property tests for the decaying-average maintenance rules (paper §4.1).
+
+These are the paper's core mathematical claims:
+  Eq. 3 incremental  — EXACT vs from-scratch;
+  Eq. 4 decremental  — matches from-scratch (up to float error), touches
+                       only the suffix;
+  Eq. 5 in-place     — exact;
+  §6.3 instability   — error multiplier k/((k-1)r) per deletion.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import decay
+
+floats = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   allow_infinity=False, width=32)
+
+
+@given(xs=st.lists(floats, min_size=1, max_size=40),
+       x_new=floats,
+       r=st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=200, deadline=None)
+def test_incremental_matches_scratch(xs, x_new, r):
+    xs = np.asarray(xs, np.float64)
+    avg = decay.decayed_average(xs, r)
+    incr = decay.incremental_add(avg, len(xs), x_new, r)
+    scratch = decay.decayed_average(np.append(xs, x_new), r)
+    np.testing.assert_allclose(incr, scratch, rtol=1e-10, atol=1e-10)
+
+
+@given(xs=st.lists(floats, min_size=2, max_size=40),
+       r=st.floats(min_value=0.05, max_value=1.0),
+       data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_decremental_matches_scratch(xs, r, data):
+    xs = np.asarray(xs, np.float64)
+    n = len(xs)
+    i = data.draw(st.integers(min_value=1, max_value=n))  # 1-based
+    avg = decay.decayed_average(xs, r)
+    # only the suffix [x_i .. x_n] is passed — the O(n-i) access property
+    out = decay.decremental_delete(avg, n, xs[i - 1:], i, r)
+    scratch = decay.decayed_average(np.delete(xs, i - 1), r)
+    np.testing.assert_allclose(out, scratch, rtol=1e-8, atol=1e-8)
+
+
+@given(xs=st.lists(floats, min_size=1, max_size=40),
+       x_new=floats,
+       r=st.floats(min_value=0.05, max_value=1.0),
+       data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_inplace_matches_scratch(xs, x_new, r, data):
+    xs = np.asarray(xs, np.float64)
+    n = len(xs)
+    i = data.draw(st.integers(min_value=1, max_value=n))
+    avg = decay.decayed_average(xs, r)
+    out = decay.inplace_update(avg, n, xs[i - 1], x_new, i, r)
+    xs2 = xs.copy()
+    xs2[i - 1] = x_new
+    np.testing.assert_allclose(out, decay.decayed_average(xs2, r),
+                               rtol=1e-9, atol=1e-9)
+
+
+@given(xs=st.lists(floats, min_size=3, max_size=30),
+       r=st.floats(min_value=0.3, max_value=1.0))
+@settings(max_examples=100, deadline=None)
+def test_vector_series(xs, r):
+    """The rules extend element-wise to vector series (paper §4.1 note)."""
+    base = np.asarray(xs, np.float64)
+    series = np.stack([base, 2 * base, base ** 2], axis=1)  # [n, 3]
+    avg = decay.decayed_average(series, r)
+    out = decay.decremental_delete(avg, len(xs), series[0:], 1, r)
+    scratch = decay.decayed_average(series[1:], r)
+    np.testing.assert_allclose(out, scratch, rtol=1e-7, atol=1e-7)
+
+
+def test_suffix_coefficients_expand_the_dot_product(rng):
+    """D(.)ᵀR(.) == Σ c_t x_t with the closed-form coefficients."""
+    for _ in range(20):
+        n = int(rng.integers(2, 30))
+        i = int(rng.integers(1, n + 1))
+        r = float(rng.uniform(0.1, 1.0))
+        xs = rng.normal(size=n)
+        avg = decay.decayed_average(xs, r)
+        via_dot = decay.decremental_delete(avg, n, xs[i - 1:], i, r)
+        coeff = decay.suffix_coefficients(n, i, r)
+        via_coeff = (n * avg + coeff @ xs) / ((n - 1) * r)
+        np.testing.assert_allclose(via_dot, via_coeff, rtol=1e-9)
+
+
+def test_error_growth_factor_matches_paper():
+    """§6.3: alpha = k/((k-1) r_g) > 1/r_g > 1."""
+    a = decay.error_growth_factor(5, 0.7)
+    assert a == pytest.approx(5 / (4 * 0.7))
+    assert a > 1 / 0.7 > 1.0
+
+
+def test_decremental_instability_is_real(rng):
+    """Repeated deletions amplify an injected error by ~alpha^n (§6.3)."""
+    r = 0.7
+    n0 = 200
+    xs = rng.normal(size=n0)
+    avg = decay.decayed_average(xs, r)
+    eps = 1e-9
+    avg_bad = avg + eps
+    xs_live = xs.copy()
+    n_del = 30
+    for _ in range(n_del):
+        n = len(xs_live)
+        avg = decay.decremental_delete(avg, n, xs_live[0:], 1, r)
+        avg_bad = decay.decremental_delete(avg_bad, n, xs_live[0:], 1, r)
+        xs_live = xs_live[1:]
+    measured = abs(avg_bad - avg) / eps
+    # predicted worst-case growth: prod over deletions of n/((n-1)r)
+    predicted = np.prod([n / ((n - 1) * r)
+                         for n in range(n0, n0 - n_del, -1)])
+    assert measured == pytest.approx(predicted, rel=0.05)

@@ -1,0 +1,66 @@
+"""kNN prediction stage + ranking metrics + streaming top-k schedule."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import knn
+
+
+def test_streaming_topk_matches_direct(rng):
+    q = jnp.asarray(rng.normal(size=(32, 24)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(640, 24)), jnp.float32)
+    sv, si = knn.streaming_topk(q, c, k=10, chunk=128)
+    dv, di = knn.nearest_neighbors(q, c, k=10)
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(dv), atol=1e-4)
+    for a, b in zip(np.asarray(si), np.asarray(di)):
+        assert set(map(int, a)) == set(map(int, b))
+
+
+def test_streaming_topk_exclude_self(rng):
+    c = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    sv, si = knn.streaming_topk(c, c, k=5, chunk=16, exclude_self=True)
+    for row, ids in enumerate(np.asarray(si)):
+        assert row not in ids
+
+
+def test_chunked_neighbor_mean(rng):
+    c = jnp.asarray(rng.normal(size=(100, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 100, (7, 12)), jnp.int32)
+    out = knn.chunked_neighbor_mean(c, idx, chunk_k=4)
+    exp = jnp.mean(c[idx], axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_predict_combines_components(rng):
+    q = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    p1 = knn.predict(q, c, k=4, alpha=1.0, exclude_self=False)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(q), atol=1e-6)
+    p0 = knn.predict(q, c, k=4, alpha=0.0, exclude_self=False)
+    _, idx = knn.nearest_neighbors(q, c, k=4)
+    exp = jnp.mean(c[idx], axis=1)
+    np.testing.assert_allclose(np.asarray(p0), np.asarray(exp), atol=1e-5)
+
+
+def test_recall_and_ndcg_hand_cases():
+    recs = np.array([[1, 2, 3, 4], [9, 8, 7, 6]])
+    truth = [np.array([2, 3]), np.array([5])]
+    assert knn.recall_at_k(recs, truth, 4) == pytest.approx(0.5)
+    assert knn.recall_at_k(recs, truth, 2) == pytest.approx(0.25)
+    # NDCG: user0 hits at ranks 2,3 → dcg = 1/log2(3)+1/log2(4);
+    # idcg = 1/log2(2)+1/log2(3); user1: 0
+    dcg = 1 / np.log2(3) + 1 / np.log2(4)
+    idcg = 1.0 + 1 / np.log2(3)
+    assert knn.ndcg_at_k(recs, truth, 4) == pytest.approx(
+        (dcg / idcg) / 2)
+
+
+def test_euclidean_surrogate_is_rank_equivalent(rng):
+    q = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    s = np.asarray(knn.pairwise_scores(q, c, "euclidean"))
+    true_d = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(c)[None],
+                            axis=-1)
+    for i in range(4):
+        np.testing.assert_array_equal(np.argsort(-s[i]),
+                                      np.argsort(true_d[i], kind="stable"))

@@ -1,0 +1,136 @@
+"""The paper-faithful reference engine vs the from-scratch oracle:
+incremental exact (Table 2 claim), decremental allclose, item deletes,
+varying-group-size bookkeeping, stability refresh."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RefEngine, TifuParams
+from repro.core.tifu import default_group_sizes, user_vector_ragged
+
+
+def mirror_delete(sizes, pos):
+    start = 0
+    for j, tau in enumerate(sizes):
+        if pos < start + tau:
+            if tau > 1:
+                sizes[j] -= 1
+            else:
+                sizes.pop(j)
+            return
+        start += tau
+    raise AssertionError
+
+
+@given(seed=st.integers(0, 10_000),
+       m=st.integers(1, 6),
+       r_b=st.floats(0.3, 1.0), r_g=st.floats(0.3, 1.0),
+       n_ops=st.integers(5, 60))
+@settings(max_examples=25, deadline=None)
+def test_mixed_ops_match_oracle(seed, m, r_b, r_g, n_ops):
+    """Random interleavings of adds / basket-deletes / item-deletes stay
+    equal to TIFU-kNN retrained from scratch on the surviving history."""
+    rng = np.random.default_rng(seed)
+    p = TifuParams(n_items=23, group_size=m, r_b=r_b, r_g=r_g)
+    eng = RefEngine(p)
+    hist, sizes = [], []
+    for _ in range(n_ops):
+        op = rng.choice(["add", "del", "item"]) if hist else "add"
+        if op == "add":
+            b = rng.choice(p.n_items, size=int(rng.integers(1, 5)),
+                           replace=False)
+            eng.add_basket(0, b)
+            hist.append(np.asarray(b, np.int64))
+            if sizes and sizes[-1] < m:
+                sizes[-1] += 1
+            else:
+                sizes.append(1)
+        elif op == "del":
+            pos = int(rng.integers(0, len(hist)))
+            eng.delete_basket(0, pos)
+            mirror_delete(sizes, pos)
+            del hist[pos]
+        else:
+            pos = int(rng.integers(0, len(hist)))
+            item = int(rng.choice(hist[pos]))
+            eng.delete_item(0, pos, item)
+            nb = hist[pos][hist[pos] != item]
+            if len(nb) == 0:
+                mirror_delete(sizes, pos)
+                del hist[pos]
+            else:
+                hist[pos] = nb
+        oracle = user_vector_ragged(hist, sizes, p)
+        np.testing.assert_allclose(eng.state(0).user_vec, oracle,
+                                   rtol=1e-7, atol=1e-8)
+        assert eng.state(0).group_sizes == sizes
+
+
+def test_incremental_is_exact_not_just_close(rng):
+    """Paper Table 2: incremental results are IDENTICAL to baseline.
+    (The incremental path performs the same fp ops as the recurrence —
+    we assert to fp64 round-off.)"""
+    p = TifuParams(n_items=50, group_size=3)
+    eng = RefEngine(p)
+    hist = []
+    for _ in range(30):
+        b = rng.choice(p.n_items, size=4, replace=False)
+        hist.append(b)
+        eng.add_basket(7, b)
+    oracle = user_vector_ragged(hist, default_group_sizes(len(hist), 3), p)
+    assert np.max(np.abs(eng.state(7).user_vec - oracle)) < 1e-13
+
+
+def test_last_group_vec_maintained(rng):
+    p = TifuParams(n_items=29, group_size=4)
+    eng = RefEngine(p)
+    for _ in range(11):
+        eng.add_basket(0, rng.choice(p.n_items, size=3, replace=False))
+    st_ = eng.state(0)
+    from repro.core.tifu import group_vector_ragged
+    start = sum(st_.group_sizes[:-1])
+    expect = group_vector_ragged(st_.history[start:], p.n_items, p.r_b)
+    np.testing.assert_allclose(st_.last_group_vec, expect, rtol=1e-9)
+
+
+def test_delete_everything(rng):
+    p = TifuParams(n_items=11, group_size=2)
+    eng = RefEngine(p)
+    for _ in range(5):
+        eng.add_basket(0, rng.choice(p.n_items, size=2, replace=False))
+    for _ in range(5):
+        eng.delete_basket(0, 0)
+    assert eng.state(0).n_baskets == 0
+    assert np.all(eng.state(0).user_vec == 0)
+    # and the user can come back
+    eng.add_basket(0, np.array([1, 2]))
+    assert eng.state(0).n_baskets == 1
+
+
+def test_item_delete_noop_for_absent_item(rng):
+    p = TifuParams(n_items=11, group_size=2)
+    eng = RefEngine(p)
+    eng.add_basket(0, np.array([1, 2]))
+    before = eng.state(0).user_vec.copy()
+    eng.delete_item(0, 0, 9)   # not in the basket
+    np.testing.assert_array_equal(eng.state(0).user_vec, before)
+
+
+def test_stability_refresh_triggers(rng):
+    """With a threshold, heavy deletion loads reset err_mult via exact
+    recomputation (beyond-paper stability tracker)."""
+    p = TifuParams(n_items=17, group_size=1, r_g=0.7)  # every delete = Eq.12
+    eng = RefEngine(p, stability_threshold=1e3)
+    for _ in range(400):
+        eng.add_basket(0, rng.choice(p.n_items, size=2, replace=False))
+    worst = 1.0
+    for _ in range(300):
+        eng.delete_basket(0, 0)
+        worst = max(worst, eng.state(0).err_mult)
+        assert eng.state(0).err_mult <= 1e3 * (400 / (399 * 0.7)), \
+            "refresh did not bound the error multiplier"
+    assert worst > 1.0  # growth did happen before refreshes
+    oracle = user_vector_ragged(eng.state(0).history,
+                                eng.state(0).group_sizes, p)
+    np.testing.assert_allclose(eng.state(0).user_vec, oracle, rtol=1e-6,
+                               atol=1e-9)
