@@ -1,0 +1,186 @@
+"""Micro-batch update latency/throughput vs vocabulary size.
+
+Measures the kind-partitioned sparse-delta pipeline (core.updates
+apply_add_batch / apply_del_*_batch via the apply_update_batch shim)
+against the seed's dense mixed path (apply_update_batch_dense: gather
+[batch, n_items] rows, compute every update rule, select, scatter dense
+deltas) for add-only, delete-only and mixed micro-batches at
+n_items ∈ {1k, 10k, 100k}.
+
+The headline claim (ISSUE 1 acceptance): add-only batches touch O(basket)
+state per event, so their latency stays flat as n_items grows, while the
+dense path scales linearly.  Results land in BENCH_updates.json so the
+perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python benchmarks/bench_update_batch.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (StreamState, TifuParams, apply_update_batch,
+                        apply_update_batch_dense)
+from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
+                              KIND_DEL_ITEM, KIND_NOOP, PAD_ID, UpdateBatch)
+
+M_USERS = 1024
+MAX_BASKETS = 24
+MAX_BSIZE = 16
+BATCH = 256
+SEED_BASKETS = 6
+
+
+def make_params(n_items: int) -> TifuParams:
+    return TifuParams(n_items=n_items, group_size=7, r_b=0.9, r_g=0.7)
+
+
+def seed_state(params: TifuParams, rng) -> StreamState:
+    """Give every user SEED_BASKETS baskets via the batched add path."""
+    state = StreamState.zeros(M_USERS, params.n_items, MAX_BASKETS,
+                              MAX_BSIZE, MAX_BASKETS)
+    for _ in range(SEED_BASKETS):
+        for lo in range(0, M_USERS, BATCH):
+            users = np.arange(lo, lo + BATCH, dtype=np.int32)
+            state = apply_update_batch(
+                state, make_batch(rng, users, "add", state), params)
+    return state
+
+
+def make_batch(rng, users, kind: str, state: StreamState) -> UpdateBatch:
+    """One fixed-shape mixed batch over the given (distinct) users."""
+    u = len(users)
+    kinds = np.zeros(u, np.int32)
+    items = np.full((u, MAX_BSIZE), PAD_ID, np.int32)
+    pos = np.zeros(u, np.int32)
+    item = np.full(u, PAD_ID, np.int32)
+    nb = np.asarray(state.n_baskets)
+    hist = None
+    for r, uu in enumerate(users):
+        # deterministic composition: stable sub-batch sizes => the pow2
+        # buckets compile once in warmup and the loop times steady state
+        # (add: all adds; del: 50/50 basket/item; mixed: 2/1/1).
+        roll = {"add": 0.0, "del": 0.6 + 0.3 * (r % 2),
+                "mixed": (0.0, 0.0, 0.6, 0.9)[r % 4]}[kind]
+        if roll < 0.5 or nb[uu] == 0:
+            kinds[r] = KIND_ADD_BASKET
+            b = rng.choice(state.n_items,
+                           size=int(rng.integers(2, MAX_BSIZE // 2)),
+                           replace=False)
+            items[r, :len(b)] = b
+        elif roll < 0.75:
+            kinds[r] = KIND_DEL_BASKET
+            pos[r] = int(rng.integers(0, nb[uu]))
+        else:
+            kinds[r] = KIND_DEL_ITEM
+            pos[r] = int(rng.integers(0, nb[uu]))
+            if hist is None:
+                hist = np.asarray(state.history)
+            row = hist[uu, pos[r]]
+            row = row[row >= 0]
+            item[r] = int(row[0]) if row.size else 0
+            if not row.size:
+                kinds[r] = KIND_NOOP
+    return UpdateBatch(kind=jnp.asarray(kinds), user=jnp.asarray(users),
+                       basket_items=jnp.asarray(items),
+                       basket_pos=jnp.asarray(pos), item=jnp.asarray(item))
+
+
+def bench(apply_fn, params, rng, kind: str, iters: int) -> dict:
+    state = seed_state(params, rng)
+    user_sets = [np.arange(lo, lo + BATCH, dtype=np.int32)
+                 for lo in range(0, M_USERS, BATCH)]
+    # warmup/compile (several batches: mixed batches flip between pow2
+    # sub-batch buckets, each bucket combination compiles once)
+    for _ in range(3):
+        state = apply_fn(state, make_batch(rng, user_sets[0], kind, state),
+                         params)
+    jax.block_until_ready(state.user_vecs)
+    times = []
+    for i in range(iters):
+        batch = make_batch(rng, user_sets[(i + 1) % len(user_sets)], kind,
+                           state)
+        t0 = time.perf_counter()
+        state = apply_fn(state, batch, params)
+        jax.block_until_ready(state.user_vecs)
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times)
+    return {"kind": kind, "n_items": params.n_items, "batch": BATCH,
+            "iters": iters, "mean_ms": float(times.mean() * 1e3),
+            "p50_ms": float(np.median(times) * 1e3),
+            "min_ms": float(times.min() * 1e3),
+            "events_per_s": float(BATCH / times.mean())}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer iterations; skip the heaviest dense rows "
+                         "(100k del/mixed)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_updates.json"))
+    args = ap.parse_args()
+    iters = 4 if args.quick else 8
+    dense_iters = 2 if args.quick else 4
+
+    results = []
+    for n_items in (1_000, 10_000, 100_000):
+        params = make_params(n_items)
+        for kind in ("add", "del", "mixed"):
+            rng = np.random.default_rng(0)
+            r = bench(apply_update_batch, params, rng, kind, iters)
+            r["path"] = "partitioned"
+            results.append(r)
+            print(f"partitioned {kind:5s} n_items={n_items:>6d} "
+                  f"mean={r['mean_ms']:8.2f} ms  "
+                  f"({r['events_per_s']:,.0f} ev/s)")
+            if args.quick and n_items == 100_000 and kind != "add":
+                continue   # the dense 100k del/mixed rows are the most
+            rng = np.random.default_rng(0)     # expensive configurations
+            r = bench(apply_update_batch_dense, params, rng, kind,
+                      dense_iters)
+            r["path"] = "dense_seed"
+            results.append(r)
+            print(f"dense_seed  {kind:5s} n_items={n_items:>6d} "
+                  f"mean={r['mean_ms']:8.2f} ms  "
+                  f"({r['events_per_s']:,.0f} ev/s)")
+
+    def pick(path, kind, n):
+        return next(r for r in results if r["path"] == path
+                    and r["kind"] == kind and r["n_items"] == n)
+
+    add_growth = (pick("partitioned", "add", 100_000)["mean_ms"]
+                  / pick("partitioned", "add", 1_000)["mean_ms"])
+    speedup_100k = (pick("dense_seed", "add", 100_000)["mean_ms"]
+                    / pick("partitioned", "add", 100_000)["mean_ms"])
+    summary = {"add_latency_growth_1k_to_100k": add_growth,
+               "add_speedup_vs_dense_at_100k": speedup_100k}
+    print(f"\nadd growth 1k->100k: {add_growth:.2f}x "
+          f"(acceptance: < 1.5x)\n"
+          f"add speedup vs dense @100k: {speedup_100k:.2f}x "
+          f"(acceptance: >= 3x)")
+
+    payload = {
+        "benchmark": "bench_update_batch",
+        "backend": jax.default_backend(),
+        "config": {"m_users": M_USERS, "batch": BATCH,
+                   "max_baskets": MAX_BASKETS, "max_basket_size": MAX_BSIZE,
+                   "seed_baskets": SEED_BASKETS},
+        "summary": summary,
+        "results": results,
+    }
+    out = os.path.abspath(args.out)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -57,7 +57,7 @@ print(f"recovered + drained {n} remaining events in {dt:.2f}s "
       f"stability refreshes: {engine2.metrics.refreshes}")
 
 # serve from the live store
-corpus = store2.state.user_vecs
+corpus = store2.state.materialized_user_vecs()
 q = corpus[:256]
 t0 = time.perf_counter()
 pred = knn.predict(q, corpus, k=p.k_neighbors, alpha=p.alpha,

@@ -11,8 +11,10 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchDef, CellProgram, sds
-from repro.core import TifuParams, apply_update_batch
-from repro.core.types import StreamState, UpdateBatch
+from repro.core import (TifuParams, apply_add_batch, apply_del_basket_batch,
+                        apply_del_item_batch)
+from repro.core.types import (AddBatch, DelBasketBatch, DelItemBatch,
+                              StreamState)
 from repro.parallel.sharding import batch_axes
 
 M_USERS = 1_048_576
@@ -20,6 +22,7 @@ N_ITEMS = 16_384
 MAX_BASKETS = 64
 MAX_BSIZE = 32
 UPDATE_BATCH = 16_384
+DEL_BATCH = 1_024     # deletion traffic is ~1/16 of add traffic (§6.1)
 N_QUERIES = 4_096
 TOPK = 300
 
@@ -38,6 +41,8 @@ def _state_sds():
         n_baskets=sds((M_USERS,), jnp.int32),
         n_groups=sds((M_USERS,), jnp.int32),
         err_mult=sds((M_USERS,)),
+        uv_scale=sds((M_USERS,)),
+        lgv_scale=sds((M_USERS,)),
     )
 
 
@@ -52,38 +57,55 @@ def _state_shardings(mesh, rules):
         n_baskets=NamedSharding(mesh, P(u)),
         n_groups=NamedSharding(mesh, P(u)),
         err_mult=NamedSharding(mesh, P(u)),
+        uv_scale=NamedSharding(mesh, P(u)),
+        lgv_scale=NamedSharding(mesh, P(u)),
     )
 
 
 def stream_update_cell(mesh, rules) -> CellProgram:
+    """Kind-partitioned micro-batch: one homogeneous sub-batch per update
+    kind (DESIGN.md §4) — the add path is sparse (O(batch·basket) state
+    traffic), the decremental paths are dense masked rows."""
     params = make_params()
     u_ax = batch_axes(mesh, rules)
-    batch = UpdateBatch(
-        kind=sds((UPDATE_BATCH,), jnp.int32),
-        user=sds((UPDATE_BATCH,), jnp.int32),
-        basket_items=sds((UPDATE_BATCH, MAX_BSIZE), jnp.int32),
-        basket_pos=sds((UPDATE_BATCH,), jnp.int32),
-        item=sds((UPDATE_BATCH,), jnp.int32),
-    )
-    bshard = UpdateBatch(
-        kind=NamedSharding(mesh, P(u_ax)),
-        user=NamedSharding(mesh, P(u_ax)),
-        basket_items=NamedSharding(mesh, P(u_ax, None)),
-        basket_pos=NamedSharding(mesh, P(u_ax)),
-        item=NamedSharding(mesh, P(u_ax)),
-    )
+    adds = AddBatch(user=sds((UPDATE_BATCH,), jnp.int32),
+                    items=sds((UPDATE_BATCH, MAX_BSIZE), jnp.int32),
+                    valid=sds((UPDATE_BATCH,), jnp.bool_))
+    delb = DelBasketBatch(user=sds((DEL_BATCH,), jnp.int32),
+                          pos=sds((DEL_BATCH,), jnp.int32),
+                          valid=sds((DEL_BATCH,), jnp.bool_))
+    deli = DelItemBatch(user=sds((DEL_BATCH,), jnp.int32),
+                        pos=sds((DEL_BATCH,), jnp.int32),
+                        item=sds((DEL_BATCH,), jnp.int32),
+                        valid=sds((DEL_BATCH,), jnp.bool_))
+    ashard = AddBatch(user=NamedSharding(mesh, P(u_ax)),
+                      items=NamedSharding(mesh, P(u_ax, None)),
+                      valid=NamedSharding(mesh, P(u_ax)))
+    bshard = DelBasketBatch(user=NamedSharding(mesh, P(u_ax)),
+                            pos=NamedSharding(mesh, P(u_ax)),
+                            valid=NamedSharding(mesh, P(u_ax)))
+    ishard = DelItemBatch(user=NamedSharding(mesh, P(u_ax)),
+                          pos=NamedSharding(mesh, P(u_ax)),
+                          item=NamedSharding(mesh, P(u_ax)),
+                          valid=NamedSharding(mesh, P(u_ax)))
 
-    def fn(state, batch):
-        return apply_update_batch(state, batch, params)
+    def fn(state, adds, delb, deli):
+        state = apply_add_batch(state, adds, params)
+        state = apply_del_basket_batch(state, delb, params)
+        return apply_del_item_batch(state, deli, params)
 
-    # decremental rule touches the masked history scatter:
-    # ~3 weighted multihot scatters over N×B per update row
-    flops = UPDATE_BATCH * (3 * MAX_BASKETS * MAX_BSIZE + 4 * N_ITEMS)
+    # adds: sparse support W = (m+1)·B per row — a W·log2(W) dedup sort
+    # plus O(W) gathers/scatters; deletes: ~3 weighted multihot scatters
+    # over N×B plus the dense row writes.
+    w = (params.group_size + 1) * MAX_BSIZE
+    flops = UPDATE_BATCH * (w * (w - 1).bit_length() + 4 * w) \
+        + 2 * DEL_BATCH * (3 * MAX_BASKETS * MAX_BSIZE + 4 * N_ITEMS)
     return CellProgram(
-        fn=fn, args=(_state_sds(), batch),
-        in_shardings=(_state_shardings(mesh, rules), bshard),
+        fn=fn, args=(_state_sds(), adds, delb, deli),
+        in_shardings=(_state_shardings(mesh, rules), ashard, bshard, ishard),
         donate_argnums=(0,),
-        description=f"joint incr/decr micro-batch U={UPDATE_BATCH}",
+        description=(f"kind-partitioned micro-batch adds={UPDATE_BATCH} "
+                     f"dels=2x{DEL_BATCH}"),
         model_flops_per_step=float(flops))
 
 

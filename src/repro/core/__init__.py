@@ -2,15 +2,22 @@
 and deletions of baskets and items (Wang & Schelter, ORSUM@RecSys'21)."""
 from repro.core.types import (PAD_ID, KIND_NOOP, KIND_ADD_BASKET,
                               KIND_DEL_BASKET, KIND_DEL_ITEM,
-                              PAPER_HYPERPARAMS, RaggedUserState, StreamState,
+                              PAPER_HYPERPARAMS, AddBatch, DelBasketBatch,
+                              DelItemBatch, RaggedUserState, StreamState,
                               TifuParams, UpdateBatch)
 from repro.core import decay, knn, stability, tifu
 from repro.core.ref_engine import RefEngine
-from repro.core.updates import apply_update_batch, refresh_users
+from repro.core.updates import (SCALE_FLOOR, apply_add_batch,
+                                apply_del_basket_batch, apply_del_item_batch,
+                                apply_update_batch, apply_update_batch_dense,
+                                refresh_users, renormalize_users)
 
 __all__ = [
     "PAD_ID", "KIND_NOOP", "KIND_ADD_BASKET", "KIND_DEL_BASKET",
-    "KIND_DEL_ITEM", "PAPER_HYPERPARAMS", "RaggedUserState", "StreamState",
-    "TifuParams", "UpdateBatch", "decay", "knn", "stability", "tifu",
-    "RefEngine", "apply_update_batch", "refresh_users",
+    "KIND_DEL_ITEM", "PAPER_HYPERPARAMS", "AddBatch", "DelBasketBatch",
+    "DelItemBatch", "RaggedUserState", "StreamState", "TifuParams",
+    "UpdateBatch", "decay", "knn", "stability", "tifu", "RefEngine",
+    "SCALE_FLOOR", "apply_add_batch", "apply_del_basket_batch",
+    "apply_del_item_batch", "apply_update_batch", "apply_update_batch_dense",
+    "refresh_users", "renormalize_users",
 ]

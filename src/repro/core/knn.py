@@ -80,10 +80,13 @@ def streaming_topk(queries, corpus, k: int, metric: str = "euclidean",
     (the Pallas kernel is the on-chip TPU version of this schedule)."""
     q_n, d = queries.shape
     m = corpus.shape[0]
-    while m % chunk:
-        chunk -= 1
+    # Remainder rows are handled as one extra masked tail block (padding
+    # only O(chunk) rows, never a full-corpus copy).  Shrinking the chunk
+    # instead degenerates to chunk=1 — a scan of length M — for
+    # prime-sized corpora.
+    chunk = max(1, min(chunk, m))    # m == 0 → zero blocks, -inf result
     nc = m // chunk
-    blocks = corpus.reshape(nc, chunk, d)
+    blocks = corpus[:nc * chunk].reshape(nc, chunk, d)
     qids = (jnp.arange(q_n) if query_ids is None else query_ids)
 
     def body(carry, inp):
@@ -91,6 +94,7 @@ def streaming_topk(queries, corpus, k: int, metric: str = "euclidean",
         block, ci = inp
         s = pairwise_scores(queries, block, metric)       # [Q, chunk]
         tile = ci * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.where(tile >= m, -jnp.inf, s)             # padding rows
         if exclude_self:
             s = jnp.where(tile == qids[:, None], -jnp.inf, s)
         mv = jnp.concatenate([vals, s.astype(jnp.float32)], axis=1)
@@ -100,8 +104,13 @@ def streaming_topk(queries, corpus, k: int, metric: str = "euclidean",
 
     init = (jnp.full((q_n, k), -jnp.inf, jnp.float32),
             jnp.zeros((q_n, k), jnp.int32))
-    (vals, idx), _ = jax.lax.scan(body, init, (blocks, jnp.arange(nc)))
-    return vals, idx
+    carry, _ = jax.lax.scan(body, init, (blocks, jnp.arange(nc)))
+    rem = m - nc * chunk
+    if rem:
+        tail = jnp.zeros((chunk, d), corpus.dtype).at[:rem].set(
+            corpus[nc * chunk:])
+        carry, _ = body(carry, (tail, jnp.asarray(nc)))
+    return carry
 
 
 def distributed_predict(queries, corpus, k: int, alpha: float, mesh, rules,
@@ -161,12 +170,20 @@ def chunked_neighbor_mean(corpus, idx, chunk_k: int = 8):
     """mean(corpus[idx], axis=1) accumulated over neighbour chunks —
     avoids the [Q, k, I] gather (Q=4096, k=300, I=16k ⇒ 80 GB)."""
     q_n, k = idx.shape
-    while k % chunk_k:
-        chunk_k -= 1
-    blocks = idx.reshape(q_n, k // chunk_k, chunk_k).transpose(1, 0, 2)
+    # Pad the neighbour list to a chunk multiple (index -1, masked in the
+    # body) rather than shrinking chunk_k to 1 for prime k.
+    chunk_k = max(1, min(chunk_k, k))
+    pad = (-k) % chunk_k
+    if pad:
+        idx = jnp.concatenate(
+            [idx, jnp.full((q_n, pad), -1, idx.dtype)], axis=1)
+    blocks = idx.reshape(q_n, (k + pad) // chunk_k,
+                         chunk_k).transpose(1, 0, 2)
 
     def body(acc, ib):
-        return acc + jnp.sum(corpus[ib], axis=1), None
+        valid = (ib >= 0)[..., None].astype(corpus.dtype)
+        rows = jnp.where(ib >= 0, ib, 0)
+        return acc + jnp.sum(corpus[rows] * valid, axis=1), None
 
     acc, _ = jax.lax.scan(
         body, jnp.zeros((q_n, corpus.shape[1]), corpus.dtype), blocks)

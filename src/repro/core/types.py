@@ -8,7 +8,11 @@ Two state representations coexist (see DESIGN.md §3):
   reproduce the paper's asymptotics (Fig. 2a/2b).
 
 * ``StreamState`` — struct-of-arrays padded JAX state for ``M`` users,
-  used by the batched SPMD streaming engine (``streaming.engine``).
+  used by the batched SPMD streaming engine (``streaming.engine``).  Its
+  vector tables are stored *scaled* (DESIGN.md §3.3) so basket additions
+  apply sparse deltas; kind-partitioned sub-batches (``AddBatch``,
+  ``DelBasketBatch``, ``DelItemBatch``, DESIGN.md §4.1) carry one
+  homogeneous micro-batch each.
 """
 from __future__ import annotations
 
@@ -107,13 +111,28 @@ class StreamState:
     Shapes (``M`` users, ``N`` max baskets, ``B`` max basket size,
     ``K`` max groups, ``I`` items):
 
-      user_vecs:       f32[M, I]
-      last_group_vecs: f32[M, I]
+      user_vecs:       f32[M, I]   raw (scaled) storage, see below
+      last_group_vecs: f32[M, I]   raw (scaled) storage, see below
       history:         i32[M, N, B]   (PAD_ID padded)
       group_sizes:     i32[M, K]
       n_baskets:       i32[M]
       n_groups:        i32[M]
       err_mult:        f32[M]
+      uv_scale:        f32[M]
+      lgv_scale:       f32[M]
+
+    Scaled representation (DESIGN.md §3.3): the *true* TIFU vectors are
+
+        user_vec(u)       = uv_scale[u]  * user_vecs[u]
+        last_group_vec(u) = lgv_scale[u] * last_group_vecs[u]
+
+    Basket additions (Eq. 7-9) rescale the whole user/group vector by a
+    per-user scalar; storing that scalar separately turns every addition
+    into a *sparse* delta whose support is only the touched items, so the
+    batched add path never reads or writes an ``[n_items]`` temporary.
+    Use :meth:`materialized_user_vecs` for serving / kNN / comparisons.
+    Scales only shrink; ``core.updates.renormalize_users`` folds them back
+    into the raw rows before they underflow (SCALE_FLOOR).
     """
 
     user_vecs: jax.Array
@@ -123,16 +142,28 @@ class StreamState:
     n_baskets: jax.Array
     n_groups: jax.Array
     err_mult: jax.Array
+    uv_scale: jax.Array
+    lgv_scale: jax.Array
 
     def tree_flatten(self):
         children = (self.user_vecs, self.last_group_vecs, self.history,
                     self.group_sizes, self.n_baskets, self.n_groups,
-                    self.err_mult)
+                    self.err_mult, self.uv_scale, self.lgv_scale)
         return children, None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+    # -- true-value accessors -------------------------------------------------
+
+    def materialized_user_vecs(self) -> jax.Array:
+        """True user vectors f32[M, I] (raw rows × per-user scale)."""
+        return self.user_vecs * self.uv_scale[:, None]
+
+    def materialized_last_group_vecs(self) -> jax.Array:
+        """True last-group vectors f32[M, I]."""
+        return self.last_group_vecs * self.lgv_scale[:, None]
 
     @property
     def n_users(self) -> int:
@@ -169,6 +200,8 @@ class StreamState:
             n_baskets=jnp.zeros((n_users,), jnp.int32),
             n_groups=jnp.zeros((n_users,), jnp.int32),
             err_mult=jnp.ones((n_users,), dtype),
+            uv_scale=jnp.ones((n_users,), dtype),
+            lgv_scale=jnp.ones((n_users,), dtype),
         )
 
 
@@ -218,3 +251,153 @@ class UpdateBatch:
             basket_pos=jnp.zeros((batch,), jnp.int32),
             item=jnp.full((batch,), PAD_ID, jnp.int32),
         )
+
+
+# ---------------------------------------------------------------------------
+# Kind-partitioned homogeneous sub-batches (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+#
+# A mixed UpdateBatch forces one compiled program to evaluate every update
+# rule per row and select (4x redundant work).  The streaming engine instead
+# partitions each micro-batch by event kind into these fixed-shape
+# sub-batches, so each compiled program runs exactly one rule.  Rows beyond
+# the real event count have valid=False and zero effect; they may alias any
+# user because every state write is a masked delta (scatter-add / multiply
+# by 1), never an unmasked set.
+
+def _pow2_pad(n: int, cap: int = 0) -> int:
+    """Pad a sub-batch length to the next power of two (bounded bucketing
+    keeps the number of compiled shapes at log2(cap) per kind).  ``cap``
+    (the engine batch size) bounds the padding; 0 means uncapped."""
+    if n <= 0:
+        return 1
+    p = 1 << (n - 1).bit_length()
+    return min(p, max(cap, n)) if cap else p
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AddBatch:
+    """Homogeneous basket-addition sub-batch (the paper's O(1) case).
+
+    user:  i32[U]     target user row
+    items: i32[U, B]  item ids of the new basket (PAD_ID padded)
+    valid: bool[U]    False for padding rows (zero effect)
+    """
+
+    user: jax.Array
+    items: jax.Array
+    valid: jax.Array
+
+    def tree_flatten(self):
+        return (self.user, self.items, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.user.shape[0]
+
+    @staticmethod
+    def build(users, baskets, max_basket_size: int,
+              pad_cap: int = 0) -> "AddBatch":
+        """From parallel host lists of user ids and item-id sequences."""
+        n = len(users)
+        u = _pow2_pad(n, pad_cap)
+        user = np.zeros(u, np.int32)
+        items = np.full((u, max_basket_size), PAD_ID, np.int32)
+        valid = np.zeros(u, bool)
+        for r, (uu, b) in enumerate(zip(users, baskets)):
+            user[r] = uu
+            # baskets are item SETS: dedup + drop PADs here so duplicate
+            # ids never reach history (recompute paths would double-count)
+            ids = np.unique(np.asarray(b, np.int32))
+            ids = ids[ids >= 0][:max_basket_size]
+            items[r, :len(ids)] = ids
+            valid[r] = True
+        return AddBatch(user=jnp.asarray(user), items=jnp.asarray(items),
+                        valid=jnp.asarray(valid))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DelBasketBatch:
+    """Homogeneous basket-deletion sub-batch (linear decremental cost).
+
+    user: i32[U]   target user row
+    pos:  i32[U]   global basket index to delete
+    valid: bool[U]
+    """
+
+    user: jax.Array
+    pos: jax.Array
+    valid: jax.Array
+
+    def tree_flatten(self):
+        return (self.user, self.pos, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.user.shape[0]
+
+    @staticmethod
+    def build(users, positions, pad_cap: int = 0) -> "DelBasketBatch":
+        n = len(users)
+        u = _pow2_pad(n, pad_cap)
+        user = np.zeros(u, np.int32)
+        pos = np.zeros(u, np.int32)
+        valid = np.zeros(u, bool)
+        user[:n] = np.asarray(users, np.int32)
+        pos[:n] = np.asarray(positions, np.int32)
+        valid[:n] = True
+        return DelBasketBatch(user=jnp.asarray(user), pos=jnp.asarray(pos),
+                              valid=jnp.asarray(valid))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DelItemBatch:
+    """Homogeneous item-deletion sub-batch (Eq. 13 with vanish fallback).
+
+    user: i32[U]   target user row
+    pos:  i32[U]   global basket index holding the item
+    item: i32[U]   item id to delete
+    valid: bool[U]
+    """
+
+    user: jax.Array
+    pos: jax.Array
+    item: jax.Array
+    valid: jax.Array
+
+    def tree_flatten(self):
+        return (self.user, self.pos, self.item, self.valid), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def size(self) -> int:
+        return self.user.shape[0]
+
+    @staticmethod
+    def build(users, positions, items, pad_cap: int = 0) -> "DelItemBatch":
+        n = len(users)
+        u = _pow2_pad(n, pad_cap)
+        user = np.zeros(u, np.int32)
+        pos = np.zeros(u, np.int32)
+        item = np.full(u, PAD_ID, np.int32)
+        valid = np.zeros(u, bool)
+        user[:n] = np.asarray(users, np.int32)
+        pos[:n] = np.asarray(positions, np.int32)
+        item[:n] = np.asarray(items, np.int32)
+        valid[:n] = True
+        return DelItemBatch(user=jnp.asarray(user), pos=jnp.asarray(pos),
+                            item=jnp.asarray(item), valid=jnp.asarray(valid))

@@ -1,9 +1,22 @@
 """Batched JAX incremental/decremental updates (the TPU production path).
 
-Fixed-shape, mask-driven implementations of the paper's update rules,
-``vmap``-able over a micro-batch of users.  Semantics are validated
-against ``core.ref_engine`` (the paper-faithful oracle) in
-``tests/test_updates_jax.py``.
+Kind-partitioned micro-batches (DESIGN.md §4): the streaming engine
+splits each micro-batch into homogeneous sub-batches and each entry
+point runs exactly one update rule:
+
+  * ``apply_add_batch``        — Eq. 7-9, **sparse deltas**: O(batch·W)
+    data touches the [M, I] state (W = (group_size+1)·max_basket_size),
+    never an [n_items] temporary.  Matches the paper's O(1)-per-add
+    asymptotic on the batched path (DESIGN.md §3.3).
+  * ``apply_del_basket_batch`` — Eq. 10-12, dense masked rows: the
+    paper's decremental cost is linear in the surviving history, so the
+    per-user dense row gather matches the true support.
+  * ``apply_del_item_batch``   — Eq. 13 + basket-vanish fallback.
+
+``apply_update_batch`` keeps the mixed-batch signature by partitioning
+on the host; ``apply_update_batch_dense`` is the seed's
+compute-all-kinds-and-select implementation, retained as the benchmark
+baseline (benchmarks/bench_update_batch.py) and as a second oracle.
 
 Design notes (DESIGN.md §3.2): the variable-length suffix contractions of
 Eq. 10/12 are computed as *masked fixed-shape* weighted multi-hot
@@ -17,14 +30,24 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import decay
 from repro.core.tifu import (closed_form_basket_weights,
                              last_group_vector_padded,
                              weighted_multihot_scatter, user_vector_padded)
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM,
-                              KIND_NOOP, PAD_ID, StreamState, TifuParams,
+                              KIND_NOOP, PAD_ID, AddBatch, DelBasketBatch,
+                              DelItemBatch, StreamState, TifuParams,
                               UpdateBatch)
+from repro.kernels.ops import sparse_row_scatter
+
+# Scales only shrink (each new group multiplies uv_scale by k·r_g/(k+1),
+# each append multiplies lgv_scale by tau·r_b/(tau+1)); fold them back into
+# the raw rows before float32 precision suffers.  1e-18 keeps raw
+# magnitudes <= ~1e18, far inside f32 range, and is hit only after
+# hundreds of group openings per user.
+SCALE_FLOOR = 1e-18
 
 
 # ---------------------------------------------------------------------------
@@ -32,10 +55,12 @@ from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM,
 # ---------------------------------------------------------------------------
 
 def _multi_hot(items, n_items):
-    """items: i32[B] (PAD_ID padded) → f32[I]."""
+    """items: i32[B] (PAD_ID padded) → f32[I].  Set semantics (duplicate
+    ids count once), matching ``tifu.multi_hot`` and the sparse add
+    path's first-occurrence dedup."""
     valid = items >= 0
     ids = jnp.where(valid, items, 0)
-    return jnp.zeros((n_items,), jnp.float32).at[ids].add(
+    return jnp.zeros((n_items,), jnp.float32).at[ids].max(
         valid.astype(jnp.float32))
 
 
@@ -259,23 +284,308 @@ def _single_update(user_vec, last_group_vec, history, group_sizes, n_baskets,
 
 
 # ---------------------------------------------------------------------------
-# Micro-batch application
+# Sparse-delta add path (Eq. 7-9, DESIGN.md §3.3)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
-def apply_update_batch(state: StreamState, batch: UpdateBatch,
-                       params: TifuParams) -> StreamState:
-    """Apply a micro-batch of updates (one per distinct user).
+def _capacity_mask(nb, k, tau, max_baskets, max_groups, group_size):
+    """True where an add would overflow the padded history/group arrays
+    (the single source of truth for apply_add_batch's no-op guard and
+    the engine's dropped_adds metric)."""
+    new_group = (k == 0) | (tau >= group_size)
+    return (nb >= max_baskets) | (new_group & (k >= max_groups))
 
-    INVARIANT (enforced by streaming.engine): within one batch each user
-    appears at most once among non-noop rows.  Results are written back
-    as *deltas* with scatter-add, so noop rows (delta 0) may alias any
-    user.
+
+def _first_occurrence(ids):
+    """bool[U, W]: True on exactly one slot per distinct non-PAD id per
+    row (set-semantics dedup inside the support window).  Sort-based —
+    O(U·W·logW), no [U, W, W] pairwise intermediate; any representative
+    slot works because every consumer scatters a value that depends only
+    on the id, not the slot."""
+    u, w = ids.shape
+    order = jnp.argsort(ids, axis=1)
+    sorted_ids = jnp.take_along_axis(ids, order, axis=1)
+    first_sorted = jnp.concatenate(
+        [jnp.ones((u, 1), bool),
+         sorted_ids[:, 1:] != sorted_ids[:, :-1]], axis=1)
+    first = jnp.zeros((u, w), bool).at[
+        jnp.arange(u)[:, None], order].set(first_sorted)
+    return (ids >= 0) & first
+
+
+def _apply_add_batch(state: StreamState, batch: AddBatch,
+                     params: TifuParams):
+    """Apply a homogeneous basket-addition sub-batch with sparse deltas.
+
+    The support of one addition is the new basket plus the last group's
+    items (the only vectors Eq. 7-9 touch); everything else is a per-user
+    *scalar*: the Eq. 7 rescale ``k·r_g/(k+1)`` and the Eq. 8 rescale
+    ``tau·r_b/(tau+1)`` multiply ``uv_scale``/``lgv_scale`` instead of the
+    [n_items] rows.  No [batch, n_items] gather or scatter anywhere —
+    total state traffic is O(batch · (group_size+1) · max_basket_size).
+
+    INVARIANT (streaming.engine): each user appears at most once among
+    valid rows; padding rows carry zero deltas / unit factors and may
+    alias any user.
     """
     u = batch.user
-    gathered = (state.user_vecs[u], state.last_group_vecs[u],
-                state.history[u], state.group_sizes[u], state.n_baskets[u],
-                state.n_groups[u], state.err_mult[u])
+    n_items = state.n_items
+    n_bask, bh = state.max_baskets, state.max_basket_size
+    kmax = state.max_groups
+    m = params.group_size
+    f32 = state.user_vecs.dtype
+
+    # --- per-row scalars -----------------------------------------------------
+    k = state.n_groups[u]                              # [U]
+    nb = state.n_baskets[u]
+    s = state.uv_scale[u]
+    sig = state.lgv_scale[u]
+    em = state.err_mult[u]
+    tau = jnp.where(k > 0, state.group_sizes[u, jnp.maximum(k - 1, 0)], 0)
+    new_group = (k == 0) | (tau >= m)
+    # Capacity guard: a full history row is NOT all-PAD, so the sparse
+    # history write below would corrupt it (and group_sizes at k == kmax).
+    # Adds to full users are no-ops; the engine sizes N/K so real traffic
+    # never hits this (deletions free rows) and surfaces drops via
+    # apply_add_batch_counted.
+    at_capacity = _capacity_mask(nb, k, tau, n_bask, kmax, m)
+    valid = batch.valid & ~at_capacity
+    items = jnp.where(valid[:, None], batch.items, PAD_ID)
+    kf = jnp.maximum(k, 1).astype(f32)
+    tauf = tau.astype(f32)
+    r_b = jnp.asarray(params.r_b, f32)
+    r_g = jnp.asarray(params.r_g, f32)
+
+    # --- sparse support: last group's history rows + the new basket ----------
+    start = nb - tau                                   # [U]
+    row_t = jnp.arange(m)[None, :]                     # [1, m]
+    rows_valid = (row_t < tau[:, None]) & (k > 0)[:, None] \
+        & valid[:, None]
+    grp_rows = jnp.clip(start[:, None] + row_t, 0, n_bask - 1)
+    old_ids = state.history[u[:, None], grp_rows]      # [U, m, Bh]
+    old_ids = jnp.where(rows_valid[:, :, None], old_ids,
+                        PAD_ID).reshape(u.shape[0], m * bh)
+    ids_all = jnp.concatenate([old_ids, items], axis=1)     # [U, W]
+    first = _first_occurrence(ids_all)
+    bfirst = _first_occurrence(items)                       # [U, Bb]
+    zeros_old = jnp.zeros(old_ids.shape, f32)
+
+    # gather the true last-group values on the support (O(U·W), sparse)
+    lraw = state.last_group_vecs[u[:, None], jnp.clip(ids_all, 0,
+                                                      n_items - 1)]
+    ltrue = lraw * sig[:, None]
+
+    # --- scale updates (the dense part of Eq. 7/8, now scalar) ---------------
+    s_ratio = jnp.where(new_group & (k > 0),
+                        kf * r_g / (kf + 1.0), 1.0)    # k==0: s unchanged
+    s_new = s * s_ratio
+    sig_ratio = jnp.where(new_group, 1.0 / sig,        # reset sigma' = 1
+                          tauf * r_b / (jnp.maximum(tauf, 1.0) + 1.0))
+    sig_ratio = jnp.where(valid, sig_ratio, 1.0)
+    sig_new = sig * sig_ratio
+
+    # --- sparse deltas into the raw user rows --------------------------------
+    # Scenario 2 (Eq. 8+9): u' = u + (lgv' - lgv)/k with
+    # lgv' - lgv = (alpha-1)·lgv + beta·v_b, alpha = tau·r_b/(tau+1).
+    alpha = tauf * r_b / (tauf + 1.0)
+    beta = 1.0 / (tauf + 1.0)
+    l_part = jnp.where(new_group[:, None], 0.0,
+                       first * (alpha - 1.0)[:, None] * ltrue
+                       / (kf * s)[:, None])
+    # Scenario 1 (Eq. 7): u' = (k·r_g·u + v_b)/(k+1); the rescale lives in
+    # s_new, the sparse part is v_b/((k+1)·s_new).
+    b_coeff = jnp.where(new_group, 1.0 / ((kf * (k > 0) + 1.0) * s_new),
+                        beta / (kf * s))
+    user_vals = l_part + jnp.concatenate(
+        [zeros_old, bfirst * b_coeff[:, None]], axis=1)
+
+    # --- sparse deltas into the raw last-group rows --------------------------
+    # Scenario 1 resets lgv to v_b: subtract the old raw values on their
+    # support (exact zeroing) and add 1/sig_new at the basket ids.
+    # Scenario 2 appends: add v_b/((tau+1)·sig_new) at the basket ids.
+    lgv_reset = first * (-lraw) + jnp.concatenate(
+        [zeros_old, bfirst / sig_new[:, None]], axis=1)
+    lgv_append = jnp.concatenate(
+        [zeros_old, bfirst / ((tauf + 1.0) * sig_new)[:, None]], axis=1)
+    lgv_vals = jnp.where(new_group[:, None], lgv_reset, lgv_append)
+
+    user_vecs = sparse_row_scatter(state.user_vecs, u, ids_all, user_vals)
+    lg_vecs = sparse_row_scatter(state.last_group_vecs, u, ids_all, lgv_vals)
+
+    # --- per-row scalar/bookkeeping scatters (no [batch, N, B] dense delta) --
+    valid_i = valid.astype(jnp.int32)
+    err_new = jnp.maximum(
+        em * jnp.where(k > 0, decay.error_shrink_factor(kf, params.r_g),
+                       0.0), 1e-30)
+    err_ratio = jnp.where(valid & new_group, err_new / em, 1.0)
+    gs_slot = jnp.where(new_group, jnp.minimum(k, kmax - 1),
+                        jnp.maximum(k - 1, 0))
+    hist_slot = jnp.minimum(nb, n_bask - 1)
+    # the target history row is all PAD (-1); adding (item - PAD) writes
+    # the basket without a dense [batch, N, B] delta block.
+    hist_delta = jnp.where(valid[:, None], items - PAD_ID, 0)
+
+    dropped = jnp.sum((at_capacity & batch.valid).astype(jnp.int32))
+    return StreamState(
+        user_vecs=user_vecs,
+        last_group_vecs=lg_vecs,
+        history=state.history.at[u, hist_slot].add(hist_delta),
+        group_sizes=state.group_sizes.at[u, gs_slot].add(valid_i),
+        n_baskets=state.n_baskets.at[u].add(valid_i),
+        n_groups=state.n_groups.at[u].add(valid_i
+                                          * new_group.astype(jnp.int32)),
+        err_mult=state.err_mult.at[u].multiply(err_ratio),
+        uv_scale=state.uv_scale.at[u].multiply(
+            jnp.where(valid, s_ratio, 1.0)),
+        lgv_scale=state.lgv_scale.at[u].multiply(sig_ratio),
+    ), dropped
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_add_batch(state: StreamState, batch: AddBatch,
+                    params: TifuParams) -> StreamState:
+    """See _apply_add_batch (the drop count is dead-code-eliminated)."""
+    return _apply_add_batch(state, batch, params)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_add_batch_counted(state: StreamState, batch: AddBatch,
+                            params: TifuParams):
+    """As apply_add_batch, also returning the number of valid rows the
+    capacity guard masked to no-ops (i32 scalar) — one fused program, so
+    the engine's dropped_adds metric costs no extra dispatch."""
+    return _apply_add_batch(state, batch, params)
+
+
+# ---------------------------------------------------------------------------
+# Dense masked decremental sub-batches (their support IS the history)
+# ---------------------------------------------------------------------------
+
+def _gather_true(state: StreamState, u):
+    """Gather per-user state rows with scales folded in (true values)."""
+    s = state.uv_scale[u]
+    sig = state.lgv_scale[u]
+    return (state.user_vecs[u] * s[:, None],
+            state.last_group_vecs[u] * sig[:, None],
+            state.history[u], state.group_sizes[u], state.n_baskets[u],
+            state.n_groups[u], state.err_mult[u], s, sig)
+
+
+def _scatter_del_deltas(state: StreamState, u, valid, old, new):
+    """Write masked true-value deltas back into the scaled raw storage.
+
+    Raw deltas are divided by the (unchanged) per-user scales; invalid
+    rows carry zero deltas, so padding rows may alias any user.  The
+    last-group raw row is *set* to new_true/sigma (its support after a
+    deletion is recomputed from history, DESIGN.md §3.3 invariant)."""
+    uv, lgv, hist, gs, nb, ng, em, s, sig = old
+    n_uv, n_lgv, n_hist, n_gs, n_nb, n_ng, n_em = new
+    vf = valid[:, None]
+    duv = jnp.where(vf, (n_uv - uv) / s[:, None], 0.0)
+    # lgv raw' = new_true/sigma (support re-derived from history)
+    dlgv = jnp.where(vf, n_lgv / sig[:, None] - state.last_group_vecs[u],
+                     0.0)
+    return StreamState(
+        user_vecs=state.user_vecs.at[u].add(duv),
+        last_group_vecs=state.last_group_vecs.at[u].add(dlgv),
+        history=state.history.at[u].add(
+            jnp.where(valid[:, None, None], n_hist - hist, 0)),
+        group_sizes=state.group_sizes.at[u].add(
+            jnp.where(valid[:, None], n_gs - gs, 0)),
+        n_baskets=state.n_baskets.at[u].add(jnp.where(valid, n_nb - nb, 0)),
+        n_groups=state.n_groups.at[u].add(jnp.where(valid, n_ng - ng, 0)),
+        err_mult=state.err_mult.at[u].multiply(
+            jnp.where(valid, n_em / em, 1.0)),
+        uv_scale=state.uv_scale,
+        lgv_scale=state.lgv_scale,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
+                           params: TifuParams) -> StreamState:
+    """Apply a homogeneous basket-deletion sub-batch (Eq. 10-12).
+
+    Dense masked per-user rows: the paper's decremental update is linear
+    in the surviving history, so gathering the touched users' dense rows
+    matches the true cost — but only ONE rule is evaluated (the seed
+    mixed path computed all four and selected)."""
+    u = batch.user
+    old = _gather_true(state, u)
+    uv, lgv, hist, gs, nb, ng, em = old[:7]
+    valid = batch.valid & (nb > 0)
+    safe_pos = jnp.clip(batch.pos, 0, jnp.maximum(nb - 1, 0))
+    new = jax.vmap(
+        lambda *a: _delete_basket(*a, params))(uv, lgv, hist, gs, nb, ng,
+                                               em, safe_pos)
+    return _scatter_del_deltas(state, u, valid, old, new)
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
+                         params: TifuParams) -> StreamState:
+    """Apply a homogeneous item-deletion sub-batch (Eq. 13 + fallback)."""
+    u = batch.user
+    old = _gather_true(state, u)
+    uv, lgv, hist, gs, nb, ng, em = old[:7]
+    valid = batch.valid & (nb > 0)
+    safe_pos = jnp.clip(batch.pos, 0, jnp.maximum(nb - 1, 0))
+    new = jax.vmap(
+        lambda *a: _delete_item(*a, params))(uv, lgv, hist, gs, nb, ng, em,
+                                             safe_pos, batch.item)
+    return _scatter_del_deltas(state, u, valid, old, new)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-batch entry points
+# ---------------------------------------------------------------------------
+
+def apply_update_batch(state: StreamState, batch: UpdateBatch,
+                       params: TifuParams) -> StreamState:
+    """Apply a mixed micro-batch by host-partitioning it into homogeneous
+    kind sub-batches (compat shim over the partitioned pipeline).
+
+    INVARIANT (enforced by streaming.engine): within one batch each user
+    appears at most once among non-noop rows.  The sub-batches therefore
+    touch disjoint users and can be applied in any order.  Requires
+    concrete (non-traced) ``batch.kind``; fully-traced callers should
+    build homogeneous sub-batches themselves (see configs/tifu_knn.py).
+    """
+    kind = np.asarray(jax.device_get(batch.kind))
+    add_rows = np.nonzero(kind == KIND_ADD_BASKET)[0]
+    delb_rows = np.nonzero(kind == KIND_DEL_BASKET)[0]
+    deli_rows = np.nonzero(kind == KIND_DEL_ITEM)[0]
+    cap = int(kind.shape[0])
+    user = np.asarray(jax.device_get(batch.user))
+    if add_rows.size:
+        items = np.asarray(jax.device_get(batch.basket_items))
+        state = apply_add_batch(
+            state, AddBatch.build(user[add_rows], items[add_rows],
+                                  items.shape[1], pad_cap=cap), params)
+    if delb_rows.size:
+        pos = np.asarray(jax.device_get(batch.basket_pos))
+        state = apply_del_basket_batch(
+            state, DelBasketBatch.build(user[delb_rows], pos[delb_rows],
+                                        pad_cap=cap), params)
+    if deli_rows.size:
+        pos = np.asarray(jax.device_get(batch.basket_pos))
+        item = np.asarray(jax.device_get(batch.item))
+        state = apply_del_item_batch(
+            state, DelItemBatch.build(user[deli_rows], pos[deli_rows],
+                                      item[deli_rows], pad_cap=cap), params)
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_update_batch_dense(state: StreamState, batch: UpdateBatch,
+                             params: TifuParams) -> StreamState:
+    """The seed's mixed-kind dense path: gather [batch, n_items] rows,
+    compute ALL update rules per row, select one, scatter dense deltas.
+
+    Retained as the benchmark baseline (bench_update_batch.py measures
+    the partitioned pipeline against it) and as a second oracle."""
+    u = batch.user
+    *gathered, s, sig = _gather_true(state, u)
+    gathered = tuple(gathered)
     updated = jax.vmap(
         lambda uv, lgv, h, gs, nb, ng, em, kind, items, pos, item:
         _single_update(uv, lgv, h, gs, nb, ng, em, kind, items, pos, item,
@@ -284,19 +594,28 @@ def apply_update_batch(state: StreamState, batch: UpdateBatch,
         batch.item)
     deltas = tuple(new - old for new, old in zip(updated, gathered))
     return StreamState(
-        user_vecs=state.user_vecs.at[u].add(deltas[0]),
-        last_group_vecs=state.last_group_vecs.at[u].add(deltas[1]),
+        user_vecs=state.user_vecs.at[u].add(deltas[0] / s[:, None]),
+        last_group_vecs=state.last_group_vecs.at[u].add(
+            deltas[1] / sig[:, None]),
         history=state.history.at[u].add(deltas[2]),
         group_sizes=state.group_sizes.at[u].add(deltas[3]),
         n_baskets=state.n_baskets.at[u].add(deltas[4]),
         n_groups=state.n_groups.at[u].add(deltas[5]),
         err_mult=state.err_mult.at[u].add(deltas[6]),
+        uv_scale=state.uv_scale,
+        lgv_scale=state.lgv_scale,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("params",))
+# ---------------------------------------------------------------------------
+# Maintenance passes
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
 def refresh_users(state: StreamState, users, params: TifuParams) -> StreamState:
-    """Exact from-scratch refresh of selected users (stability tracker)."""
+    """Exact from-scratch refresh of selected users (stability tracker).
+
+    Resets the per-user scales to 1 (the fresh rows are true values)."""
     h = state.history[users]
     gs = state.group_sizes[users]
     ng = state.n_groups[users]
@@ -312,4 +631,29 @@ def refresh_users(state: StreamState, users, params: TifuParams) -> StreamState:
         n_baskets=state.n_baskets,
         n_groups=state.n_groups,
         err_mult=state.err_mult.at[users].set(1.0),
+        uv_scale=state.uv_scale.at[users].set(1.0),
+        lgv_scale=state.lgv_scale.at[users].set(1.0),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def renormalize_users(state: StreamState, users) -> StreamState:
+    """Fold the per-user scales back into the raw rows (scale -> 1).
+
+    Dense per selected user but value-preserving and rare: the engine
+    triggers it only when a scale approaches SCALE_FLOOR (hundreds of
+    group openings per user between triggers)."""
+    s = state.uv_scale[users]
+    sig = state.lgv_scale[users]
+    return StreamState(
+        user_vecs=state.user_vecs.at[users].multiply(s[:, None]),
+        last_group_vecs=state.last_group_vecs.at[users].multiply(
+            sig[:, None]),
+        history=state.history,
+        group_sizes=state.group_sizes,
+        n_baskets=state.n_baskets,
+        n_groups=state.n_groups,
+        err_mult=state.err_mult,
+        uv_scale=state.uv_scale.at[users].set(1.0),
+        lgv_scale=state.lgv_scale.at[users].set(1.0),
     )

@@ -1,12 +1,16 @@
 """Pallas TPU kernels (+ pure-jnp oracles and jit dispatchers).
 
-knn_topk          — fused similarity × streaming top-k (TIFU serving,
-                    retrieval_cand cells)
-decayed_scatter   — one-hot-matmul weighted multi-hot scatter (TIFU
-                    user vectors; EmbeddingBag substrate)
-flash_attention   — blocked online-softmax attention (LM train/prefill)
+knn_topk           — fused similarity × streaming top-k (TIFU serving,
+                     retrieval_cand cells)
+decayed_scatter    — one-hot-matmul weighted multi-hot scatter (TIFU
+                     user vectors; EmbeddingBag substrate)
+sparse_row_scatter — sparse per-row scatter-add into the [M, I] state
+                     (batched add-path deltas, DESIGN.md §3.3)
+flash_attention    — blocked online-softmax attention (LM train/prefill)
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import flash_attention, knn_topk, multihot_scatter
+from repro.kernels.ops import (flash_attention, knn_topk, multihot_scatter,
+                               sparse_row_scatter)
 
-__all__ = ["ops", "ref", "flash_attention", "knn_topk", "multihot_scatter"]
+__all__ = ["ops", "ref", "flash_attention", "knn_topk", "multihot_scatter",
+           "sparse_row_scatter"]

@@ -5,7 +5,7 @@ bert4rec ``retrieval_cand`` cells: Q queries against M corpus rows,
 returning per-query top-k WITHOUT materializing the [Q, M] score matrix
 in HBM — the win over the reference path at M = 10⁶.
 
-Design (DESIGN.md §3.3):
+Design (DESIGN.md §3.4):
   grid = (Q/bq, M/bm), M innermost (sequential).  Per step the MXU
   computes a [bq, bm] score tile in VMEM (2·q@cᵀ − |c|², the monotone
   euclidean surrogate); a running [bq, k] top-k buffer lives in VMEM

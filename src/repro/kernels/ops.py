@@ -15,6 +15,8 @@ from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.knn_topk import knn_topk as _knn_pallas
+from repro.kernels.sparse_row_scatter import \
+    sparse_row_scatter as _sparse_scatter_pallas
 
 
 def _on_tpu() -> bool:
@@ -41,6 +43,23 @@ def multihot_scatter(ids, weights, n_items: int, impl: str = "auto"):
                                                   or not _on_tpu()))
     return decayed_scatter(ids, weights, n_items,
                            interpret=(impl == "interpret" or not _on_tpu()))
+
+
+def sparse_row_scatter(table, rows, ids, vals, impl: str = "auto"):
+    """Sparse per-row scatter-add into a [M, I] table (add-path deltas).
+
+    XLA's native scatter is already O(U·W) on CPU/GPU; the Pallas kernel
+    is the TPU path (streams only the touched rows, in place).
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.sparse_row_scatter_ref(table, rows, ids, vals)
+    n_items = table.shape[1]
+    for bi in (512, 256, 128):
+        if n_items % bi == 0:
+            return _sparse_scatter_pallas(
+                table, rows, ids, vals, bi=bi,
+                interpret=(impl == "interpret" or not _on_tpu()))
+    return ref.sparse_row_scatter_ref(table, rows, ids, vals)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,

@@ -38,6 +38,24 @@ def decayed_scatter_ref(ids, weights, n_items: int):
         jnp.where(valid, flat, 0)].add(jnp.where(valid, w, 0.0))
 
 
+def sparse_row_scatter_ref(table, rows, ids, vals):
+    """Sparse per-row scatter-add into a [M, I] table.
+
+    table: f32[M, I]; rows: i32[U]; ids: i32[U, W] (PAD=-1 skipped);
+    vals: f32[U, W].  Returns table with
+
+        out[rows[r], ids[r, w]] += vals[r, w]      for ids[r, w] >= 0.
+
+    Duplicate (row, id) pairs accumulate.  Only O(U·W) elements of the
+    table are addressed — this is the batched add path's delta applier
+    (DESIGN.md §3.3).
+    """
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    v = jnp.where(valid, vals, 0.0)
+    return table.at[rows[:, None], safe].add(v)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
                         scale: float | None = None):
     """Plain attention oracle. q,k,v: [B,S,H,D] (H == KV heads here)."""

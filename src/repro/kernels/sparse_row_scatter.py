@@ -1,0 +1,104 @@
+"""Sparse per-row scatter-add into a [M, I] table (TPU Pallas).
+
+The batched add path (core.updates.apply_add_batch, DESIGN.md §3.3)
+produces per-event deltas whose support is only the touched items:
+``(rows[U], ids[U, W], vals[U, W])`` with W ≪ I.  This kernel applies
+
+    table[rows[r], ids[r, w]] += vals[r, w]        (PAD ids skipped)
+
+in place (``input_output_aliases``), so the full [M, I] state never
+leaves HBM and only the touched *rows* are streamed through VMEM.
+
+TPUs dislike data-dependent scatter, so per tile the update is a compare
++ reduce: the [W, bi] one-hot of the row's ids against the item tile's
+iota, contracted with vals.  Grid = (I / bi item tiles, U batch rows),
+batch rows innermost and **sorted by target row** by the dispatcher:
+duplicate target rows become *consecutive* grid steps, which the kernel
+accumulates in a VMEM scratch and writes back once per (row, tile) block
+— revisiting an output block non-consecutively would be undefined.
+
+The scalar-prefetched ``rows`` drive the block index map (the classic
+embedding-update pattern), so a step only fetches the [1, bi] tile of
+the row it actually updates: HBM traffic is O(U·I) worst case (touched
+rows only) instead of O(M·I), and compute is O(U·W·I/bi) compares per
+tile sweep.  A future refinement (ROADMAP) is a per-row touched-tile
+list to skip clean tiles and reach O(U·W) traffic on TPU as well; the
+XLA reference path (kernels.ref.sparse_row_scatter_ref) is already
+O(U·W) and is what CPU uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, ids_ref, vals_ref, tab_ref, out_ref, acc, *, bi: int):
+    ii = pl.program_id(0)
+    r = pl.program_id(1)
+    nr = pl.num_programs(1)
+
+    row = rows_ref[r]
+    prev_same = jnp.where(r > 0, rows_ref[jnp.maximum(r - 1, 0)] == row,
+                          False)
+    next_same = jnp.where(r < nr - 1,
+                          rows_ref[jnp.minimum(r + 1, nr - 1)] == row, False)
+
+    @pl.when(jnp.logical_not(prev_same))
+    def _load():
+        acc[...] = tab_ref[0, :]
+
+    ids = ids_ref[0, :]                              # [W] i32, PAD=-1
+    vals = vals_ref[0, :]                            # [W] f32
+    base = ii * bi
+    tile = base + jax.lax.broadcasted_iota(jnp.int32,
+                                           (ids.shape[0], bi), 1)
+    onehot = (ids[:, None] == tile).astype(jnp.float32)   # PAD never matches
+    acc[...] += jnp.sum(onehot * vals[:, None], axis=0)
+
+    @pl.when(jnp.logical_not(next_same))
+    def _store():
+        out_ref[0, :] = acc[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
+def sparse_row_scatter(table, rows, ids, vals, bi: int = 512,
+                       interpret: bool = False):
+    """table f32[M, I] (+)= scatter(rows i32[U], ids i32[U, W] PAD=-1,
+    vals f32[U, W]).  Returns the updated table (aliased in place).
+
+    Duplicate rows are handled (sorted internally so they land on
+    consecutive grid steps and accumulate).  Requires I % bi == 0 —
+    the ops.py dispatcher picks bi / falls back to the XLA reference.
+    """
+    m, n_items = table.shape
+    u, w = ids.shape
+    bi = min(bi, n_items)
+    assert n_items % bi == 0, (n_items, bi)
+    order = jnp.argsort(rows)
+    rows_s = jnp.clip(rows[order], 0, m - 1).astype(jnp.int32)
+    ids_s = ids[order]
+    vals_s = jnp.where(ids_s >= 0, vals[order], 0.0)
+
+    grid = (n_items // bi, u)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda ii, r, rows: (r, 0)),
+            pl.BlockSpec((1, w), lambda ii, r, rows: (r, 0)),
+            pl.BlockSpec((1, bi), lambda ii, r, rows: (rows[r], ii)),
+        ],
+        out_specs=pl.BlockSpec((1, bi), lambda ii, r, rows: (rows[r], ii)),
+        scratch_shapes=[pltpu.VMEM((bi,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bi=bi),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
+        input_output_aliases={3: 0},   # table (after the prefetch arg)
+        interpret=interpret,
+    )(rows_s, ids_s, vals_s, table)

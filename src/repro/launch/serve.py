@@ -42,7 +42,7 @@ def main():
     print(f"loaded {n} baskets for {n_users} users in "
           f"{time.perf_counter()-t0:.1f}s")
 
-    corpus = store.state.user_vecs
+    corpus = store.state.materialized_user_vecs()
     rng = np.random.default_rng(0)
     for r in range(args.requests):
         users = rng.choice(n_users, size=min(args.batch, n_users),

@@ -4,37 +4,47 @@ Implements Algorithm 1 of the paper (joint incremental/decremental state
 updates) as a batched SPMD program:
 
   * incoming events (basket additions, basket/item deletion requests)
-    are buffered and cut into fixed-shape ``UpdateBatch`` micro-batches;
+    are buffered in per-user pending queues and cut into micro-batches
+    of at most one event per user (conflicting events for the same user
+    wait for the next batch — this preserves per-user sequential
+    semantics while letting independent users update in parallel,
+    exactly the paper's user-level parallelism);
 
-  * within a micro-batch each user appears at most once (conflicting
-    events for the same user stay in the buffer for the next batch —
-    this preserves per-user sequential semantics while letting
-    independent users update in parallel, exactly the paper's
-    user-level parallelism);
+  * each micro-batch is **partitioned by event kind** into homogeneous
+    ``AddBatch`` / ``DelBasketBatch`` / ``DelItemBatch`` sub-batches
+    (DESIGN.md §4), so each compiled program runs exactly one update
+    rule — the add path applies sparse deltas (O(basket) state traffic),
+    the decremental paths pay their paper-given linear cost;
 
   * an idempotent update log (sequence numbers + processed watermark)
     makes recovery exactly-once: after restoring a checkpoint, events
     with seqno <= watermark are skipped on replay;
 
   * users whose numerical-error bound crossed the stability threshold
-    are refreshed from scratch after the batch (core.stability).
+    are refreshed from scratch after the batch (core.stability), and
+    users whose representation scale approaches SCALE_FLOOR are
+    renormalized in place (core.updates.renormalize_users).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import json
 import os
 import time
 from collections import deque
-from typing import Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stability
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
-                              KIND_DEL_ITEM, PAD_ID, TifuParams, UpdateBatch)
-from repro.core.updates import apply_update_batch, refresh_users
+                              KIND_DEL_ITEM, PAD_ID, AddBatch,
+                              DelBasketBatch, DelItemBatch, TifuParams)
+from repro.core.updates import (SCALE_FLOOR, apply_add_batch_counted,
+                                apply_del_basket_batch, apply_del_item_batch,
+                                refresh_users, renormalize_users)
 from repro.streaming.state_store import StateStore
 
 
@@ -54,6 +64,9 @@ class EngineMetrics:
     events_processed: int = 0
     batches: int = 0
     refreshes: int = 0
+    renormalizations: int = 0
+    # adds masked to no-ops by apply_add_batch's capacity guard
+    dropped_adds: int = 0
     last_batch_seconds: float = 0.0
 
 
@@ -62,18 +75,36 @@ class StreamingEngine:
 
     def __init__(self, store: StateStore, params: TifuParams,
                  batch_size: int = 256,
-                 stability_target_rel_err: Optional[float] = 1e-2):
+                 stability_target_rel_err: Optional[float] = 1e-2,
+                 renorm_check_interval: int = 64):
         self.store = store
         self.params = params
         self.batch_size = batch_size
-        self.buffer: deque[Event] = deque()
+        # The renormalization probe must fire before a scale that passed
+        # the last probe can underflow f32 (raw rows scale as 1/scale).
+        # A user gets at most one add per batch; the worst per-add shrink
+        # factor is min(r_b, r_g)/2 (k=1 group opening / tau=1 append),
+        # so cap the interval I at f^I >= 1e-14: a scale just above the
+        # probe floor (SCALE_FLOOR·1e2) then stays above ~1e-30 — raw
+        # magnitudes <= ~1e30, safely inside f32 range.
+        f = min(params.r_b, params.r_g) / 2.0
+        sound = int(np.floor(np.log(1e-14) / np.log(f))) if f < 1.0 else 64
+        self.renorm_check_interval = max(1, min(renorm_check_interval,
+                                                sound))
+        # Per-user pending queues + a min-heap of (head seqno, user):
+        # cutting a batch pops at most one event per user in seqno order
+        # and costs O(taken·log users) — a hot user with a deep queue no
+        # longer forces a rescan of the whole buffer every step.
+        self._queues: Dict[int, deque] = {}
+        self._heap: List[tuple] = []   # a user is in the heap iff its
+        self._n_pending = 0            # queue exists in _queues
         # Exactly-once bookkeeping.  Conflict deferral (one event per user
         # per micro-batch) processes events OUT of seqno order, so a plain
         # high-watermark would drop deferred-but-unprocessed events on
         # replay.  We track the contiguous frontier + the sparse set of
         # processed seqnos above it.
         self.watermark = -1                 # all seqnos <= this are done
-        self._processed_above: set[int] = set()
+        self._processed_above: set = set()
         self._next_seqno = 0
         self.metrics = EngineMetrics()
         if stability_target_rel_err is not None:
@@ -83,6 +114,19 @@ class StreamingEngine:
             self.err_threshold = None
 
     # -- ingestion ------------------------------------------------------------
+
+    @property
+    def n_pending(self) -> int:
+        """Number of buffered (not yet applied) events."""
+        return self._n_pending
+
+    def _enqueue(self, ev: Event) -> None:
+        q = self._queues.get(ev.user)
+        if q is None:
+            q = self._queues[ev.user] = deque()
+            heapq.heappush(self._heap, (ev.seqno, ev.user))
+        q.append(ev)
+        self._n_pending += 1
 
     def submit(self, events: Iterable[Event]) -> None:
         for ev in events:
@@ -94,7 +138,7 @@ class StreamingEngine:
                 continue  # replay of an already-processed event: skip
             else:
                 self._next_seqno = max(self._next_seqno, ev.seqno + 1)
-            self.buffer.append(ev)
+            self._enqueue(ev)
 
     def add_basket(self, user: int, items: Sequence[int]) -> None:
         self.submit([Event(KIND_ADD_BASKET, user,
@@ -109,51 +153,55 @@ class StreamingEngine:
     # -- micro-batch processing -------------------------------------------------
 
     def _cut_batch(self) -> List[Event]:
-        """Take up to batch_size events, at most one per user, preserving
-        per-user order (later events for a busy user stay buffered)."""
-        taken, skipped, users = [], [], set()
-        while self.buffer and len(taken) < self.batch_size:
-            ev = self.buffer.popleft()
-            if ev.user in users:
-                skipped.append(ev)
+        """Take up to batch_size events in seqno order, at most one per
+        user; a user's later events stay queued for the next batch."""
+        taken: List[Event] = []
+        requeue = []
+        while self._heap and len(taken) < self.batch_size:
+            _, user = heapq.heappop(self._heap)
+            q = self._queues[user]
+            taken.append(q.popleft())
+            if q:
+                requeue.append((q[0].seqno, user))
             else:
-                users.add(ev.user)
-                taken.append(ev)
-        # NOTE: extendleft reverses; re-insert in original order.
-        for ev in reversed(skipped):
-            self.buffer.appendleft(ev)
+                del self._queues[user]
+        for entry in requeue:
+            heapq.heappush(self._heap, entry)
+        self._n_pending -= len(taken)
         return taken
 
-    def _to_update_batch(self, events: List[Event]) -> UpdateBatch:
-        u = self.batch_size
+    def _apply_events(self, events: List[Event]) -> None:
+        """Partition a micro-batch by kind and run one homogeneous
+        compiled program per kind present (users are disjoint across the
+        sub-batches, so application order is irrelevant)."""
+        adds = [ev for ev in events if ev.kind == KIND_ADD_BASKET]
+        delb = [ev for ev in events if ev.kind == KIND_DEL_BASKET]
+        deli = [ev for ev in events if ev.kind == KIND_DEL_ITEM]
+        cap = self.batch_size
         b = self.store.cfg.max_basket_size
-        kind = np.zeros(u, np.int32)
-        user = np.zeros(u, np.int32)
-        items = np.full((u, b), PAD_ID, np.int32)
-        pos = np.zeros(u, np.int32)
-        item = np.full(u, PAD_ID, np.int32)
-        for r, ev in enumerate(events):
-            kind[r] = ev.kind
-            user[r] = ev.user
-            pos[r] = ev.pos
-            item[r] = ev.item
-            if ev.items is not None:
-                ids = np.asarray(ev.items, np.int32)[:b]
-                items[r, :len(ids)] = ids
-        return UpdateBatch(kind=jnp.asarray(kind), user=jnp.asarray(user),
-                           basket_items=jnp.asarray(items),
-                           basket_pos=jnp.asarray(pos),
-                           item=jnp.asarray(item))
+        if adds:
+            batch = AddBatch.build([ev.user for ev in adds],
+                                   [ev.items for ev in adds], b, pad_cap=cap)
+            # the counted variant surfaces capacity drops (masked to
+            # no-ops by the guard) from the same fused program
+            self.store.state, dropped = apply_add_batch_counted(
+                self.store.state, batch, self.params)
+            self.metrics.dropped_adds += int(dropped)
+        if delb:
+            batch = DelBasketBatch.build([ev.user for ev in delb],
+                                         [ev.pos for ev in delb],
+                                         pad_cap=cap)
+            self.store.state = apply_del_basket_batch(self.store.state,
+                                                      batch, self.params)
+        if deli:
+            batch = DelItemBatch.build([ev.user for ev in deli],
+                                       [ev.pos for ev in deli],
+                                       [ev.item for ev in deli], pad_cap=cap)
+            self.store.state = apply_del_item_batch(self.store.state, batch,
+                                                    self.params)
 
-    def step(self) -> int:
-        """Process one micro-batch. Returns number of events applied."""
-        events = self._cut_batch()
-        if not events:
-            return 0
-        t0 = time.perf_counter()
-        batch = self._to_update_batch(events)
-        self.store.state = apply_update_batch(self.store.state, batch,
-                                              self.params)
+    def _maintain(self) -> None:
+        """Stability refreshes + scale renormalization after a batch."""
         if self.err_threshold is not None:
             err = np.asarray(self.store.state.err_mult)
             bad = np.nonzero(err > self.err_threshold)[0]
@@ -162,6 +210,31 @@ class StreamingEngine:
                     self.store.state, jnp.asarray(bad, jnp.int32),
                     self.params)
                 self.metrics.refreshes += int(bad.size)
+        # Scales take thousands of events per user to approach the floor
+        # (each group opening shrinks uv_scale by ~r_g), so probe them
+        # only every Nth batch — the gate itself is a blocking sync and
+        # must stay off the per-step hot path.
+        if self.metrics.batches % self.renorm_check_interval:
+            return
+        floor = SCALE_FLOOR * 1e2   # renormalize well before the floor
+        min_scale = float(jnp.minimum(self.store.state.uv_scale.min(),
+                                      self.store.state.lgv_scale.min()))
+        if min_scale < floor:
+            small = np.nonzero(
+                (np.asarray(self.store.state.uv_scale) < floor)
+                | (np.asarray(self.store.state.lgv_scale) < floor))[0]
+            self.store.state = renormalize_users(
+                self.store.state, jnp.asarray(small, jnp.int32))
+            self.metrics.renormalizations += int(small.size)
+
+    def step(self) -> int:
+        """Process one micro-batch. Returns number of events applied."""
+        events = self._cut_batch()
+        if not events:
+            return 0
+        t0 = time.perf_counter()
+        self._apply_events(events)
+        self._maintain()
         for ev in events:
             self._processed_above.add(ev.seqno)
         while self.watermark + 1 in self._processed_above:
@@ -197,4 +270,6 @@ class StreamingEngine:
         self.watermark = meta["watermark"]
         self._processed_above = set(meta.get("processed_above", []))
         self._next_seqno = meta["next_seqno"]
-        self.buffer.clear()
+        self._queues.clear()
+        self._heap.clear()
+        self._n_pending = 0

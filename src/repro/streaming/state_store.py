@@ -48,6 +48,8 @@ def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
         n_baskets=NamedSharding(mesh, u),
         n_groups=NamedSharding(mesh, u),
         err_mult=NamedSharding(mesh, u),
+        uv_scale=NamedSharding(mesh, u),
+        lgv_scale=NamedSharding(mesh, u),
     )
 
 
@@ -83,6 +85,8 @@ class StateStore:
             "n_baskets": np.asarray(self.state.n_baskets),
             "n_groups": np.asarray(self.state.n_groups),
             "err_mult": np.asarray(self.state.err_mult),
+            "uv_scale": np.asarray(self.state.uv_scale),
+            "lgv_scale": np.asarray(self.state.lgv_scale),
         }
         with open(tmp, "wb") as f:
             np.savez_compressed(f, **leaves)
@@ -100,8 +104,14 @@ class StateStore:
         step = meta["step"]
         path = os.path.join(directory, f"state_{step:010d}.npz")
         data = np.load(path)
-        state = StreamState(**{k: jax.numpy.asarray(data[k])
-                               for k in data.files})
+        leaves = {k: jax.numpy.asarray(data[k]) for k in data.files}
+        # migrate pre-scaled-representation checkpoints: scale 1 == the
+        # old unscaled storage
+        for scale in ("uv_scale", "lgv_scale"):
+            if scale not in leaves:
+                leaves[scale] = jax.numpy.ones(
+                    leaves["err_mult"].shape, leaves["err_mult"].dtype)
+        state = StreamState(**leaves)
         if self.mesh is not None:
             sh = state_shardings(self.cfg, self.mesh)
             state = jax.tree.map(jax.device_put, state, sh)

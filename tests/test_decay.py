@@ -9,6 +9,8 @@ These are the paper's core mathematical claims:
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import decay

@@ -10,6 +10,7 @@ from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.knn_topk import knn_topk
+from repro.kernels.sparse_row_scatter import sparse_row_scatter
 
 
 @pytest.mark.parametrize("q,m,d,k,bq,bm", [
@@ -93,6 +94,46 @@ def test_decayed_scatter_builds_tifu_user_vector(rng):
                           p.n_items, interpret=True)
     oracle = user_vector_ragged(baskets, sizes, p)
     np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,items,u,w,bi", [
+    (64, 512, 16, 24, 128),
+    (128, 1024, 32, 64, 512),
+    (16, 640, 8, 8, 128),            # non-pow2 items
+    (256, 2048, 1, 48, 512),         # single-row batch
+])
+def test_sparse_row_scatter_matches_ref(rng, m, items, u, w, bi):
+    table = jnp.asarray(rng.normal(size=(m, items)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, m, u), jnp.int32)
+    ids = jnp.asarray(rng.integers(-1, items, (u, w)), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(u, w)), jnp.float32)
+    out = sparse_row_scatter(table, rows, ids, vals, bi=bi, interpret=True)
+    exp = ref.sparse_row_scatter_ref(table, rows, ids, vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+def test_sparse_row_scatter_duplicate_rows_accumulate(rng):
+    """Padding rows alias real target rows (the engine's noop-row
+    contract) and duplicate (row, id) pairs must accumulate."""
+    m, items, u, w = 8, 512, 6, 16
+    table = jnp.asarray(rng.normal(size=(m, items)), jnp.float32)
+    rows = jnp.asarray([3, 3, 5, 3, 0, 5], jnp.int32)
+    ids = jnp.asarray(rng.integers(-1, items, (u, w)), jnp.int32)
+    ids = ids.at[0, :4].set(7).at[1, :4].set(7)     # same (row, id) repeated
+    vals = jnp.asarray(rng.normal(size=(u, w)), jnp.float32)
+    vals = vals.at[3].set(0.0)                       # a zero (padding) row
+    out = sparse_row_scatter(table, rows, ids, vals, bi=128, interpret=True)
+    exp = ref.sparse_row_scatter_ref(table, rows, ids, vals)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4)
+
+
+def test_sparse_row_scatter_all_pad_is_identity(rng):
+    table = jnp.asarray(rng.normal(size=(4, 256)), jnp.float32)
+    rows = jnp.zeros((3,), jnp.int32)
+    ids = jnp.full((3, 8), -1, jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    out = sparse_row_scatter(table, rows, ids, vals, bi=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(table))
 
 
 @pytest.mark.parametrize("b,s,h,d,win,bq,bk", [

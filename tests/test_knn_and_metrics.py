@@ -23,9 +23,30 @@ def test_streaming_topk_exclude_self(rng):
         assert row not in ids
 
 
+def test_streaming_topk_prime_corpus_keeps_chunk(rng):
+    """Prime-sized corpora must be padded, not degenerate to chunk=1
+    (a scan of length M)."""
+    q = jnp.asarray(rng.normal(size=(16, 12)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(641, 12)), jnp.float32)   # prime
+    sv, si = knn.streaming_topk(q, c, k=7, chunk=128)
+    dv, di = knn.nearest_neighbors(q, c, k=7)
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(dv), atol=1e-4)
+    for a, b in zip(np.asarray(si), np.asarray(di)):
+        assert set(map(int, a)) == set(map(int, b))
+    assert np.all(np.asarray(si) < 641)   # padding rows never selected
+
+
 def test_chunked_neighbor_mean(rng):
     c = jnp.asarray(rng.normal(size=(100, 16)), jnp.float32)
     idx = jnp.asarray(rng.integers(0, 100, (7, 12)), jnp.int32)
+    out = knn.chunked_neighbor_mean(c, idx, chunk_k=4)
+    exp = jnp.mean(c[idx], axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_chunked_neighbor_mean_prime_k(rng):
+    c = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 64, (5, 13)), jnp.int32)  # prime k
     out = knn.chunked_neighbor_mean(c, idx, chunk_k=4)
     exp = jnp.mean(c[idx], axis=1)
     np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)

@@ -3,6 +3,8 @@ incremental exact (Table 2 claim), decremental allclose, item deletes,
 varying-group-size bookkeeping, stability refresh."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RefEngine, TifuParams

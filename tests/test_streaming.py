@@ -42,7 +42,7 @@ def test_engine_matches_ref(rng):
     eng.run_until_drained()
     for u in range(8):
         np.testing.assert_allclose(
-            np.asarray(store.state.user_vecs[u]),
+            np.asarray(store.state.materialized_user_vecs()[u]),
             ref.state(u).user_vec.astype(np.float32), atol=1e-4)
 
 
@@ -59,7 +59,7 @@ def test_per_user_order_preserved_under_conflicts(rng):
     eng.delete_basket(3, 0)
     ref.delete_basket(3, 0)
     eng.run_until_drained()
-    np.testing.assert_allclose(np.asarray(store.state.user_vecs[3]),
+    np.testing.assert_allclose(np.asarray(store.state.materialized_user_vecs()[3]),
                                ref.state(3).user_vec.astype(np.float32),
                                atol=1e-4)
     assert int(store.state.n_baskets[3]) == 9
@@ -94,10 +94,10 @@ def test_exactly_once_recovery(rng, tmp_path):
     replay = [dataclasses.replace(ev, seqno=i)
               for i, ev in enumerate(events)]
     eng3.submit(replay)
-    assert len(eng3.buffer) == len(events) - processed  # dups skipped
+    assert eng3.n_pending == len(events) - processed  # dups skipped
     eng3.run_until_drained()
-    np.testing.assert_allclose(np.asarray(store3.state.user_vecs),
-                               np.asarray(store1.state.user_vecs),
+    np.testing.assert_allclose(np.asarray(store3.state.materialized_user_vecs()),
+                               np.asarray(store1.state.materialized_user_vecs()),
                                atol=1e-5)
 
 
@@ -122,7 +122,7 @@ def test_paper_deletion_scenario(rng):
     from repro.core.tifu import user_vector_padded
     import jax
     for u in list(ds.histories)[:5]:
-        vec = np.asarray(store.state.user_vecs[u])
+        vec = np.asarray(store.state.materialized_user_vecs()[u])
         fresh = np.asarray(user_vector_padded(
             store.state.history[u], store.state.group_sizes[u],
             store.state.n_groups[u], p))

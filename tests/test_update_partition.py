@@ -1,0 +1,335 @@
+"""Kind-partitioned sub-batch pipeline (DESIGN.md §3.3/§4) vs the
+paper-faithful RefEngine: sparse-delta adds, homogeneous deletes, scale
+renormalization, and full randomized mixed streams through the engine
+(including replay-after-restore)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (RefEngine, StreamState, TifuParams, AddBatch,
+                        DelBasketBatch, DelItemBatch, SCALE_FLOOR,
+                        apply_add_batch, apply_del_basket_batch,
+                        apply_del_item_batch, renormalize_users)
+from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
+from repro.streaming import Event, StateStore, StoreConfig, StreamingEngine
+
+P = TifuParams(n_items=41, group_size=3, r_b=0.9, r_g=0.7)
+M, N, B, K = 8, 48, 6, 48
+
+
+def random_mixed_events(rng, ref: RefEngine, n_events: int,
+                        n_users: int, p_add=0.6):
+    """Generate a valid mixed stream, applying each event to ``ref`` as
+    it is drawn (deletes need the current history)."""
+    events = []
+    for _ in range(n_events):
+        u = int(rng.integers(0, n_users))
+        st = ref.state(u)
+        nb = st.n_baskets
+        if nb == 0 or (rng.random() < p_add and nb < N - 2):
+            items = rng.choice(P.n_items, size=int(rng.integers(1, B)),
+                               replace=False).astype(np.int32)
+            ref.add_basket(u, items)
+            events.append(Event(KIND_ADD_BASKET, u, items=items))
+        elif rng.random() < 0.5:
+            pos = int(rng.integers(0, nb))
+            ref.delete_basket(u, pos)
+            events.append(Event(KIND_DEL_BASKET, u, pos=pos))
+        else:
+            pos = int(rng.integers(0, nb))
+            item = int(rng.choice(st.history[pos]))
+            ref.delete_item(u, pos, item)
+            events.append(Event(KIND_DEL_ITEM, u, pos=pos, item=item))
+    return events
+
+
+def assert_matches_ref(state: StreamState, ref: RefEngine, n_users: int,
+                       rtol=1e-4, atol=1e-5):
+    mat = np.asarray(state.materialized_user_vecs())
+    lg = np.asarray(state.materialized_last_group_vecs())
+    for u in range(n_users):
+        st = ref.state(u)
+        np.testing.assert_allclose(mat[u], st.user_vec.astype(np.float32),
+                                   rtol=rtol, atol=atol, err_msg=f"u={u}")
+        np.testing.assert_allclose(lg[u],
+                                   st.last_group_vec.astype(np.float32),
+                                   rtol=rtol, atol=atol, err_msg=f"lgv u={u}")
+        assert int(state.n_baskets[u]) == st.n_baskets
+        assert int(state.n_groups[u]) == st.n_groups
+        gs = list(np.asarray(state.group_sizes[u])[:st.n_groups])
+        assert gs == st.group_sizes
+
+
+# ---------------------------------------------------------------------------
+# Direct sub-batch API
+# ---------------------------------------------------------------------------
+
+def test_add_batch_multiuser_matches_ref(rng):
+    """One sparse AddBatch updating several distinct users, spanning both
+    Eq. 7 (new group) and Eq. 8+9 (append) scenarios."""
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    ref = RefEngine(P, dtype=np.float32)
+    # seed: u baskets for user u (users hit different group boundaries)
+    for u in range(M):
+        for _ in range(u):
+            b = rng.choice(P.n_items, size=3, replace=False)
+            ref.add_basket(u, b)
+            state = apply_add_batch(state, AddBatch.build([u], [b], B), P)
+    baskets = [rng.choice(P.n_items, size=4, replace=False)
+               for _ in range(M)]
+    for u, b in enumerate(baskets):
+        ref.add_basket(u, b)
+    state = apply_add_batch(
+        state, AddBatch.build(list(range(M)), baskets, B), P)
+    assert_matches_ref(state, ref, M)
+
+
+def test_add_batch_padding_rows_are_noops(rng):
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    b = rng.choice(P.n_items, size=3, replace=False)
+    state = apply_add_batch(state, AddBatch.build([1], [b], B), P)
+    before = np.asarray(state.materialized_user_vecs())
+    # build pads 3 -> 4 rows; the padding row aliases user 0
+    batch = AddBatch.build([2, 4, 5],
+                           [rng.choice(P.n_items, size=2, replace=False)
+                            for _ in range(3)], B)
+    assert batch.size == 4 and not bool(batch.valid[3])
+    state = apply_add_batch(state, batch, P)
+    after = np.asarray(state.materialized_user_vecs())
+    np.testing.assert_array_equal(after[0], before[0])
+    np.testing.assert_array_equal(after[1], before[1])
+
+
+def test_del_batches_multiuser_match_ref(rng):
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    ref = RefEngine(P, dtype=np.float32)
+    for u in range(M):
+        for _ in range(6):
+            b = rng.choice(P.n_items, size=3, replace=False)
+            ref.add_basket(u, b)
+            state = apply_add_batch(state, AddBatch.build([u], [b], B), P)
+    # basket deletions for half the users, item deletions for the rest
+    del_users = list(range(0, M, 2))
+    positions = [int(rng.integers(0, ref.state(u).n_baskets))
+                 for u in del_users]
+    for u, pos in zip(del_users, positions):
+        ref.delete_basket(u, pos)
+    state = apply_del_basket_batch(
+        state, DelBasketBatch.build(del_users, positions), P)
+    item_users = list(range(1, M, 2))
+    positions, items = [], []
+    for u in item_users:
+        pos = int(rng.integers(0, ref.state(u).n_baskets))
+        it = int(rng.choice(ref.state(u).history[pos]))
+        ref.delete_item(u, pos, it)
+        positions.append(pos)
+        items.append(it)
+    state = apply_del_item_batch(
+        state, DelItemBatch.build(item_users, positions, items), P)
+    assert_matches_ref(state, ref, M)
+
+
+def test_delete_on_empty_history_is_noop(rng):
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    b = rng.choice(P.n_items, size=3, replace=False)
+    state = apply_add_batch(state, AddBatch.build([1], [b], B), P)
+    before = np.asarray(state.materialized_user_vecs())
+    state = apply_del_basket_batch(
+        state, DelBasketBatch.build([2], [0]), P)   # user 2 is empty
+    state = apply_del_item_batch(
+        state, DelItemBatch.build([3], [0], [5]), P)
+    np.testing.assert_array_equal(
+        np.asarray(state.materialized_user_vecs()), before)
+
+
+def test_add_at_capacity_is_noop(rng):
+    """A full history row is not all-PAD, so the sparse history write
+    must not touch it: adds to a full user are no-ops (regression:
+    unguarded adds wrote item ids >= n_items into occupied rows)."""
+    n, b = 4, 4
+    state = StreamState.zeros(2, 20, n, b, n)
+    ref = RefEngine(TifuParams(n_items=20, group_size=3), dtype=np.float32)
+    p20 = TifuParams(n_items=20, group_size=3)
+    baskets = [rng.choice(20, size=3, replace=False) for _ in range(6)]
+    for bk in baskets[:n]:
+        ref.add_basket(0, bk)
+    for bk in baskets:      # two adds beyond capacity
+        state = apply_add_batch(state, AddBatch.build([0], [bk], b), p20)
+    hist = np.asarray(state.history[0])
+    assert hist.max() < 20 and int(state.n_baskets[0]) == n
+    np.testing.assert_allclose(
+        np.asarray(state.materialized_user_vecs()[0]),
+        ref.state(0).user_vec.astype(np.float32), rtol=1e-4, atol=1e-5)
+    # deleting frees a row; the next add must land normally again
+    ref.delete_basket(0, 1)
+    state = apply_del_basket_batch(state, DelBasketBatch.build([0], [1]),
+                                   p20)
+    ref.add_basket(0, baskets[4])
+    state = apply_add_batch(state, AddBatch.build([0], [baskets[4]], b),
+                            p20)
+    np.testing.assert_allclose(
+        np.asarray(state.materialized_user_vecs()[0]),
+        ref.state(0).user_vec.astype(np.float32), rtol=1e-4, atol=1e-5)
+
+
+def test_renormalize_preserves_values(rng):
+    """Drive the scales down with many group-opening adds, renormalize,
+    and check the true vectors are unchanged and scales are reset."""
+    p1 = TifuParams(n_items=29, group_size=1, r_b=0.9, r_g=0.7)  # every add
+    state = StreamState.zeros(2, p1.n_items, 64, 4, 64)          # opens a group
+    ref = RefEngine(p1, dtype=np.float32)
+    for _ in range(40):
+        b = rng.choice(p1.n_items, size=3, replace=False)
+        ref.add_basket(0, b)
+        state = apply_add_batch(state, AddBatch.build([0], [b], 4), p1)
+    assert float(state.uv_scale[0]) < 1e-3          # scales really shrank
+    before = np.asarray(state.materialized_user_vecs())
+    state = renormalize_users(state, jnp.asarray([0], jnp.int32))
+    assert float(state.uv_scale[0]) == 1.0
+    assert float(state.lgv_scale[0]) == 1.0
+    np.testing.assert_allclose(np.asarray(state.materialized_user_vecs()),
+                               before, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(state.materialized_user_vecs()[0]),
+        ref.state(0).user_vec.astype(np.float32), rtol=1e-4, atol=1e-5)
+    assert float(SCALE_FLOOR) > 0.0
+
+
+def test_restore_migrates_prescale_checkpoints(rng, tmp_path):
+    """Checkpoints written before the scaled representation (no
+    uv_scale/lgv_scale leaves) restore with scales of 1."""
+    import os
+    store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K))
+    store.checkpoint(str(tmp_path), 0)
+    path = os.path.join(str(tmp_path), "state_0000000000.npz")
+    old = dict(np.load(path))
+    for key in ("uv_scale", "lgv_scale"):
+        old.pop(key)
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **old)
+    store2 = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                    max_baskets=N, max_basket_size=B,
+                                    max_groups=K))
+    store2.restore(str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(store2.state.uv_scale),
+                                  np.ones(M, np.float32))
+    np.testing.assert_array_equal(np.asarray(store2.state.lgv_scale),
+                                  np.ones(M, np.float32))
+
+
+def test_fast_decay_hot_user_stays_finite(rng):
+    """r_g=0.2, group_size=1: uv_scale shrinks ~5x per add; the probe
+    interval must be derived from the decay rates or the raw rows
+    overflow f32 between probes and renormalization produces NaN
+    (regression)."""
+    p = TifuParams(n_items=30, group_size=1, r_b=0.9, r_g=0.2)
+    store = StateStore(StoreConfig(n_users=2, n_items=30, max_baskets=128,
+                                   max_basket_size=4, max_groups=128))
+    eng = StreamingEngine(store, p, batch_size=1)
+    assert eng.renorm_check_interval < 64   # derived from min(r_b, r_g)
+    ref = RefEngine(p, dtype=np.float64)
+    for _ in range(70):
+        b = rng.choice(30, size=3, replace=False)
+        eng.add_basket(0, b)
+        ref.add_basket(0, b)
+    eng.run_until_drained()
+    assert eng.metrics.renormalizations > 0
+    mat = np.asarray(store.state.materialized_user_vecs())
+    assert np.all(np.isfinite(np.asarray(store.state.user_vecs)))
+    np.testing.assert_allclose(mat[0], ref.state(0).user_vec, atol=1e-6)
+
+
+def test_engine_counts_dropped_adds(rng):
+    store = StateStore(StoreConfig(n_users=2, n_items=P.n_items,
+                                   max_baskets=3, max_basket_size=B))
+    eng = StreamingEngine(store, P, batch_size=4)
+    for _ in range(5):
+        eng.add_basket(0, rng.choice(P.n_items, size=3, replace=False))
+    eng.run_until_drained()
+    assert int(store.state.n_baskets[0]) == 3
+    assert eng.metrics.dropped_adds == 2
+
+
+# ---------------------------------------------------------------------------
+# Randomized mixed streams through the engine (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_mixed_stream_500_events_matches_ref(seed):
+    """>= 500 interleaved add/delete events: batched state matches the
+    RefEngine user vectors to <= 1e-4 relative error."""
+    rng = np.random.default_rng(seed)
+    store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K))
+    eng = StreamingEngine(store, P, batch_size=16)
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 520, M)
+    eng.submit(events)
+    n = eng.run_until_drained()
+    assert n == len(events)
+    assert_matches_ref(store.state, ref, M, rtol=1e-4, atol=1e-5)
+
+
+def test_engine_mixed_replay_after_restore(rng, tmp_path):
+    """Mixed stream, crash mid-way, restore, at-least-once full replay:
+    duplicates are skipped and the result matches the single-pass run."""
+    def make():
+        store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                       max_baskets=N, max_basket_size=B,
+                                       max_groups=K))
+        return StreamingEngine(store, P, batch_size=16), store
+
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 200, M)
+
+    eng1, store1 = make()
+    eng1.submit(events)
+    eng1.run_until_drained()
+    assert_matches_ref(store1.state, ref, M)
+
+    eng2, store2 = make()
+    eng2.submit(events)
+    for _ in range(3):
+        eng2.step()
+    eng2.checkpoint(str(tmp_path), 1)
+    processed = eng2.metrics.events_processed
+
+    eng3, store3 = make()
+    eng3.restore(str(tmp_path))
+    replay = [dataclasses.replace(ev, seqno=i)
+              for i, ev in enumerate(events)]
+    eng3.submit(replay)
+    assert eng3.n_pending == len(events) - processed
+    eng3.run_until_drained()
+    np.testing.assert_allclose(
+        np.asarray(store3.state.materialized_user_vecs()),
+        np.asarray(store1.state.materialized_user_vecs()),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_hot_user_conflict_deferral_order(rng):
+    """A hot user's events are applied one per batch, in order, while
+    other users keep flowing (per-user pending queues)."""
+    store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K))
+    eng = StreamingEngine(store, P, batch_size=4)
+    ref = RefEngine(P, dtype=np.float32)
+    for t in range(12):
+        b = rng.choice(P.n_items, size=3, replace=False)
+        eng.add_basket(5, b)
+        ref.add_basket(5, b)
+        if t % 3 == 0:
+            b2 = rng.choice(P.n_items, size=2, replace=False)
+            eng.add_basket(t % 4, b2)
+            ref.add_basket(t % 4, b2)
+    eng.delete_basket(5, 2)
+    ref.delete_basket(5, 2)
+    eng.run_until_drained()
+    assert eng.n_pending == 0
+    assert_matches_ref(store.state, ref, M)

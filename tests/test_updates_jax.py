@@ -57,7 +57,7 @@ def test_random_ops_match_ref(seed):
             batch = one_op_batch(kind, u, pos=pos, item=item)
         state = apply_update_batch(state, batch, P)
         np.testing.assert_allclose(
-            np.asarray(state.user_vecs[u]),
+            np.asarray(state.materialized_user_vecs()[u]),
             ref.state(u).user_vec.astype(np.float32), atol=1e-4)
         assert int(state.n_baskets[u]) == ref.state(u).n_baskets
         assert int(state.n_groups[u]) == ref.state(u).n_groups
@@ -82,7 +82,7 @@ def test_batched_multiuser_batch(rng):
     state = apply_update_batch(state, batch, P)
     for u in range(M):
         np.testing.assert_allclose(
-            np.asarray(state.user_vecs[u]),
+            np.asarray(state.materialized_user_vecs()[u]),
             ref.state(u).user_vec.astype(np.float32), atol=1e-5)
 
 
@@ -91,10 +91,10 @@ def test_noop_rows_do_not_disturb_state(rng):
     b = rng.choice(P.n_items, size=3, replace=False)
     state = apply_update_batch(state, one_op_batch(KIND_ADD_BASKET, 1,
                                                    items=b), P)
-    before = np.asarray(state.user_vecs)
+    before = np.asarray(state.materialized_user_vecs())
     noop = UpdateBatch.noop(8, B)
     state = apply_update_batch(state, noop, P)
-    np.testing.assert_array_equal(np.asarray(state.user_vecs), before)
+    np.testing.assert_array_equal(np.asarray(state.materialized_user_vecs()), before)
 
 
 def test_refresh_users_resets_error(rng):
@@ -106,8 +106,8 @@ def test_refresh_users_resets_error(rng):
     for t in range(3):
         state = apply_update_batch(state, one_op_batch(KIND_DEL_BASKET, 0,
                                                        pos=0), P)
-    before = np.asarray(state.user_vecs[0]).copy()
+    before = np.asarray(state.materialized_user_vecs()[0]).copy()
     state = refresh_users(state, jnp.array([0], jnp.int32), P)
     assert float(state.err_mult[0]) == 1.0
-    np.testing.assert_allclose(np.asarray(state.user_vecs[0]), before,
+    np.testing.assert_allclose(np.asarray(state.materialized_user_vecs()[0]), before,
                                atol=1e-4)  # refresh ≈ maintained value
