@@ -2,21 +2,32 @@
 
 Measures the kind-partitioned sparse-delta pipeline (core.updates
 apply_add_batch / apply_del_*_batch via the apply_update_batch shim)
-against the seed's dense mixed path (apply_update_batch_dense: gather
-[batch, n_items] rows, compute every update rule, select, scatter dense
-deltas) for add-only, delete-only and mixed micro-batches at
-n_items ∈ {1k, 10k, 100k}.
+against two dense baselines for add-only, del-basket-only, del-item-only
+and mixed micro-batches at n_items ∈ {1k, 10k, 100k}:
 
-The headline claim (ISSUE 1 acceptance): add-only batches touch O(basket)
-state per event, so their latency stays flat as n_items grows, while the
-dense path scales linearly.  Results land in BENCH_updates.json so the
-perf trajectory is tracked across PRs.
+  * ``dense_seed`` — the seed's mixed path (gather [batch, n_items]
+    rows, compute every update rule, select, scatter dense deltas);
+  * ``dense_kind`` — the homogeneous dense decremental paths
+    (apply_del_*_batch_dense): one rule per program, still O(n_items)
+    row traffic.  This is the honest baseline for the sparse deletes.
+
+Headline claims (ISSUE 1 + ISSUE 2 acceptance): add latency is flat in
+n_items (O(basket) state traffic), and the sparse decremental paths beat
+the dense baseline by >= 5x at 100k items because their support is the
+history window (N·B ids), not the vocabulary.  Results land in
+BENCH_updates.json so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python benchmarks/bench_update_batch.py [--quick]
+    PYTHONPATH=src python benchmarks/bench_update_batch.py --smoke  # CI
+
+``--smoke`` shrinks every dimension (users/batch/vocab/iters) so the CI
+bench job exercises the full harness in seconds on CPU; its numbers are
+for plumbing validation, not for perf tracking.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -25,53 +36,72 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (StreamState, TifuParams, apply_update_batch,
+from repro.core import (StreamState, TifuParams, apply_add_batch,
+                        apply_del_basket_batch_dense,
+                        apply_del_item_batch_dense, apply_update_batch,
                         apply_update_batch_dense)
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
-                              KIND_DEL_ITEM, KIND_NOOP, PAD_ID, UpdateBatch)
+                              KIND_DEL_ITEM, KIND_NOOP, PAD_ID, AddBatch,
+                              DelBasketBatch, DelItemBatch, UpdateBatch)
 
-M_USERS = 1024
-MAX_BASKETS = 24
-MAX_BSIZE = 16
-BATCH = 256
-SEED_BASKETS = 6
+
+@dataclasses.dataclass(frozen=True)
+class BenchConfig:
+    m_users: int = 1024
+    max_baskets: int = 24
+    max_bsize: int = 16
+    batch: int = 256
+    seed_baskets: int = 6
+    n_items_grid: tuple = (1_000, 10_000, 100_000)
+    iters: int = 8
+    dense_iters: int = 4
+
+
+SMOKE = BenchConfig(m_users=128, max_baskets=12, max_bsize=8, batch=64,
+                    seed_baskets=4, n_items_grid=(1_000, 4_000), iters=2,
+                    dense_iters=1)
+QUICK = BenchConfig(iters=4, dense_iters=2)
+
+KINDS = ("add", "del_basket", "del_item", "mixed")
 
 
 def make_params(n_items: int) -> TifuParams:
     return TifuParams(n_items=n_items, group_size=7, r_b=0.9, r_g=0.7)
 
 
-def seed_state(params: TifuParams, rng) -> StreamState:
-    """Give every user SEED_BASKETS baskets via the batched add path."""
-    state = StreamState.zeros(M_USERS, params.n_items, MAX_BASKETS,
-                              MAX_BSIZE, MAX_BASKETS)
-    for _ in range(SEED_BASKETS):
-        for lo in range(0, M_USERS, BATCH):
-            users = np.arange(lo, lo + BATCH, dtype=np.int32)
+def seed_state(params: TifuParams, rng, cfg: BenchConfig) -> StreamState:
+    """Give every user seed_baskets baskets via the batched add path."""
+    state = StreamState.zeros(cfg.m_users, params.n_items, cfg.max_baskets,
+                              cfg.max_bsize, cfg.max_baskets)
+    for _ in range(cfg.seed_baskets):
+        for lo in range(0, cfg.m_users, cfg.batch):
+            users = np.arange(lo, lo + cfg.batch, dtype=np.int32)
             state = apply_update_batch(
-                state, make_batch(rng, users, "add", state), params)
+                state, make_batch(rng, users, "add", state, cfg), params)
     return state
 
 
-def make_batch(rng, users, kind: str, state: StreamState) -> UpdateBatch:
-    """One fixed-shape mixed batch over the given (distinct) users."""
+def make_batch(rng, users, kind: str, state: StreamState,
+               cfg: BenchConfig) -> UpdateBatch:
+    """One fixed-shape batch over the given (distinct) users.
+
+    Deterministic composition per kind: stable sub-batch sizes => the
+    pow2 buckets compile once in warmup and the loop times steady state
+    (add: all adds; del_basket/del_item: homogeneous; mixed: 2/1/1)."""
     u = len(users)
     kinds = np.zeros(u, np.int32)
-    items = np.full((u, MAX_BSIZE), PAD_ID, np.int32)
+    items = np.full((u, cfg.max_bsize), PAD_ID, np.int32)
     pos = np.zeros(u, np.int32)
     item = np.full(u, PAD_ID, np.int32)
     nb = np.asarray(state.n_baskets)
     hist = None
     for r, uu in enumerate(users):
-        # deterministic composition: stable sub-batch sizes => the pow2
-        # buckets compile once in warmup and the loop times steady state
-        # (add: all adds; del: 50/50 basket/item; mixed: 2/1/1).
-        roll = {"add": 0.0, "del": 0.6 + 0.3 * (r % 2),
+        roll = {"add": 0.0, "del_basket": 0.6, "del_item": 0.9,
                 "mixed": (0.0, 0.0, 0.6, 0.9)[r % 4]}[kind]
         if roll < 0.5 or nb[uu] == 0:
             kinds[r] = KIND_ADD_BASKET
             b = rng.choice(state.n_items,
-                           size=int(rng.integers(2, MAX_BSIZE // 2)),
+                           size=int(rng.integers(2, cfg.max_bsize // 2)),
                            replace=False)
             items[r, :len(b)] = b
         elif roll < 0.75:
@@ -92,86 +122,141 @@ def make_batch(rng, users, kind: str, state: StreamState) -> UpdateBatch:
                        basket_pos=jnp.asarray(pos), item=jnp.asarray(item))
 
 
-def bench(apply_fn, params, rng, kind: str, iters: int) -> dict:
-    state = seed_state(params, rng)
-    user_sets = [np.arange(lo, lo + BATCH, dtype=np.int32)
-                 for lo in range(0, M_USERS, BATCH)]
+def _dense_kind_apply(state, batch: UpdateBatch, params):
+    """Route a homogeneous UpdateBatch to the dense per-kind baseline.
+
+    Add rows (make_batch's nb==0 fallback) go through the same add path
+    as the partitioned arm, so both arms evolve identical states and the
+    reported delete speedup compares like against like."""
+    kind = np.asarray(jax.device_get(batch.kind))
+    user = np.asarray(jax.device_get(batch.user))
+    cap = int(kind.shape[0])
+    adds = np.nonzero(kind == KIND_ADD_BASKET)[0]
+    delb = np.nonzero(kind == KIND_DEL_BASKET)[0]
+    deli = np.nonzero(kind == KIND_DEL_ITEM)[0]
+    if adds.size:
+        items = np.asarray(jax.device_get(batch.basket_items))
+        state = apply_add_batch(
+            state, AddBatch.build(user[adds], items[adds], items.shape[1],
+                                  pad_cap=cap), params)
+    if delb.size:
+        pos = np.asarray(jax.device_get(batch.basket_pos))
+        state = apply_del_basket_batch_dense(
+            state, DelBasketBatch.build(user[delb], pos[delb], pad_cap=cap),
+            params)
+    if deli.size:
+        pos = np.asarray(jax.device_get(batch.basket_pos))
+        it = np.asarray(jax.device_get(batch.item))
+        state = apply_del_item_batch_dense(
+            state, DelItemBatch.build(user[deli], pos[deli], it[deli],
+                                      pad_cap=cap), params)
+    return state
+
+
+PATHS = {
+    "partitioned": apply_update_batch,
+    "dense_seed": apply_update_batch_dense,
+    "dense_kind": _dense_kind_apply,
+}
+
+
+def bench(path: str, params, rng, kind: str, iters: int,
+          cfg: BenchConfig) -> dict:
+    apply_fn = PATHS[path]
+    state = seed_state(params, rng, cfg)
+    user_sets = [np.arange(lo, lo + cfg.batch, dtype=np.int32)
+                 for lo in range(0, cfg.m_users, cfg.batch)]
     # warmup/compile (several batches: mixed batches flip between pow2
     # sub-batch buckets, each bucket combination compiles once)
     for _ in range(3):
-        state = apply_fn(state, make_batch(rng, user_sets[0], kind, state),
-                         params)
+        state = apply_fn(state, make_batch(rng, user_sets[0], kind, state,
+                                           cfg), params)
     jax.block_until_ready(state.user_vecs)
     times = []
     for i in range(iters):
         batch = make_batch(rng, user_sets[(i + 1) % len(user_sets)], kind,
-                           state)
+                           state, cfg)
         t0 = time.perf_counter()
         state = apply_fn(state, batch, params)
         jax.block_until_ready(state.user_vecs)
         times.append(time.perf_counter() - t0)
     times = np.asarray(times)
-    return {"kind": kind, "n_items": params.n_items, "batch": BATCH,
-            "iters": iters, "mean_ms": float(times.mean() * 1e3),
+    return {"kind": kind, "path": path, "n_items": params.n_items,
+            "batch": cfg.batch, "iters": iters,
+            "mean_ms": float(times.mean() * 1e3),
             "p50_ms": float(np.median(times) * 1e3),
             "min_ms": float(times.min() * 1e3),
-            "events_per_s": float(BATCH / times.mean())}
+            "events_per_s": float(cfg.batch / times.mean())}
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="fewer iterations; skip the heaviest dense rows "
-                         "(100k del/mixed)")
+                    help="fewer iterations at full sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + minimal iterations (CI smoke: "
+                         "seconds on CPU, validates the harness only)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_updates.json"))
     args = ap.parse_args()
-    iters = 4 if args.quick else 8
-    dense_iters = 2 if args.quick else 4
+    cfg = SMOKE if args.smoke else (QUICK if args.quick else BenchConfig())
 
     results = []
-    for n_items in (1_000, 10_000, 100_000):
+    for n_items in cfg.n_items_grid:
         params = make_params(n_items)
-        for kind in ("add", "del", "mixed"):
-            rng = np.random.default_rng(0)
-            r = bench(apply_update_batch, params, rng, kind, iters)
-            r["path"] = "partitioned"
-            results.append(r)
-            print(f"partitioned {kind:5s} n_items={n_items:>6d} "
-                  f"mean={r['mean_ms']:8.2f} ms  "
-                  f"({r['events_per_s']:,.0f} ev/s)")
-            if args.quick and n_items == 100_000 and kind != "add":
-                continue   # the dense 100k del/mixed rows are the most
-            rng = np.random.default_rng(0)     # expensive configurations
-            r = bench(apply_update_batch_dense, params, rng, kind,
-                      dense_iters)
-            r["path"] = "dense_seed"
-            results.append(r)
-            print(f"dense_seed  {kind:5s} n_items={n_items:>6d} "
-                  f"mean={r['mean_ms']:8.2f} ms  "
-                  f"({r['events_per_s']:,.0f} ev/s)")
+        for kind in KINDS:
+            paths = ["partitioned", "dense_seed"]
+            if kind in ("del_basket", "del_item"):
+                paths.insert(1, "dense_kind")
+            for path in paths:
+                dense = path != "partitioned"
+                if (args.quick and dense and kind != "add"
+                        and n_items == 100_000 and path == "dense_seed"):
+                    continue   # the heaviest redundant configurations
+                rng = np.random.default_rng(0)
+                iters = cfg.dense_iters if dense else cfg.iters
+                r = bench(path, params, rng, kind, iters, cfg)
+                results.append(r)
+                print(f"{path:11s} {kind:10s} n_items={n_items:>6d} "
+                      f"mean={r['mean_ms']:8.2f} ms  "
+                      f"({r['events_per_s']:,.0f} ev/s)")
 
     def pick(path, kind, n):
-        return next(r for r in results if r["path"] == path
-                    and r["kind"] == kind and r["n_items"] == n)
+        return next((r for r in results if r["path"] == path
+                     and r["kind"] == kind and r["n_items"] == n), None)
 
-    add_growth = (pick("partitioned", "add", 100_000)["mean_ms"]
-                  / pick("partitioned", "add", 1_000)["mean_ms"])
-    speedup_100k = (pick("dense_seed", "add", 100_000)["mean_ms"]
-                    / pick("partitioned", "add", 100_000)["mean_ms"])
-    summary = {"add_latency_growth_1k_to_100k": add_growth,
-               "add_speedup_vs_dense_at_100k": speedup_100k}
-    print(f"\nadd growth 1k->100k: {add_growth:.2f}x "
-          f"(acceptance: < 1.5x)\n"
-          f"add speedup vs dense @100k: {speedup_100k:.2f}x "
-          f"(acceptance: >= 3x)")
+    n_lo, n_hi = cfg.n_items_grid[0], cfg.n_items_grid[-1]
+    summary = {"max_n_items": n_hi}
+    add_lo, add_hi = pick("partitioned", "add", n_lo), \
+        pick("partitioned", "add", n_hi)
+    summary["add_latency_growth_to_max_items"] = (
+        add_hi["mean_ms"] / add_lo["mean_ms"])
+    dense_add = pick("dense_seed", "add", n_hi)
+    if dense_add:
+        summary["add_speedup_vs_dense_at_max_items"] = (
+            dense_add["mean_ms"] / add_hi["mean_ms"])
+    for kind in ("del_basket", "del_item"):
+        sp = pick("partitioned", kind, n_hi)
+        dk = pick("dense_kind", kind, n_hi)
+        if sp and dk:
+            summary[f"{kind}_sparse_speedup_vs_dense_at_max_items"] = (
+                dk["mean_ms"] / sp["mean_ms"])
+    print("\nsummary:")
+    for k, v in summary.items():
+        note = ""
+        if k == "add_latency_growth_to_max_items":
+            note = "  (acceptance: < 1.5x)"
+        elif k.startswith(("del_basket", "del_item")):
+            note = "  (acceptance: >= 5x)"
+        print(f"  {k}: {v:.2f}{note}" if isinstance(v, float)
+              else f"  {k}: {v}")
 
     payload = {
         "benchmark": "bench_update_batch",
         "backend": jax.default_backend(),
-        "config": {"m_users": M_USERS, "batch": BATCH,
-                   "max_baskets": MAX_BASKETS, "max_basket_size": MAX_BSIZE,
-                   "seed_baskets": SEED_BASKETS},
+        "mode": "smoke" if args.smoke else ("quick" if args.quick
+                                            else "full"),
+        "config": dataclasses.asdict(cfg),
         "summary": summary,
         "results": results,
     }

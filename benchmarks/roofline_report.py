@@ -10,7 +10,6 @@ RESULTS = ["results/dryrun_single_pod.json", "results/dryrun_multi_pod.json"]
 
 def fmt(r):
     rt = r.get("roofline", {})
-    mf = r.get("model_flops_per_device") or 0
     uf = r.get("useful_flops_ratio")
     return (f"{r['arch']},{r['shape']},{r['mesh']},"
             f"{rt.get('t_compute_s', 0):.3e},{rt.get('t_memory_s', 0):.3e},"

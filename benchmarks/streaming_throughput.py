@@ -5,9 +5,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import TifuParams
 from repro.data import stream, synthetic
 from repro.streaming import StateStore, StoreConfig, StreamingEngine
 

@@ -11,7 +11,6 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import RefEngine, knn
-from repro.core.tifu import default_group_sizes
 from repro.data import synthetic
 
 

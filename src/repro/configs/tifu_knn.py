@@ -95,11 +95,14 @@ def stream_update_cell(mesh, rules) -> CellProgram:
         return apply_del_item_batch(state, deli, params)
 
     # adds: sparse support W = (m+1)·B per row — a W·log2(W) dedup sort
-    # plus O(W) gathers/scatters; deletes: ~3 weighted multihot scatters
-    # over N×B plus the dense row writes.
+    # plus O(W) gathers/scatters; deletes are sparse too (DESIGN.md
+    # §3.5): support W_d = N·B history-window slots per row — a
+    # W_d·log2(W_d) dedup sort, per-slot coefficient math and O(W_d)
+    # gathers/scatters, with no O(n_items) term.
     w = (params.group_size + 1) * MAX_BSIZE
+    w_d = MAX_BASKETS * MAX_BSIZE
     flops = UPDATE_BATCH * (w * (w - 1).bit_length() + 4 * w) \
-        + 2 * DEL_BATCH * (3 * MAX_BASKETS * MAX_BSIZE + 4 * N_ITEMS)
+        + 2 * DEL_BATCH * (w_d * (w_d - 1).bit_length() + 8 * w_d)
     return CellProgram(
         fn=fn, args=(_state_sds(), adds, delb, deli),
         in_shardings=(_state_shardings(mesh, rules), ashard, bshard, ishard),

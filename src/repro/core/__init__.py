@@ -7,8 +7,11 @@ from repro.core.types import (PAD_ID, KIND_NOOP, KIND_ADD_BASKET,
                               TifuParams, UpdateBatch)
 from repro.core import decay, knn, stability, tifu
 from repro.core.ref_engine import RefEngine
-from repro.core.updates import (SCALE_FLOOR, apply_add_batch,
-                                apply_del_basket_batch, apply_del_item_batch,
+from repro.core.updates import (SCALE_CEIL, SCALE_FLOOR, apply_add_batch,
+                                apply_del_basket_batch,
+                                apply_del_basket_batch_dense,
+                                apply_del_item_batch,
+                                apply_del_item_batch_dense,
                                 apply_update_batch, apply_update_batch_dense,
                                 refresh_users, renormalize_users)
 
@@ -17,7 +20,9 @@ __all__ = [
     "KIND_DEL_ITEM", "PAPER_HYPERPARAMS", "AddBatch", "DelBasketBatch",
     "DelItemBatch", "RaggedUserState", "StreamState", "TifuParams",
     "UpdateBatch", "decay", "knn", "stability", "tifu", "RefEngine",
-    "SCALE_FLOOR", "apply_add_batch", "apply_del_basket_batch",
-    "apply_del_item_batch", "apply_update_batch", "apply_update_batch_dense",
+    "SCALE_CEIL", "SCALE_FLOOR", "apply_add_batch",
+    "apply_del_basket_batch", "apply_del_basket_batch_dense",
+    "apply_del_item_batch", "apply_del_item_batch_dense",
+    "apply_update_batch", "apply_update_batch_dense",
     "refresh_users", "renormalize_users",
 ]

@@ -195,6 +195,24 @@ def recommend_topn(pred, n: int):
     return jax.lax.top_k(pred, n)[1]
 
 
+@functools.partial(jax.jit, static_argnames=("k", "topn", "metric"))
+def recommend_for_users(corpus, user_ids, k: int, alpha: float, topn: int,
+                        metric: str = "euclidean"):
+    """Fused serving path: row gather → TIFU-kNN predict → top-n items.
+
+    ``corpus`` is the (cached) materialized corpus f32[M, I]
+    (``StateStore.corpus()``, DESIGN.md §3.6); ``user_ids`` i32[Q] are
+    the requesting users, which are corpus rows (self-excluded from the
+    neighbourhood).  One compiled program per request batch shape — no
+    intermediate [Q, I] prediction round-trips through the host.
+    Returns i32[Q, topn] item ids.
+    """
+    queries = corpus[user_ids]
+    pred = predict(queries, corpus, k=k, alpha=alpha, metric=metric,
+                   exclude_self=True, query_ids=user_ids)
+    return recommend_topn(pred, topn)
+
+
 # ---------------------------------------------------------------------------
 # Ranking metrics (numpy; evaluation only)
 # ---------------------------------------------------------------------------

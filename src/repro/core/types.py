@@ -275,6 +275,16 @@ def _pow2_pad(n: int, cap: int = 0) -> int:
     return min(p, max(cap, n)) if cap else p
 
 
+def _resolve_pad(n: int, pad_cap: int, pad_to: int) -> int:
+    """Padded row count for a sub-batch build: an explicit ``pad_to``
+    (the engine's hysteresis-held bucket) wins over the pow2 default."""
+    if pad_to:
+        if pad_to < n:
+            raise ValueError(f"pad_to={pad_to} < sub-batch size {n}")
+        return pad_to
+    return _pow2_pad(n, pad_cap)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class AddBatch:
@@ -301,11 +311,14 @@ class AddBatch:
         return self.user.shape[0]
 
     @staticmethod
-    def build(users, baskets, max_basket_size: int,
-              pad_cap: int = 0) -> "AddBatch":
-        """From parallel host lists of user ids and item-id sequences."""
+    def build(users, baskets, max_basket_size: int, pad_cap: int = 0,
+              pad_to: int = 0) -> "AddBatch":
+        """From parallel host lists of user ids and item-id sequences.
+
+        ``pad_to`` (engine bucket hysteresis, DESIGN.md §4.1) overrides
+        the pow2 bucket with an explicit row count >= len(users)."""
         n = len(users)
-        u = _pow2_pad(n, pad_cap)
+        u = _resolve_pad(n, pad_cap, pad_to)
         user = np.zeros(u, np.int32)
         items = np.full((u, max_basket_size), PAD_ID, np.int32)
         valid = np.zeros(u, bool)
@@ -347,9 +360,10 @@ class DelBasketBatch:
         return self.user.shape[0]
 
     @staticmethod
-    def build(users, positions, pad_cap: int = 0) -> "DelBasketBatch":
+    def build(users, positions, pad_cap: int = 0,
+              pad_to: int = 0) -> "DelBasketBatch":
         n = len(users)
-        u = _pow2_pad(n, pad_cap)
+        u = _resolve_pad(n, pad_cap, pad_to)
         user = np.zeros(u, np.int32)
         pos = np.zeros(u, np.int32)
         valid = np.zeros(u, bool)
@@ -388,9 +402,10 @@ class DelItemBatch:
         return self.user.shape[0]
 
     @staticmethod
-    def build(users, positions, items, pad_cap: int = 0) -> "DelItemBatch":
+    def build(users, positions, items, pad_cap: int = 0,
+              pad_to: int = 0) -> "DelItemBatch":
         n = len(users)
-        u = _pow2_pad(n, pad_cap)
+        u = _resolve_pad(n, pad_cap, pad_to)
         user = np.zeros(u, np.int32)
         pos = np.zeros(u, np.int32)
         item = np.full(u, PAD_ID, np.int32)

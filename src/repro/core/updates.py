@@ -8,15 +8,20 @@ point runs exactly one update rule:
     data touches the [M, I] state (W = (group_size+1)·max_basket_size),
     never an [n_items] temporary.  Matches the paper's O(1)-per-add
     asymptotic on the batched path (DESIGN.md §3.3).
-  * ``apply_del_basket_batch`` — Eq. 10-12, dense masked rows: the
-    paper's decremental cost is linear in the surviving history, so the
-    per-user dense row gather matches the true support.
-  * ``apply_del_item_batch``   — Eq. 13 + basket-vanish fallback.
+  * ``apply_del_basket_batch`` — Eq. 10-12, **sparse deltas**: the
+    suffix contractions expand to per-history-slot coefficients, so
+    O(batch · N·B) data touches the [M, I] state (the history window),
+    never an [n_items] temporary; the Eq. 12 whole-vector rescale folds
+    into ``uv_scale`` (DESIGN.md §3.5).
+  * ``apply_del_item_batch``   — Eq. 13 + basket-vanish fallback, same
+    sparse treatment (the in-place branch touches ONE cell per table).
 
 ``apply_update_batch`` keeps the mixed-batch signature by partitioning
 on the host; ``apply_update_batch_dense`` is the seed's
 compute-all-kinds-and-select implementation, retained as the benchmark
-baseline (benchmarks/bench_update_batch.py) and as a second oracle.
+baseline (benchmarks/bench_update_batch.py) and as a second oracle, and
+``apply_del_*_batch_dense`` are the homogeneous dense decremental
+baselines the sparse paths are validated and benchmarked against.
 
 Design notes (DESIGN.md §3.2): the variable-length suffix contractions of
 Eq. 10/12 are computed as *masked fixed-shape* weighted multi-hot
@@ -40,14 +45,17 @@ from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM,
                               KIND_NOOP, PAD_ID, AddBatch, DelBasketBatch,
                               DelItemBatch, StreamState, TifuParams,
                               UpdateBatch)
-from repro.kernels.ops import sparse_row_scatter
+from repro.kernels.ops import sparse_row_gather, sparse_row_scatter
 
-# Scales only shrink (each new group multiplies uv_scale by k·r_g/(k+1),
-# each append multiplies lgv_scale by tau·r_b/(tau+1)); fold them back into
-# the raw rows before float32 precision suffers.  1e-18 keeps raw
-# magnitudes <= ~1e18, far inside f32 range, and is hit only after
-# hundreds of group openings per user.
+# Adds only shrink the scales (each new group multiplies uv_scale by
+# k·r_g/(k+1), each append multiplies lgv_scale by tau·r_b/(tau+1));
+# sparse Eq. 12 deletions GROW uv_scale by k/((k-1)·r_g) > 1.  Fold the
+# scales back into the raw rows before float32 precision suffers on
+# either side: 1e-18 keeps raw magnitudes <= ~1e18 (hit only after
+# hundreds of group openings per user), SCALE_CEIL bounds the growth
+# symmetrically (hundreds of single-basket-group deletions).
 SCALE_FLOOR = 1e-18
+SCALE_CEIL = 1e18
 
 
 # ---------------------------------------------------------------------------
@@ -328,7 +336,6 @@ def _apply_add_batch(state: StreamState, batch: AddBatch,
     alias any user.
     """
     u = batch.user
-    n_items = state.n_items
     n_bask, bh = state.max_baskets, state.max_basket_size
     kmax = state.max_groups
     m = params.group_size
@@ -369,9 +376,9 @@ def _apply_add_batch(state: StreamState, batch: AddBatch,
     bfirst = _first_occurrence(items)                       # [U, Bb]
     zeros_old = jnp.zeros(old_ids.shape, f32)
 
-    # gather the true last-group values on the support (O(U·W), sparse)
-    lraw = state.last_group_vecs[u[:, None], jnp.clip(ids_all, 0,
-                                                      n_items - 1)]
+    # gather the true last-group values on the support (O(U·W), sparse;
+    # PAD ids read 0, which the `first` mask already zeroes downstream)
+    lraw = sparse_row_gather(state.last_group_vecs, u, ids_all)
     ltrue = lraw * sig[:, None]
 
     # --- scale updates (the dense part of Eq. 7/8, now scalar) ---------------
@@ -501,14 +508,14 @@ def _scatter_del_deltas(state: StreamState, u, valid, old, new):
 
 
 @functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
-def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
-                           params: TifuParams) -> StreamState:
-    """Apply a homogeneous basket-deletion sub-batch (Eq. 10-12).
+def apply_del_basket_batch_dense(state: StreamState, batch: DelBasketBatch,
+                                 params: TifuParams) -> StreamState:
+    """Apply a homogeneous basket-deletion sub-batch (Eq. 10-12), densely.
 
-    Dense masked per-user rows: the paper's decremental update is linear
-    in the surviving history, so gathering the touched users' dense rows
-    matches the true cost — but only ONE rule is evaluated (the seed
-    mixed path computed all four and selected)."""
+    Dense masked per-user rows: gathers [batch, n_items] state rows and
+    writes dense deltas.  Retained as the correctness baseline and the
+    benchmark baseline for the sparse path (``apply_del_basket_batch``,
+    DESIGN.md §3.5), which touches only the history-window support."""
     u = batch.user
     old = _gather_true(state, u)
     uv, lgv, hist, gs, nb, ng, em = old[:7]
@@ -521,9 +528,10 @@ def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
 
 
 @functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
-def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
-                         params: TifuParams) -> StreamState:
-    """Apply a homogeneous item-deletion sub-batch (Eq. 13 + fallback)."""
+def apply_del_item_batch_dense(state: StreamState, batch: DelItemBatch,
+                               params: TifuParams) -> StreamState:
+    """Apply a homogeneous item-deletion sub-batch (Eq. 13 + fallback),
+    densely — the correctness/benchmark baseline of the sparse path."""
     u = batch.user
     old = _gather_true(state, u)
     uv, lgv, hist, gs, nb, ng, em = old[:7]
@@ -533,6 +541,245 @@ def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
         lambda *a: _delete_item(*a, params))(uv, lgv, hist, gs, nb, ng, em,
                                              safe_pos, batch.item)
     return _scatter_del_deltas(state, u, valid, old, new)
+
+
+# ---------------------------------------------------------------------------
+# Sparse decremental sub-batches (Eq. 10-13, DESIGN.md §3.5)
+# ---------------------------------------------------------------------------
+#
+# The paper's decremental cost is linear in the surviving history, and the
+# history's item support is at most N·B ids — orders of magnitude below
+# n_items at production vocabularies.  These paths expand the Eq. 10-13
+# suffix contractions into per-history-slot coefficients and apply them
+# through the sparse row gather/scatter kernel pair, so (like the add
+# path) no [batch, n_items] temporary ever materializes.  The Eq. 12
+# whole-vector rescale k/((k-1)·r_g) folds into ``uv_scale`` — the scales
+# can now also GROW; the engine renormalizes outside [SCALE_FLOOR·1e2,
+# SCALE_CEIL] (see streaming.engine._maintain).
+
+
+def _slots(c_row, bh):
+    """Expand per-history-row coefficients [U, N] to per-slot values
+    [U, N·B] (each valid id in row t carries weight c_row[t])."""
+    u, n = c_row.shape
+    return jnp.broadcast_to(c_row[:, :, None], (u, n, bh)).reshape(u, -1)
+
+
+def _del_basket_sparse_core(state: StreamState, u, hist, gs, nb, k, s, sig,
+                            em, pos, valid, params: TifuParams):
+    """Shared sparse basket-deletion math (Eq. 10-12 on the support).
+
+    Rows with ``valid`` False produce all-PAD support ids, zero scatter
+    values and unit ratios, so padding rows may alias any user.  Returns
+    ``(ids, u_vals, l_vals, s_ratio, em_ratio, new_hist, new_gs, d_nb,
+    d_ng)`` — the caller assembles the StreamState (the item-deletion
+    path merges these with its in-place Eq. 13 branch first).
+    """
+    f32 = state.user_vecs.dtype
+    n_rows = u.shape[0]
+    n_bask, bh = hist.shape[1], hist.shape[2]
+    kmax = gs.shape[1]
+    rb = jnp.asarray(params.r_b, f32)
+    rg = jnp.asarray(params.r_g, f32)
+
+    g, p, tau = jax.vmap(
+        lambda sizes: _row_group_geometry(sizes, n_bask))(gs)   # [U, N]
+    j, i = jax.vmap(_locate)(gs, pos)                           # [U]
+    tau_j = jnp.take_along_axis(gs, j[:, None], axis=1)[:, 0]
+
+    t = jnp.arange(n_bask)[None, :]
+    valid_row = (t < nb[:, None]) & valid[:, None]
+    in_gj = valid_row & (g == j[:, None])
+
+    single = tau_j == 1
+    last_g = k <= 1
+    s1 = valid & ~single                  # Eq. 10+11: group j shrinks
+    s2 = valid & single & ~last_g         # Eq. 12: group j vanishes
+    s3 = valid & single & last_g          # last basket: state empties
+
+    kf = jnp.maximum(k, 1).astype(f32)
+    safe_k = jnp.maximum(k, 2).astype(f32)
+    tjf = tau_j.astype(f32)
+    safe_tau = jnp.maximum(tau_j, 2).astype(f32)
+    tau_f = jnp.maximum(tau, 1).astype(f32)
+
+    # --- support: the user's masked history window -------------------------
+    ids = jnp.where(valid_row[:, :, None], hist,
+                    PAD_ID).reshape(n_rows, n_bask * bh)
+    first = _first_occurrence(ids).astype(f32)
+    uraw = sparse_row_gather(state.user_vecs, u, ids)
+    lraw = sparse_row_gather(state.last_group_vecs, u, ids)
+
+    # --- scenario 1: per-slot expansion of r_g^(k-1-j)·(v'_gj - v_gj)/k ----
+    pow_tp = rb ** jnp.where(in_gj, tau_j[:, None] - p, 0)
+    w_gj = jnp.where(in_gj, pow_tp / tau_f, 0.0)           # v_gj slots
+    sc = jnp.where(p == i[:, None], -pow_tp, pow_tp * (rb - 1.0))
+    sc = jnp.where(in_gj & (p >= i[:, None]), sc, 0.0)     # Eq. 10 suffix
+    dvg = ((tjf - (tjf - 1.0) * rb)[:, None] * w_gj + sc) \
+        / ((safe_tau - 1.0) * rb)[:, None]                 # (v'_gj - v_gj)
+    cu1 = (rg ** jnp.maximum(k - 1 - j, 0) / kf)[:, None] * dvg
+
+    # --- scenario 2: suffix over groups j..k-1; the k/((k-1)·r_g) rescale --
+    # folds into uv_scale, leaving only the sparse suffix_u/(k·s) delta.
+    cg = jax.vmap(lambda kk, jj: decay.batched_suffix_coefficients(
+        kk, jj, params.r_g, kmax))(k, j + 1).astype(f32)   # [U, K]
+    cu2 = jnp.where(valid_row,
+                    jnp.take_along_axis(cg, g, axis=1)
+                    * rb ** jnp.where(valid_row, tau - p, 0) / tau_f, 0.0)
+    s_ratio = jnp.where(s2, kf / ((safe_k - 1.0) * rg), 1.0)
+
+    # --- user-vector scatter values (raw storage) --------------------------
+    u_vals = jnp.where(s1[:, None], _slots(cu1, bh) / s[:, None],
+                       jnp.where(s2[:, None],
+                                 _slots(cu2, bh) / (kf * s)[:, None],
+                                 jnp.where(s3[:, None], -uraw * first, 0.0)))
+
+    # --- last-group row: reset to the new true value on the support --------
+    lgv_new_1 = s1 & (j == k - 1)         # last group shrank
+    lgv_new_2 = s2 & (j == k - 1)         # last group removed → old k-2
+    lgv_change = lgv_new_1 | lgv_new_2 | s3
+    cl1 = w_gj + dvg                      # v'_gj slots
+    cl2 = jnp.where(valid_row & (g == (k - 2)[:, None]),
+                    rb ** jnp.where(valid_row, tau - p, 0) / tau_f, 0.0)
+    cl = jnp.where(lgv_new_1[:, None], cl1,
+                   jnp.where(lgv_new_2[:, None], cl2, 0.0))
+    l_vals = jnp.where(lgv_change[:, None],
+                       -lraw * first + _slots(cl, bh) / sig[:, None], 0.0)
+
+    # --- history compaction + group-size bookkeeping (O(N·B), not O(I)) ----
+    src = jnp.where(t >= pos[:, None], jnp.minimum(t + 1, n_bask - 1), t)
+    new_hist = jnp.take_along_axis(hist, src[:, :, None], axis=1)
+    new_hist = new_hist.at[jnp.arange(n_rows),
+                           jnp.maximum(nb - 1, 0)].set(PAD_ID)
+    gs_s1 = gs.at[jnp.arange(n_rows), j].add(-1)
+    gs_s2 = jax.vmap(_remove_entry)(gs, j)
+    new_gs = jnp.where(single[:, None],
+                       jnp.where(last_g[:, None], jnp.zeros_like(gs), gs_s2),
+                       gs_s1)
+
+    em_ratio = jnp.where(s2, decay.error_growth_factor(safe_k, params.r_g),
+                         1.0)
+    em_ratio = jnp.where(s3, 1.0 / em, em_ratio)
+    d_nb = jnp.where(valid, -1, 0)
+    d_ng = jnp.where(valid & single, -1, 0)
+    return (ids, u_vals, l_vals, s_ratio, em_ratio, new_hist, new_gs,
+            d_nb, d_ng)
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
+                           params: TifuParams) -> StreamState:
+    """Apply a homogeneous basket-deletion sub-batch with sparse deltas.
+
+    State traffic is O(batch · N·B) — the deleted user's history window —
+    instead of the dense path's O(batch · n_items).  Semantics match
+    ``apply_del_basket_batch_dense`` and the RefEngine to ~1e-4
+    (tests/test_update_partition.py).
+    """
+    u = batch.user
+    hist = state.history[u]
+    gs = state.group_sizes[u]
+    nb = state.n_baskets[u]
+    k = state.n_groups[u]
+    s = state.uv_scale[u]
+    sig = state.lgv_scale[u]
+    em = state.err_mult[u]
+    valid = batch.valid & (nb > 0)
+    pos = jnp.clip(batch.pos, 0, jnp.maximum(nb - 1, 0))
+    (ids, u_vals, l_vals, s_ratio, em_ratio, new_hist, new_gs, d_nb,
+     d_ng) = _del_basket_sparse_core(state, u, hist, gs, nb, k, s, sig, em,
+                                     pos, valid, params)
+    vf = valid[:, None]
+    return StreamState(
+        user_vecs=sparse_row_scatter(state.user_vecs, u, ids, u_vals),
+        last_group_vecs=sparse_row_scatter(state.last_group_vecs, u, ids,
+                                           l_vals),
+        history=state.history.at[u].add(
+            jnp.where(valid[:, None, None], new_hist - hist, 0)),
+        group_sizes=state.group_sizes.at[u].add(
+            jnp.where(vf, new_gs - gs, 0)),
+        n_baskets=state.n_baskets.at[u].add(d_nb),
+        n_groups=state.n_groups.at[u].add(d_ng),
+        err_mult=state.err_mult.at[u].multiply(
+            jnp.where(valid, em_ratio, 1.0)),
+        uv_scale=state.uv_scale.at[u].multiply(
+            jnp.where(valid, s_ratio, 1.0)),
+        lgv_scale=state.lgv_scale,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
+                         params: TifuParams) -> StreamState:
+    """Apply a homogeneous item-deletion sub-batch with sparse deltas.
+
+    The Eq. 13 in-place branch touches a single (user, item) cell of each
+    vector table; the basket-vanish fallback reuses the sparse
+    basket-deletion core on the history window.  One fused program serves
+    both branches (the support is the window plus one appended item slot).
+    """
+    u = batch.user
+    hist = state.history[u]
+    gs = state.group_sizes[u]
+    nb = state.n_baskets[u]
+    k = state.n_groups[u]
+    s = state.uv_scale[u]
+    sig = state.lgv_scale[u]
+    em = state.err_mult[u]
+    f32 = state.user_vecs.dtype
+    n_rows = u.shape[0]
+    valid = batch.valid & (nb > 0)
+    pos = jnp.clip(batch.pos, 0, jnp.maximum(nb - 1, 0))
+
+    row = hist[jnp.arange(n_rows), pos]                       # [U, B]
+    present = valid & jnp.any(row == batch.item[:, None], axis=1)
+    blen = jnp.sum(row >= 0, axis=1)
+    apply_db = present & (blen == 1)                          # basket vanishes
+    apply_ip = present & (blen > 1)                           # Eq. 13 in place
+
+    (ids_db, u_db, l_db, s_ratio, em_ratio, hist_db, gs_db, d_nb,
+     d_ng) = _del_basket_sparse_core(state, u, hist, gs, nb, k, s, sig, em,
+                                     pos, apply_db, params)
+
+    # --- Eq. 13 in place: one cell per table -------------------------------
+    j, i = jax.vmap(_locate)(gs, pos)
+    tau_j = jnp.maximum(jnp.take_along_axis(gs, j[:, None], axis=1)[:, 0], 1)
+    rb = jnp.asarray(params.r_b, f32)
+    rg = jnp.asarray(params.r_g, f32)
+    kf = jnp.maximum(k, 1).astype(f32)
+    dg = -(rb ** jnp.maximum(tau_j - i, 0)) / tau_j.astype(f32)
+    du_ip = jnp.where(apply_ip,
+                      rg ** jnp.maximum(k - 1 - j, 0) * dg / (kf * s), 0.0)
+    dl_ip = jnp.where(apply_ip & (j == k - 1), dg / sig, 0.0)
+
+    ids = jnp.concatenate(
+        [ids_db, jnp.where(apply_ip, batch.item, PAD_ID)[:, None]], axis=1)
+    u_vals = jnp.concatenate([u_db, du_ip[:, None]], axis=1)
+    l_vals = jnp.concatenate([l_db, dl_ip[:, None]], axis=1)
+
+    # --- history/bookkeeping: in-place row edit vs fallback compaction -----
+    row_ip = jnp.where(row == batch.item[:, None], PAD_ID, row)
+    hist_ip = hist.at[jnp.arange(n_rows), pos].set(row_ip)
+    new_hist = jnp.where(apply_db[:, None, None], hist_db,
+                         jnp.where(apply_ip[:, None, None], hist_ip, hist))
+    new_gs = jnp.where(apply_db[:, None], gs_db, gs)
+    touched = apply_db | apply_ip
+    return StreamState(
+        user_vecs=sparse_row_scatter(state.user_vecs, u, ids, u_vals),
+        last_group_vecs=sparse_row_scatter(state.last_group_vecs, u, ids,
+                                           l_vals),
+        history=state.history.at[u].add(
+            jnp.where(touched[:, None, None], new_hist - hist, 0)),
+        group_sizes=state.group_sizes.at[u].add(
+            jnp.where(apply_db[:, None], new_gs - gs, 0)),
+        n_baskets=state.n_baskets.at[u].add(d_nb),
+        n_groups=state.n_groups.at[u].add(d_ng),
+        err_mult=state.err_mult.at[u].multiply(
+            jnp.where(apply_db, em_ratio, 1.0)),
+        uv_scale=state.uv_scale.at[u].multiply(
+            jnp.where(apply_db, s_ratio, 1.0)),
+        lgv_scale=state.lgv_scale,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -5,12 +5,14 @@ knn_topk           — fused similarity × streaming top-k (TIFU serving,
 decayed_scatter    — one-hot-matmul weighted multi-hot scatter (TIFU
                      user vectors; EmbeddingBag substrate)
 sparse_row_scatter — sparse per-row scatter-add into the [M, I] state
-                     (batched add-path deltas, DESIGN.md §3.3)
+                     (batched add/delete-path deltas, DESIGN.md §3.3/§3.5)
+sparse_row_gather  — sparse per-row gather of the [M, I] state (the read
+                     half of the pair: update-path supports)
 flash_attention    — blocked online-softmax attention (LM train/prefill)
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (flash_attention, knn_topk, multihot_scatter,
-                               sparse_row_scatter)
+                               sparse_row_gather, sparse_row_scatter)
 
 __all__ = ["ops", "ref", "flash_attention", "knn_topk", "multihot_scatter",
-           "sparse_row_scatter"]
+           "sparse_row_gather", "sparse_row_scatter"]

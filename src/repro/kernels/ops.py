@@ -8,13 +8,14 @@ ref.py oracles.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.knn_topk import knn_topk as _knn_pallas
+from repro.kernels.sparse_row_gather import \
+    sparse_row_gather as _sparse_gather_pallas
 from repro.kernels.sparse_row_scatter import \
     sparse_row_scatter as _sparse_scatter_pallas
 
@@ -60,6 +61,23 @@ def sparse_row_scatter(table, rows, ids, vals, impl: str = "auto"):
                 table, rows, ids, vals, bi=bi,
                 interpret=(impl == "interpret" or not _on_tpu()))
     return ref.sparse_row_scatter_ref(table, rows, ids, vals)
+
+
+def sparse_row_gather(table, rows, ids, impl: str = "auto"):
+    """Sparse per-row gather from a [M, I] table (update-path supports).
+
+    XLA's native gather is already O(U·W) on CPU/GPU; the Pallas kernel
+    is the TPU path (streams only the touched rows' tiles).
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.sparse_row_gather_ref(table, rows, ids)
+    n_items = table.shape[1]
+    for bi in (512, 256, 128):
+        if n_items % bi == 0:
+            return _sparse_gather_pallas(
+                table, rows, ids, bi=bi,
+                interpret=(impl == "interpret" or not _on_tpu()))
+    return ref.sparse_row_gather_ref(table, rows, ids)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,

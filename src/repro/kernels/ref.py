@@ -56,6 +56,23 @@ def sparse_row_scatter_ref(table, rows, ids, vals):
     return table.at[rows[:, None], safe].add(v)
 
 
+def sparse_row_gather_ref(table, rows, ids):
+    """Sparse per-row gather from a [M, I] table.
+
+    table: f32[M, I]; rows: i32[U]; ids: i32[U, W] (PAD=-1 → 0.0).
+    Returns f32[U, W] with out[r, w] = table[rows[r], ids[r, w]].
+
+    The read half of the sparse_row_scatter pair: the decremental paths
+    gather the raw values on an event's support before computing the
+    reset/delta terms (DESIGN.md §3.5).  O(U·W) elements addressed.
+    """
+    m = table.shape[0]
+    valid = ids >= 0
+    safe_rows = jnp.clip(rows, 0, m - 1)
+    vals = table[safe_rows[:, None], jnp.where(valid, ids, 0)]
+    return jnp.where(valid, vals, 0.0).astype(table.dtype)
+
+
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
                         scale: float | None = None):
     """Plain attention oracle. q,k,v: [B,S,H,D] (H == KV heads here)."""

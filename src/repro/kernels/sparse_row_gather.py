@@ -1,0 +1,83 @@
+"""Sparse per-row gather from a [M, I] table (TPU Pallas).
+
+The sparse decremental paths (core.updates.apply_del_basket_batch /
+apply_del_item_batch, DESIGN.md §3.5) and the sparse add path both need
+the *current raw values* of a [M, I] state table at a per-event support
+``(rows[U], ids[U, W])`` with W ≪ I:
+
+    vals[r, w] = table[rows[r], ids[r, w]]          (PAD ids give 0)
+
+This is the read half of the ``sparse_row_scatter`` pair and shares its
+scaffolding: the scalar-prefetched ``rows`` drive the table block index
+map, so a grid step only DMAs the [1, bi] tile of the row it actually
+reads — HBM traffic is O(U·I) worst case (touched rows only), never
+O(M·I).  TPUs dislike data-dependent gather, so per tile the read is a
+compare + reduce: the [W, bi] one-hot of the row's ids against the item
+tile's iota, contracted with the tile values.
+
+Grid = (U batch rows, I / bi item tiles), tiles innermost: each row's
+output block is revisited only on consecutive grid steps (zeroed on the
+first tile, accumulated across the sweep), which is the same
+consecutive-revisit contract the scatter kernel relies on.  Unlike the
+scatter, duplicate target rows need no sorting — reads commute.
+
+The XLA reference path (kernels.ref.sparse_row_gather_ref) is already
+O(U·W) and is what CPU/GPU use (kernels.ops dispatches).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(rows_ref, ids_ref, tab_ref, out_ref, *, bi: int):
+    del rows_ref  # consumed by the index maps only
+    ii = pl.program_id(1)
+
+    @pl.when(ii == 0)
+    def _zero():
+        out_ref[0, :] = jnp.zeros_like(out_ref[0, :])
+
+    ids = ids_ref[0, :]                              # [W] i32, PAD=-1
+    tile_vals = tab_ref[0, :]                        # [bi] f32
+    base = ii * bi
+    tile = base + jax.lax.broadcasted_iota(jnp.int32,
+                                           (ids.shape[0], bi), 1)
+    onehot = (ids[:, None] == tile).astype(tile_vals.dtype)  # PAD misses
+    out_ref[0, :] += jnp.sum(onehot * tile_vals[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
+def sparse_row_gather(table, rows, ids, bi: int = 512,
+                      interpret: bool = False):
+    """vals f32[U, W] = table[rows i32[U], ids i32[U, W]] (PAD ids → 0).
+
+    Requires I % bi == 0 — the ops.py dispatcher picks bi / falls back
+    to the XLA reference.
+    """
+    m, n_items = table.shape
+    u, w = ids.shape
+    bi = min(bi, n_items)
+    assert n_items % bi == 0, (n_items, bi)
+    rows = jnp.clip(rows, 0, m - 1).astype(jnp.int32)
+
+    grid = (u, n_items // bi)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, w), lambda r, ii, rows: (r, 0)),
+            pl.BlockSpec((1, bi), lambda r, ii, rows: (rows[r], ii)),
+        ],
+        out_specs=pl.BlockSpec((1, w), lambda r, ii, rows: (r, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, bi=bi),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((u, w), table.dtype),
+        interpret=interpret,
+    )(rows, ids, table)

@@ -22,7 +22,6 @@ documented in DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional
 
 import jax

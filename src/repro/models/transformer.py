@@ -22,7 +22,6 @@ Scale-critical choices (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from typing import Any, Optional
 

@@ -10,7 +10,6 @@ of full), the standard memory saver for 100B+ training.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax

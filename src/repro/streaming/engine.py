@@ -35,14 +35,17 @@ import time
 from collections import deque
 from typing import Dict, Iterable, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stability
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
                               KIND_DEL_ITEM, PAD_ID, AddBatch,
-                              DelBasketBatch, DelItemBatch, TifuParams)
-from repro.core.updates import (SCALE_FLOOR, apply_add_batch_counted,
+                              DelBasketBatch, DelItemBatch, TifuParams,
+                              _pow2_pad)
+from repro.core.updates import (SCALE_CEIL, SCALE_FLOOR,
+                                apply_add_batch_counted,
                                 apply_del_basket_batch, apply_del_item_batch,
                                 refresh_users, renormalize_users)
 from repro.streaming.state_store import StateStore
@@ -67,6 +70,10 @@ class EngineMetrics:
     renormalizations: int = 0
     # adds masked to no-ops by apply_add_batch's capacity guard
     dropped_adds: int = 0
+    # pow2 sub-batch bucket transitions (each is a fresh compile unless
+    # that bucket was seen before); shrinks are hysteresis-gated
+    bucket_grows: int = 0
+    bucket_shrinks: int = 0
     last_batch_seconds: float = 0.0
 
 
@@ -76,17 +83,28 @@ class StreamingEngine:
     def __init__(self, store: StateStore, params: TifuParams,
                  batch_size: int = 256,
                  stability_target_rel_err: Optional[float] = 1e-2,
-                 renorm_check_interval: int = 64):
+                 renorm_check_interval: int = 64,
+                 bucket_hysteresis: int = 8):
         self.store = store
         self.params = params
         self.batch_size = batch_size
+        # pow2 sub-batch bucket hysteresis (DESIGN.md §4.1): a kind's
+        # bucket grows immediately (the rows exist, there is no choice)
+        # but only shrinks after this many CONSECUTIVE micro-batches
+        # whose sub-batch would fit the smaller bucket — kind counts that
+        # straddle a pow2 boundary no longer flip-flop compiled shapes.
+        self.bucket_hysteresis = max(1, bucket_hysteresis)
+        self._kind_bucket: Dict[int, int] = {}
+        self._below_bucket: Dict[int, int] = {}
         # The renormalization probe must fire before a scale that passed
         # the last probe can underflow f32 (raw rows scale as 1/scale).
-        # A user gets at most one add per batch; the worst per-add shrink
-        # factor is min(r_b, r_g)/2 (k=1 group opening / tau=1 append),
-        # so cap the interval I at f^I >= 1e-14: a scale just above the
-        # probe floor (SCALE_FLOOR·1e2) then stays above ~1e-30 — raw
-        # magnitudes <= ~1e30, safely inside f32 range.
+        # A user gets at most one event per batch; the worst per-add
+        # shrink factor is min(r_b, r_g)/2 (k=1 group opening / tau=1
+        # append) and the worst per-delete growth factor is its inverse
+        # 2/min(r_b, r_g) (Eq. 12 fold, k=2), so cap the interval I at
+        # f^I >= 1e-14: a scale inside the probe bounds then stays
+        # within a further 1e14 factor — raw magnitudes <= ~1e30/1e-30,
+        # safely inside f32 range in both directions.
         f = min(params.r_b, params.r_g) / 2.0
         sound = int(np.floor(np.log(1e-14) / np.log(f))) if f < 1.0 else 64
         self.renorm_check_interval = max(1, min(renorm_check_interval,
@@ -170,6 +188,26 @@ class StreamingEngine:
         self._n_pending -= len(taken)
         return taken
 
+    def _bucket(self, kind: int, n: int) -> int:
+        """Padded sub-batch size for ``n`` rows of ``kind``, with shrink
+        hysteresis: growth is immediate, shrink waits for
+        ``bucket_hysteresis`` consecutive under-boundary micro-batches."""
+        want = _pow2_pad(n, self.batch_size)
+        cur = self._kind_bucket.get(kind, 0)
+        if want >= cur:
+            if want > cur and cur:
+                self.metrics.bucket_grows += 1
+            self._kind_bucket[kind] = want
+            self._below_bucket[kind] = 0
+            return want
+        self._below_bucket[kind] = self._below_bucket.get(kind, 0) + 1
+        if self._below_bucket[kind] >= self.bucket_hysteresis:
+            self._kind_bucket[kind] = want
+            self._below_bucket[kind] = 0
+            self.metrics.bucket_shrinks += 1
+            return want
+        return cur
+
     def _apply_events(self, events: List[Event]) -> None:
         """Partition a micro-batch by kind and run one homogeneous
         compiled program per kind present (users are disjoint across the
@@ -177,28 +215,31 @@ class StreamingEngine:
         adds = [ev for ev in events if ev.kind == KIND_ADD_BASKET]
         delb = [ev for ev in events if ev.kind == KIND_DEL_BASKET]
         deli = [ev for ev in events if ev.kind == KIND_DEL_ITEM]
-        cap = self.batch_size
         b = self.store.cfg.max_basket_size
         if adds:
-            batch = AddBatch.build([ev.user for ev in adds],
-                                   [ev.items for ev in adds], b, pad_cap=cap)
+            batch = AddBatch.build(
+                [ev.user for ev in adds], [ev.items for ev in adds], b,
+                pad_to=self._bucket(KIND_ADD_BASKET, len(adds)))
             # the counted variant surfaces capacity drops (masked to
             # no-ops by the guard) from the same fused program
             self.store.state, dropped = apply_add_batch_counted(
                 self.store.state, batch, self.params)
             self.metrics.dropped_adds += int(dropped)
         if delb:
-            batch = DelBasketBatch.build([ev.user for ev in delb],
-                                         [ev.pos for ev in delb],
-                                         pad_cap=cap)
+            batch = DelBasketBatch.build(
+                [ev.user for ev in delb], [ev.pos for ev in delb],
+                pad_to=self._bucket(KIND_DEL_BASKET, len(delb)))
             self.store.state = apply_del_basket_batch(self.store.state,
                                                       batch, self.params)
         if deli:
-            batch = DelItemBatch.build([ev.user for ev in deli],
-                                       [ev.pos for ev in deli],
-                                       [ev.item for ev in deli], pad_cap=cap)
+            batch = DelItemBatch.build(
+                [ev.user for ev in deli], [ev.pos for ev in deli],
+                [ev.item for ev in deli],
+                pad_to=self._bucket(KIND_DEL_ITEM, len(deli)))
             self.store.state = apply_del_item_batch(self.store.state, batch,
                                                     self.params)
+        # serving-corpus cache: only these rows changed (DESIGN.md §3.6)
+        self.store.invalidate_users([ev.user for ev in events])
 
     def _maintain(self) -> None:
         """Stability refreshes + scale renormalization after a batch."""
@@ -210,22 +251,29 @@ class StreamingEngine:
                     self.store.state, jnp.asarray(bad, jnp.int32),
                     self.params)
                 self.metrics.refreshes += int(bad.size)
-        # Scales take thousands of events per user to approach the floor
-        # (each group opening shrinks uv_scale by ~r_g), so probe them
-        # only every Nth batch — the gate itself is a blocking sync and
-        # must stay off the per-step hot path.
+                # a refresh changes the served values (it resets the
+                # accumulated fp error), so those rows are stale too
+                self.store.invalidate_users(bad)
+        # Scales take thousands of events per user to approach either
+        # bound (each group opening shrinks uv_scale by ~r_g, each Eq. 12
+        # deletion grows it by ~1/r_g), so probe them only every Nth
+        # batch — the gate itself is a blocking sync and must stay off
+        # the per-step hot path.
         if self.metrics.batches % self.renorm_check_interval:
             return
-        floor = SCALE_FLOOR * 1e2   # renormalize well before the floor
-        min_scale = float(jnp.minimum(self.store.state.uv_scale.min(),
-                                      self.store.state.lgv_scale.min()))
-        if min_scale < floor:
-            small = np.nonzero(
-                (np.asarray(self.store.state.uv_scale) < floor)
-                | (np.asarray(self.store.state.lgv_scale) < floor))[0]
+        floor = SCALE_FLOOR * 1e2   # renormalize well before the bounds
+        ceil = SCALE_CEIL * 1e-2
+        uv = self.store.state.uv_scale
+        lgv = self.store.state.lgv_scale
+        lo, hi = jax.device_get((jnp.minimum(uv.min(), lgv.min()),
+                                 jnp.maximum(uv.max(), lgv.max())))
+        if lo < floor or hi > ceil:
+            uv_h, lgv_h = np.asarray(uv), np.asarray(lgv)
+            out = np.nonzero((uv_h < floor) | (lgv_h < floor)
+                             | (uv_h > ceil) | (lgv_h > ceil))[0]
             self.store.state = renormalize_users(
-                self.store.state, jnp.asarray(small, jnp.int32))
-            self.metrics.renormalizations += int(small.size)
+                self.store.state, jnp.asarray(out, jnp.int32))
+            self.metrics.renormalizations += int(out.size)
 
     def step(self) -> int:
         """Process one micro-batch. Returns number of events applied."""

@@ -6,21 +6,29 @@ the store is a ``StreamState`` pytree whose user axis is sharded over the
 vector is calculated independently").  The item axis of ``user_vecs`` can
 additionally be sharded over ``"model"`` for the kNN stage.
 
+The store also owns the **serving corpus cache** (DESIGN.md §3.6): the
+materialized ``[n_users, n_items]`` true-value corpus that kNN queries
+read.  A micro-batch touches a handful of users; the engine marks those
+rows dirty (``invalidate_users``) and ``corpus()`` refreshes only them —
+high-QPS serving no longer pays a full scale×raw recompute per query.
+
 Checkpointing + the idempotent update log give exactly-once semantics
 across preemptions (DESIGN.md §5).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
-from typing import Optional
+from typing import Optional, Set
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.types import StreamState
+from repro.core.types import StreamState, _pow2_pad
 
 
 @dataclasses.dataclass
@@ -53,8 +61,17 @@ def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
     )
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _refresh_corpus_rows(corpus, user_vecs, uv_scale, rows):
+    """corpus[rows] = uv_scale[rows] * user_vecs[rows], in place.
+
+    ``rows`` may contain duplicates (pow2 padding repeats the first dirty
+    row); duplicate writes carry identical values."""
+    return corpus.at[rows].set(user_vecs[rows] * uv_scale[rows, None])
+
+
 class StateStore:
-    """Owns the StreamState and its persistence.
+    """Owns the StreamState, the serving corpus cache and persistence.
 
     On a real cluster the store's arrays are device-sharded via the
     shardings above; on the CPU test runner they are single-device.
@@ -70,6 +87,55 @@ class StateStore:
             sh = state_shardings(cfg, mesh)
             self.state = jax.tree.map(jax.device_put, self.state,
                                       sh, is_leaf=lambda x: x is None)
+        self._corpus: Optional[jax.Array] = None
+        self._dirty: Set[int] = set()
+        self.corpus_full_builds = 0
+        self.corpus_rows_refreshed = 0
+
+    # -- serving corpus cache (DESIGN.md §3.6) --------------------------------
+
+    def invalidate_users(self, users) -> None:
+        """Mark user rows stale (the engine calls this after every
+        micro-batch / stability refresh with the touched users)."""
+        if self._corpus is None:
+            return            # no cache yet: the first corpus() builds it
+        self._dirty.update(int(x) for x in np.asarray(users).ravel())
+
+    def invalidate_all(self) -> None:
+        """Drop the cache entirely (restore, out-of-band state edits)."""
+        self._corpus = None
+        self._dirty.clear()
+
+    def corpus(self) -> jax.Array:
+        """The materialized true-value corpus f32[n_users, n_items].
+
+        First call (or after ``invalidate_all``) densifies everything;
+        subsequent calls refresh only rows dirtied since the last call.
+        The row list is padded to a pow2 bucket (duplicating one dirty
+        row) so the refresh program compiles O(log n_users) times.
+
+        LIFETIME: the refresh updates the cached buffer IN PLACE
+        (donation keeps it O(dirty·I)), so the returned array is valid
+        only until the next ``corpus()`` call that follows an
+        invalidation.  Finish (or copy) a request batch before applying
+        the next micro-batch's refresh — the serving loop here is
+        synchronous, matching launch/serve.py."""
+        if self._corpus is None:
+            self._corpus = self.state.materialized_user_vecs()
+            self._dirty.clear()
+            self.corpus_full_builds += 1
+        elif self._dirty:
+            rows = np.fromiter(self._dirty, np.int32, len(self._dirty))
+            self.corpus_rows_refreshed += rows.size
+            pad = _pow2_pad(rows.size, self.cfg.n_users) - rows.size
+            if pad:
+                rows = np.concatenate([rows, np.full(pad, rows[0],
+                                                     np.int32)])
+            self._corpus = _refresh_corpus_rows(
+                self._corpus, self.state.user_vecs, self.state.uv_scale,
+                jnp.asarray(rows))
+            self._dirty.clear()
+        return self._corpus
 
     # -- persistence (exactly-once recovery substrate) -----------------------
 
@@ -116,4 +182,5 @@ class StateStore:
             sh = state_shardings(self.cfg, self.mesh)
             state = jax.tree.map(jax.device_put, state, sh)
         self.state = state
+        self.invalidate_all()
         return step

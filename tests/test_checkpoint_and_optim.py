@@ -1,4 +1,5 @@
 """Checkpointing (incl. elastic re-mesh restore) and optimizers."""
+import os
 import subprocess
 import sys
 
@@ -66,6 +67,100 @@ def test_elastic_restore_across_mesh_sizes(tmp_path):
                         str(tmp_path)], capture_output=True, text=True,
                        timeout=300, cwd="/root/repo")
     assert "ELASTIC_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_stream_state_restore_across_representations(tmp_path, rng):
+    """Pre-scale, scaled and cached-corpus representations of the same
+    logical state all restore and serve identically (DESIGN.md §3.3/§3.6).
+
+    * scaled: a live store (uv/lgv scales != 1) checkpointed as-is;
+    * pre-scale: the same state with the scale leaves stripped from the
+      npz (a checkpoint written before the scaled representation, which
+      restore() migrates to scales of 1) after folding them in;
+    * cached-corpus: the serving cache is warm at checkpoint time — it is
+      never persisted, and a cold restore must rebuild it identically.
+    """
+    from repro.core import RefEngine, TifuParams, knn, renormalize_users
+    from repro.streaming import Event, StateStore, StoreConfig, \
+        StreamingEngine
+    from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
+                                  KIND_DEL_ITEM)
+
+    P = TifuParams(n_items=37, group_size=3, r_b=0.9, r_g=0.7,
+                   k_neighbors=4, alpha=0.7)
+    M, N, B = 12, 24, 5
+
+    def make_store():
+        return StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                      max_baskets=N, max_basket_size=B,
+                                      max_groups=N))
+
+    store = make_store()
+    eng = StreamingEngine(store, P, batch_size=8)
+    ref = RefEngine(P, dtype=np.float32)
+    events = []
+    for _ in range(150):
+        u = int(rng.integers(0, M))
+        st = ref.state(u)
+        if st.n_baskets == 0 or rng.random() < 0.7:
+            items = rng.choice(P.n_items, size=int(rng.integers(1, B)),
+                               replace=False).astype(np.int32)
+            ref.add_basket(u, items)
+            events.append(Event(KIND_ADD_BASKET, u, items=items))
+        elif rng.random() < 0.5:
+            pos = int(rng.integers(0, st.n_baskets))
+            ref.delete_basket(u, pos)
+            events.append(Event(KIND_DEL_BASKET, u, pos=pos))
+        else:
+            pos = int(rng.integers(0, st.n_baskets))
+            item = int(rng.choice(st.history[pos]))
+            ref.delete_item(u, pos, item)
+            events.append(Event(KIND_DEL_ITEM, u, pos=pos, item=item))
+    eng.submit(events)
+    eng.run_until_drained()
+    assert float(store.state.uv_scale.min()) < 1.0   # genuinely scaled
+
+    users = jnp.arange(M, dtype=jnp.int32)
+
+    def serve(st):
+        return np.asarray(knn.recommend_for_users(
+            st.corpus(), users, k=P.k_neighbors, alpha=P.alpha, topn=5))
+
+    baseline_recs = serve(store)          # warm cached-corpus serving
+
+    # -- scaled representation checkpoint ----------------------------------
+    d_scaled = os.path.join(str(tmp_path), "scaled")
+    eng.checkpoint(d_scaled, 1)
+
+    # -- pre-scale checkpoint: fold scales, strip the scale leaves ---------
+    folded = make_store()
+    folded.state = renormalize_users(
+        jax.tree_util.tree_map(lambda x: x.copy(), store.state),
+        jnp.arange(M, dtype=jnp.int32))
+    d_pre = os.path.join(str(tmp_path), "prescale")
+    folded.checkpoint(d_pre, 1)
+    npz = os.path.join(d_pre, "state_0000000001.npz")
+    leaves = dict(np.load(npz))
+    for key in ("uv_scale", "lgv_scale"):
+        leaves.pop(key)
+    with open(npz, "wb") as f:
+        np.savez_compressed(f, **leaves)
+
+    for directory in (d_scaled, d_pre):
+        restored = make_store()
+        restored.restore(directory)
+        np.testing.assert_allclose(
+            np.asarray(restored.state.materialized_user_vecs()),
+            np.asarray(store.state.materialized_user_vecs()),
+            rtol=1e-5, atol=1e-6, err_msg=directory)
+        np.testing.assert_array_equal(serve(restored), baseline_recs)
+
+    # -- cached corpus is not persisted: restoring over a warm cache -------
+    warm = make_store()
+    warm.corpus()                         # cold build on empty state
+    warm.restore(d_scaled)                # must invalidate it
+    np.testing.assert_array_equal(serve(warm), baseline_recs)
+    assert warm.corpus_full_builds == 2
 
 
 @pytest.mark.parametrize("make_opt", [

@@ -6,7 +6,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim.compression import (compress_with_feedback, decompress,
                                      dequantize_int8, init_error_feedback,

@@ -4,7 +4,6 @@ references exactly."""
 import subprocess
 import sys
 
-import pytest
 
 
 def _run(script: str) -> str:

@@ -5,7 +5,6 @@ The full 512-chip sweep is launch/dryrun.py (results/ JSON)."""
 import subprocess
 import sys
 
-import pytest
 
 SCRIPT = r"""
 import os

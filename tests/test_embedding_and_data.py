@@ -1,7 +1,6 @@
 """EmbeddingBag substrate + paper-rule bag maintenance + data pipeline."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import decay
 from repro.data import synthetic

@@ -10,6 +10,7 @@ from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.knn_topk import knn_topk
+from repro.kernels.sparse_row_gather import sparse_row_gather
 from repro.kernels.sparse_row_scatter import sparse_row_scatter
 
 
@@ -134,6 +135,60 @@ def test_sparse_row_scatter_all_pad_is_identity(rng):
     vals = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
     out = sparse_row_scatter(table, rows, ids, vals, bi=128, interpret=True)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(table))
+
+
+@pytest.mark.parametrize("m,items,u,w,bi", [
+    (64, 512, 16, 24, 128),
+    (128, 1024, 32, 64, 512),
+    (16, 640, 8, 8, 128),            # non-pow2 items
+    (256, 2048, 1, 48, 512),         # single-row batch
+])
+def test_sparse_row_gather_matches_ref(rng, m, items, u, w, bi):
+    table = jnp.asarray(rng.normal(size=(m, items)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, m, u), jnp.int32)
+    ids = jnp.asarray(rng.integers(-1, items, (u, w)), jnp.int32)
+    out = sparse_row_gather(table, rows, ids, bi=bi, interpret=True)
+    exp = ref.sparse_row_gather_ref(table, rows, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_sparse_row_gather_duplicate_rows_and_ids(rng):
+    """Duplicate target rows and repeated ids within a row read the same
+    cells independently (no sort/accumulate needed, unlike the scatter)."""
+    m, items = 8, 512
+    table = jnp.asarray(rng.normal(size=(m, items)), jnp.float32)
+    rows = jnp.asarray([3, 3, 5, 0], jnp.int32)
+    ids = jnp.asarray(rng.integers(-1, items, (4, 16)), jnp.int32)
+    ids = ids.at[0, :4].set(7).at[1, :4].set(7)
+    out = sparse_row_gather(table, rows, ids, bi=128, interpret=True)
+    exp = ref.sparse_row_gather_ref(table, rows, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6)
+
+
+def test_sparse_row_gather_all_pad_is_zero(rng):
+    table = jnp.asarray(rng.normal(size=(4, 256)), jnp.float32)
+    out = sparse_row_gather(table, jnp.zeros((3,), jnp.int32),
+                            jnp.full((3, 8), -1, jnp.int32), bi=128,
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((3, 8)))
+
+
+def test_gather_scatter_round_trip(rng):
+    """scatter(gather) with negated vals zeroes exactly the support —
+    the reset idiom the sparse delete paths rely on (DESIGN.md §3.5)."""
+    m, items, u, w = 8, 512, 4, 12
+    table = jnp.zeros((m, items), jnp.float32)
+    rows = jnp.asarray([1, 2, 5, 7], jnp.int32)
+    ids = jnp.asarray(rng.choice(items, size=(u, w), replace=False),
+                      jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(u, w)), jnp.float32)
+    table = ref.sparse_row_scatter_ref(table, rows, ids, vals)
+    got = sparse_row_gather(table, rows, ids, bi=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(vals), atol=1e-6)
+    wiped = sparse_row_scatter(table, rows, ids, -got, bi=128,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(wiped), np.zeros((m, items)),
+                               atol=1e-6)
 
 
 @pytest.mark.parametrize("b,s,h,d,win,bq,bk", [

@@ -1,10 +1,8 @@
 """Streaming engine (Algorithm 1): parity with the ref engine, per-user
 ordering under conflicts, exactly-once recovery, stability refresh."""
 import dataclasses
-import tempfile
 
 import numpy as np
-import pytest
 
 from repro.core import RefEngine, TifuParams, KIND_ADD_BASKET
 from repro.data import stream, synthetic
@@ -120,7 +118,6 @@ def test_paper_deletion_scenario(rng):
     assert n == len(events)
     # spot-check a few users against from-scratch on the engine's history
     from repro.core.tifu import user_vector_padded
-    import jax
     for u in list(ds.histories)[:5]:
         vec = np.asarray(store.state.materialized_user_vecs()[u])
         fresh = np.asarray(user_vector_padded(

@@ -4,14 +4,17 @@ renormalization, and full randomized mixed streams through the engine
 (including replay-after-restore)."""
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import (RefEngine, StreamState, TifuParams, AddBatch,
-                        DelBasketBatch, DelItemBatch, SCALE_FLOOR,
-                        apply_add_batch, apply_del_basket_batch,
-                        apply_del_item_batch, renormalize_users)
+                        DelBasketBatch, DelItemBatch, SCALE_CEIL,
+                        SCALE_FLOOR, apply_add_batch,
+                        apply_del_basket_batch, apply_del_basket_batch_dense,
+                        apply_del_item_batch, apply_del_item_batch_dense,
+                        renormalize_users)
 from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
 from repro.streaming import Event, StateStore, StoreConfig, StreamingEngine
 
@@ -255,13 +258,206 @@ def test_engine_counts_dropped_adds(rng):
 
 
 # ---------------------------------------------------------------------------
+# Sparse decremental paths vs the dense baselines (DESIGN.md §3.5)
+# ---------------------------------------------------------------------------
+
+def _seeded_pair(rng, ref, n_baskets_per_user=6):
+    """Two identical StreamStates (sparse/dense arms) + a seeded ref."""
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    for u in range(M):
+        for _ in range(n_baskets_per_user):
+            b = rng.choice(P.n_items, size=int(rng.integers(1, B)),
+                           replace=False)
+            ref.add_basket(u, b)
+            state = apply_add_batch(state, AddBatch.build([u], [b], B), P)
+    clone = jax.tree_util.tree_map(lambda x: x.copy(), state)
+    return state, clone
+
+
+def test_sparse_del_basket_matches_dense_and_ref(rng):
+    """One DelBasketBatch through both arms: sparse == dense == ref,
+    covering Eq. 10/11 (tau_j > 1) and Eq. 12 (tau_j == 1) positions."""
+    ref = RefEngine(P, dtype=np.float32)
+    sparse, dense = _seeded_pair(rng, ref, 7)   # 7 = 3+3+1: a single-
+    users = list(range(M))                      # basket last group
+    positions = [u % 7 for u in users]          # spans all groups
+    for u, pos in zip(users, positions):
+        ref.delete_basket(u, pos)
+    batch = DelBasketBatch.build(users, positions)
+    sparse = apply_del_basket_batch(sparse, batch, P)
+    dense = apply_del_basket_batch_dense(dense, batch, P)
+    assert_matches_ref(sparse, ref, M)
+    np.testing.assert_allclose(
+        np.asarray(sparse.materialized_user_vecs()),
+        np.asarray(dense.materialized_user_vecs()), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(sparse.materialized_last_group_vecs()),
+        np.asarray(dense.materialized_last_group_vecs()),
+        rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sparse.history),
+                                  np.asarray(dense.history))
+    np.testing.assert_array_equal(np.asarray(sparse.group_sizes),
+                                  np.asarray(dense.group_sizes))
+
+
+def test_sparse_del_item_matches_dense_and_ref(rng):
+    """DelItemBatch through both arms, including the basket-vanish
+    fallback (a singleton basket) and absent-item no-ops."""
+    ref = RefEngine(P, dtype=np.float32)
+    sparse, dense = _seeded_pair(rng, ref, 6)
+    # user 0: make basket 2 a singleton so deleting its item vanishes it
+    single_item = int(np.asarray(sparse.history[0, 2].max()))
+    for _ in range(int(np.sum(np.asarray(sparse.history[0, 2]) >= 0)) - 1):
+        row = np.asarray(sparse.history[0, 2])
+        victim = int(row[row >= 0][0])
+        if victim == single_item:
+            victim = int(row[row >= 0][1])
+        ref.delete_item(0, 2, victim)
+        b = DelItemBatch.build([0], [2], [victim])
+        sparse = apply_del_item_batch(sparse, b, P)
+        dense = apply_del_item_batch_dense(dense, b, P)
+    users, positions, items = [], [], []
+    for u in range(M):
+        if u == 0:
+            pos, it = 2, single_item          # vanish fallback
+        else:
+            pos = int(rng.integers(0, ref.state(u).n_baskets))
+            it = int(rng.choice(ref.state(u).history[pos]))
+        ref.delete_item(u, pos, it)
+        users.append(u)
+        positions.append(pos)
+        items.append(it)
+    batch = DelItemBatch.build(users, positions, items)
+    sparse = apply_del_item_batch(sparse, batch, P)
+    dense = apply_del_item_batch_dense(dense, batch, P)
+    assert_matches_ref(sparse, ref, M)
+    np.testing.assert_allclose(
+        np.asarray(sparse.materialized_user_vecs()),
+        np.asarray(dense.materialized_user_vecs()), rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sparse.history),
+                                  np.asarray(dense.history))
+
+
+def test_sparse_delete_to_empty_and_rebuild(rng):
+    """Deleting every basket empties the state (scenario 3) and
+    subsequent adds rebuild it correctly on the residue-free support."""
+    ref = RefEngine(P, dtype=np.float32)
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    baskets = [rng.choice(P.n_items, size=3, replace=False)
+               for _ in range(4)]
+    for b in baskets:
+        ref.add_basket(0, b)
+        state = apply_add_batch(state, AddBatch.build([0], [b], B), P)
+    for _ in range(4):
+        ref.delete_basket(0, 0)
+        state = apply_del_basket_batch(state, DelBasketBatch.build([0], [0]),
+                                       P)
+    assert int(state.n_baskets[0]) == 0 and int(state.n_groups[0]) == 0
+    np.testing.assert_allclose(
+        np.asarray(state.materialized_user_vecs()[0]),
+        np.zeros(P.n_items), atol=1e-5)
+    b = rng.choice(P.n_items, size=4, replace=False)
+    ref.add_basket(0, b)
+    state = apply_add_batch(state, AddBatch.build([0], [b], B), P)
+    assert_matches_ref(state, ref, 1)
+
+
+def test_eq12_delete_grows_scale_and_renormalizes(rng):
+    """Eq. 12 deletions fold the k/((k-1)·r_g) rescale into uv_scale
+    (growth!); renormalize_users folds it back value-preservingly and
+    the engine's ceiling probe keeps raw rows finite."""
+    p1 = TifuParams(n_items=29, group_size=1, r_b=0.9, r_g=0.7)
+    state = StreamState.zeros(2, p1.n_items, 64, 4, 64)
+    ref = RefEngine(p1, dtype=np.float64)
+    for _ in range(30):
+        b = rng.choice(p1.n_items, size=3, replace=False)
+        ref.add_basket(0, b)
+        state = apply_add_batch(state, AddBatch.build([0], [b], 4), p1)
+    s_after_adds = float(state.uv_scale[0])
+    assert s_after_adds < 1e-3
+    for _ in range(25):                   # every delete is an Eq. 12 case
+        ref.delete_basket(0, 0)
+        state = apply_del_basket_batch(state,
+                                       DelBasketBatch.build([0], [0]), p1)
+    assert float(state.uv_scale[0]) > s_after_adds * 100.0   # scale grew
+    before = np.asarray(state.materialized_user_vecs())
+    state = renormalize_users(state, jnp.asarray([0], jnp.int32))
+    assert float(state.uv_scale[0]) == 1.0
+    np.testing.assert_allclose(np.asarray(state.materialized_user_vecs()),
+                               before, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(state.materialized_user_vecs()[0]),
+        ref.state(0).user_vec.astype(np.float32), rtol=1e-3, atol=1e-4)
+    assert SCALE_CEIL > 1.0 / SCALE_FLOOR * 1e-37   # bounds sane
+
+
+def test_engine_bucket_hysteresis():
+    """A kind's pow2 bucket grows immediately but shrinks only after
+    bucket_hysteresis consecutive below-boundary micro-batches
+    (ROADMAP: recompile churn when counts straddle a boundary)."""
+    store = StateStore(StoreConfig(n_users=64, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K))
+    eng = StreamingEngine(store, P, batch_size=32, bucket_hysteresis=3)
+    rng = np.random.default_rng(0)
+
+    def run_adds(n_users_in_batch, lo):
+        for u in range(lo, lo + n_users_in_batch):
+            eng.add_basket(u, rng.choice(P.n_items, size=3, replace=False))
+        eng.step()
+
+    run_adds(9, 0)                        # bucket -> 16
+    assert eng._kind_bucket[KIND_ADD_BASKET] == 16
+    for i in range(2):                    # below boundary, held at 16
+        run_adds(5, 10 * (i + 1))
+        assert eng._kind_bucket[KIND_ADD_BASKET] == 16
+    run_adds(5, 40)                       # 3rd consecutive: shrink to 8
+    assert eng._kind_bucket[KIND_ADD_BASKET] == 8
+    assert eng.metrics.bucket_shrinks == 1
+    run_adds(9, 50)                       # growth is immediate
+    assert eng._kind_bucket[KIND_ADD_BASKET] == 16
+    assert eng.metrics.bucket_grows == 1
+
+
+def test_store_corpus_cache_tracks_state(rng):
+    """store.corpus() == materialized_user_vecs() after every batch while
+    refreshing only the rows the engine touched."""
+    store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K))
+    eng = StreamingEngine(store, P, batch_size=4)
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 80, M)
+    np.testing.assert_allclose(np.asarray(store.corpus()),
+                               np.zeros((M, P.n_items)))   # cold build
+    eng.submit(events)
+    while eng.step():
+        np.testing.assert_allclose(
+            np.asarray(store.corpus()),
+            np.asarray(store.state.materialized_user_vecs()),
+            rtol=1e-6, atol=1e-7)
+    assert store.corpus_full_builds == 1
+    # each batch dirties <= batch_size rows; far fewer refreshes than a
+    # full rebuild per step would cost
+    assert 0 < store.corpus_rows_refreshed <= eng.metrics.batches * 4
+    # restore invalidates: the next corpus() is a fresh full build
+    store.invalidate_all()
+    np.testing.assert_allclose(
+        np.asarray(store.corpus()),
+        np.asarray(store.state.materialized_user_vecs()), rtol=1e-6,
+        atol=1e-7)
+    assert store.corpus_full_builds == 2
+
+
+# ---------------------------------------------------------------------------
 # Randomized mixed streams through the engine (acceptance criterion)
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("seed", [0, 1])
 def test_engine_mixed_stream_500_events_matches_ref(seed):
-    """>= 500 interleaved add/delete events: batched state matches the
-    RefEngine user vectors to <= 1e-4 relative error."""
+    """>= 500 interleaved add/delete events: the engine's (sparse-path)
+    state matches BOTH the RefEngine user vectors and a dense-baseline
+    shadow arm (apply_del_*_batch_dense) to <= 1e-4 relative error."""
     rng = np.random.default_rng(seed)
     store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
                                    max_baskets=N, max_basket_size=B,
@@ -269,10 +465,30 @@ def test_engine_mixed_stream_500_events_matches_ref(seed):
     eng = StreamingEngine(store, P, batch_size=16)
     ref = RefEngine(P, dtype=np.float32)
     events = random_mixed_events(rng, ref, 520, M)
+    # shadow arm: the same stream through the retained dense baselines
+    dense = StreamState.zeros(M, P.n_items, N, B, K)
+    for ev in events:
+        if ev.kind == KIND_ADD_BASKET:
+            dense = apply_add_batch(
+                dense, AddBatch.build([ev.user], [ev.items], B), P)
+        elif ev.kind == KIND_DEL_BASKET:
+            dense = apply_del_basket_batch_dense(
+                dense, DelBasketBatch.build([ev.user], [ev.pos]), P)
+        else:
+            dense = apply_del_item_batch_dense(
+                dense, DelItemBatch.build([ev.user], [ev.pos], [ev.item]),
+                P)
     eng.submit(events)
     n = eng.run_until_drained()
     assert n == len(events)
     assert_matches_ref(store.state, ref, M, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(store.state.materialized_user_vecs()),
+        np.asarray(dense.materialized_user_vecs()), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(store.state.materialized_last_group_vecs()),
+        np.asarray(dense.materialized_last_group_vecs()),
+        rtol=1e-4, atol=1e-5)
 
 
 def test_engine_mixed_replay_after_restore(rng, tmp_path):
