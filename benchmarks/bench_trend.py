@@ -1,0 +1,97 @@
+"""Bench trend gate: diff a fresh bench JSON against the committed one.
+
+Compares the summary *speedup* metrics of every run in ``--new`` against
+the baseline run with the same (backend, mode) in ``--baseline`` and
+fails (exit 1) when any enforced metric regressed by more than
+``--tolerance`` (default 30%, the ISSUE 3 acceptance bound).  Speedups
+are arm-vs-arm ratios measured in one process, so they are far less
+load-sensitive than absolute latencies — that is what makes them
+gateable on shared CI runners.
+
+Rules:
+  * only ``*speedup*`` summary keys are enforced (absolute-latency and
+    growth metrics are printed for context only);
+  * metrics whose BASELINE value is below ``--floor`` (default 1.5x) are
+    reported but not enforced — smoke-scale ratios near 1x are noise;
+  * ``interpret``-backend runs are never enforced (interpret-mode Pallas
+    timings are equivalence/plumbing numbers, not perf);
+  * runs present in only one file are skipped with a note (a TPU entry
+    in the committed file does not fail a CPU-only CI run).
+
+    PYTHONPATH=src python benchmarks/bench_trend.py \
+        --new bench-smoke.json --baseline BENCH_updates.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _runs(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    if "runs" in payload:
+        runs = payload["runs"]
+    else:                                   # legacy single-run layout
+        runs = [payload]
+    return {(r.get("backend", "cpu"), r.get("mode", "full")): r
+            for r in runs}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new", required=True, help="freshly produced JSON")
+    ap.add_argument("--baseline", required=True, help="committed JSON")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="max allowed fractional regression (0.30 = 30%%)")
+    ap.add_argument("--floor", type=float, default=1.5,
+                    help="baseline speedups below this are not enforced")
+    args = ap.parse_args(argv)
+
+    new_runs = _runs(args.new)
+    base_runs = _runs(args.baseline)
+    regressions = []
+    compared = 0
+    for key, new in sorted(new_runs.items()):
+        base = base_runs.get(key)
+        if base is None:
+            print(f"[skip] no baseline run for backend={key[0]} "
+                  f"mode={key[1]}")
+            continue
+        ns, bs = new.get("summary", {}), base.get("summary", {})
+        for metric in sorted(set(ns) & set(bs)):
+            nv, bv = ns[metric], bs[metric]
+            if not isinstance(nv, (int, float)) \
+                    or not isinstance(bv, (int, float)):
+                continue
+            # interpret-mode runs are equivalence/plumbing numbers (the
+            # bench refuses them outside --smoke); never gate on them
+            enforced = "speedup" in metric and bv >= args.floor \
+                and key[0] != "interpret"
+            status = "ok"
+            if enforced and bv > 0:
+                drop = 1.0 - nv / bv
+                if drop > args.tolerance:
+                    status = f"REGRESSED {drop:.0%}"
+                    regressions.append((key, metric, bv, nv, drop))
+                compared += 1
+            elif "speedup" in metric:
+                status = "below floor, not enforced"
+            else:
+                status = "informational"
+            print(f"[{key[0]}/{key[1]}] {metric}: {bv:.2f} -> {nv:.2f} "
+                  f"({status})")
+    if regressions:
+        print(f"\n{len(regressions)} summary speedup(s) regressed by more "
+              f"than {args.tolerance:.0%}:")
+        for key, metric, bv, nv, drop in regressions:
+            print(f"  [{key[0]}/{key[1]}] {metric}: {bv:.2f} -> {nv:.2f} "
+                  f"(-{drop:.0%})")
+        return 1
+    print(f"\nbench-trend OK ({compared} enforced comparisons)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

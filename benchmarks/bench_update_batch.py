@@ -1,4 +1,4 @@
-"""Micro-batch update latency/throughput vs vocabulary size.
+"""Micro-batch update latency/throughput vs vocabulary size, per backend.
 
 Measures the kind-partitioned sparse-delta pipeline (core.updates
 apply_add_batch / apply_del_*_batch via the apply_update_batch shim)
@@ -14,8 +14,26 @@ and mixed micro-batches at n_items ∈ {1k, 10k, 100k}:
 Headline claims (ISSUE 1 + ISSUE 2 acceptance): add latency is flat in
 n_items (O(basket) state traffic), and the sparse decremental paths beat
 the dense baseline by >= 5x at 100k items because their support is the
-history window (N·B ids), not the vocabulary.  Results land in
-BENCH_updates.json so the perf trajectory is tracked across PRs.
+history window (N·B ids), not the vocabulary.
+
+``--backend`` selects which kernel path the sparse pipeline exercises
+(ROADMAP: track both backends):
+
+  * ``cpu``       — natural dispatch on a CPU host (XLA reference
+                    kernels; the numbers the sparse-speedup acceptance
+                    gates on);
+  * ``tpu``       — natural dispatch on a TPU host (tile-planned Pallas
+                    kernels; requires jax.default_backend() == "tpu");
+  * ``interpret`` — the tile-planned Pallas kernels in interpret mode on
+                    any host.  Orders of magnitude slower per step
+                    (plumbing/equivalence numbers, not perf), so it is
+                    only allowed together with ``--smoke``.
+
+Each result row records its backend, and BENCH_updates.json accumulates
+one entry per (backend, mode) in ``runs`` — re-running a backend
+replaces only that entry, so CPU and TPU numbers are tracked
+side-by-side.  ``benchmarks/bench_trend.py`` diffs the summary speedups
+of a fresh run against the committed file (the CI bench-trend step).
 
     PYTHONPATH=src python benchmarks/bench_update_batch.py [--quick]
     PYTHONPATH=src python benchmarks/bench_update_batch.py --smoke  # CI
@@ -43,6 +61,7 @@ from repro.core import (StreamState, TifuParams, apply_add_batch,
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
                               KIND_DEL_ITEM, KIND_NOOP, PAD_ID, AddBatch,
                               DelBasketBatch, DelItemBatch, UpdateBatch)
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +82,12 @@ SMOKE = BenchConfig(m_users=128, max_baskets=12, max_bsize=8, batch=64,
 QUICK = BenchConfig(iters=4, dense_iters=2)
 
 KINDS = ("add", "del_basket", "del_item", "mixed")
+
+# impl override per --backend.  "cpu" pins the XLA reference path
+# explicitly (NOT "auto": on a TPU host auto would silently measure the
+# Pallas kernels under a 'cpu' label and poison the trend baseline);
+# "tpu" uses natural dispatch on a TPU host (guarded in main()).
+BACKEND_IMPL = {"cpu": "ref", "tpu": "auto", "interpret": "interpret"}
 
 
 def make_params(n_items: int) -> TifuParams:
@@ -161,7 +186,7 @@ PATHS = {
 
 
 def bench(path: str, params, rng, kind: str, iters: int,
-          cfg: BenchConfig) -> dict:
+          cfg: BenchConfig, backend: str) -> dict:
     apply_fn = PATHS[path]
     state = seed_state(params, rng, cfg)
     user_sets = [np.arange(lo, lo + cfg.batch, dtype=np.int32)
@@ -181,26 +206,15 @@ def bench(path: str, params, rng, kind: str, iters: int,
         jax.block_until_ready(state.user_vecs)
         times.append(time.perf_counter() - t0)
     times = np.asarray(times)
-    return {"kind": kind, "path": path, "n_items": params.n_items,
-            "batch": cfg.batch, "iters": iters,
+    return {"kind": kind, "path": path, "backend": backend,
+            "n_items": params.n_items, "batch": cfg.batch, "iters": iters,
             "mean_ms": float(times.mean() * 1e3),
             "p50_ms": float(np.median(times) * 1e3),
             "min_ms": float(times.min() * 1e3),
             "events_per_s": float(cfg.batch / times.mean())}
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="fewer iterations at full sizes")
-    ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes + minimal iterations (CI smoke: "
-                         "seconds on CPU, validates the harness only)")
-    ap.add_argument("--out", default=os.path.join(
-        os.path.dirname(__file__), "..", "BENCH_updates.json"))
-    args = ap.parse_args()
-    cfg = SMOKE if args.smoke else (QUICK if args.quick else BenchConfig())
-
+def run_grid(cfg: BenchConfig, backend: str, quick: bool) -> list:
     results = []
     for n_items in cfg.n_items_grid:
         params = make_params(n_items)
@@ -210,17 +224,20 @@ def main() -> int:
                 paths.insert(1, "dense_kind")
             for path in paths:
                 dense = path != "partitioned"
-                if (args.quick and dense and kind != "add"
+                if (quick and dense and kind != "add"
                         and n_items == 100_000 and path == "dense_seed"):
                     continue   # the heaviest redundant configurations
                 rng = np.random.default_rng(0)
                 iters = cfg.dense_iters if dense else cfg.iters
-                r = bench(path, params, rng, kind, iters, cfg)
+                r = bench(path, params, rng, kind, iters, cfg, backend)
                 results.append(r)
                 print(f"{path:11s} {kind:10s} n_items={n_items:>6d} "
                       f"mean={r['mean_ms']:8.2f} ms  "
                       f"({r['events_per_s']:,.0f} ev/s)")
+    return results
 
+
+def summarize(results: list, cfg: BenchConfig) -> dict:
     def pick(path, kind, n):
         return next((r for r in results if r["path"] == path
                      and r["kind"] == kind and r["n_items"] == n), None)
@@ -241,7 +258,64 @@ def main() -> int:
         if sp and dk:
             summary[f"{kind}_sparse_speedup_vs_dense_at_max_items"] = (
                 dk["mean_ms"] / sp["mean_ms"])
-    print("\nsummary:")
+    return summary
+
+
+def merge_runs(out_path: str, entry: dict) -> dict:
+    """Accumulate per-(backend, mode) run entries in the bench JSON.
+
+    Re-running one backend replaces only its entry; a legacy single-run
+    file (pre-ISSUE-3 format) is migrated into ``runs`` first."""
+    payload = {"benchmark": "bench_update_batch", "runs": []}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                old = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            old = {}
+        if "runs" in old:
+            payload["runs"] = old["runs"]
+        elif "results" in old:                 # legacy single-run layout
+            payload["runs"] = [{k: old.get(k) for k in
+                                ("backend", "mode", "config", "summary",
+                                 "results")}]
+    key = (entry["backend"], entry["mode"])
+    payload["runs"] = [r for r in payload["runs"]
+                       if (r.get("backend"), r.get("mode")) != key]
+    payload["runs"].append(entry)
+    payload["runs"].sort(key=lambda r: (str(r.get("backend")),
+                                        str(r.get("mode"))))
+    return payload
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer iterations at full sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes + minimal iterations (CI smoke: "
+                         "seconds on CPU, validates the harness only)")
+    ap.add_argument("--backend", choices=sorted(BACKEND_IMPL),
+                    default=None,
+                    help="kernel path to exercise (default: tpu on a TPU "
+                         "host, else cpu)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_updates.json"))
+    args = ap.parse_args()
+    cfg = SMOKE if args.smoke else (QUICK if args.quick else BenchConfig())
+    backend = args.backend or ("tpu" if jax.default_backend() == "tpu"
+                               else "cpu")
+    if backend == "tpu" and jax.default_backend() != "tpu":
+        ap.error("--backend tpu requires a TPU host "
+                 f"(jax.default_backend() == {jax.default_backend()!r})")
+    if backend == "interpret" and not args.smoke:
+        ap.error("--backend interpret is interpret-mode Pallas (orders of "
+                 "magnitude slower): only allowed with --smoke")
+
+    with ops.default_impl(BACKEND_IMPL[backend]):
+        results = run_grid(cfg, backend, args.quick)
+    summary = summarize(results, cfg)
+    print(f"\nsummary [{backend}]:")
     for k, v in summary.items():
         note = ""
         if k == "add_latency_growth_to_max_items":
@@ -251,9 +325,9 @@ def main() -> int:
         print(f"  {k}: {v:.2f}{note}" if isinstance(v, float)
               else f"  {k}: {v}")
 
-    payload = {
-        "benchmark": "bench_update_batch",
-        "backend": jax.default_backend(),
+    entry = {
+        "backend": backend,
+        "jax_backend": jax.default_backend(),
         "mode": "smoke" if args.smoke else ("quick" if args.quick
                                             else "full"),
         "config": dataclasses.asdict(cfg),
@@ -261,9 +335,10 @@ def main() -> int:
         "results": results,
     }
     out = os.path.abspath(args.out)
+    payload = merge_runs(out, entry)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {out}")
+    print(f"wrote {out} ({len(payload['runs'])} run entries)")
     return 0
 
 

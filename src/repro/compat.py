@@ -1,0 +1,63 @@
+"""jax version-compatibility shims.
+
+The codebase targets the current jax API (``jax.set_mesh``,
+``jax.shard_map(check_vma=...)``, differentiable
+``lax.optimization_barrier``); the pinned runtime may predate parts of
+it.  Every shim resolves to the native API when present, so this module
+is a no-op on new-enough jax.
+
+* ``set_mesh(mesh)``  — context manager; falls back to entering the
+  ``Mesh`` itself (the pre-0.5 way to install the ambient mesh).
+* ``shard_map(...)``  — accepts ``check_vma``; falls back to
+  ``jax.experimental.shard_map.shard_map`` mapping it to ``check_rep``
+  (the old name for the same replication check).
+* ``optimization_barrier(x)`` — identity-gradient wrapper; old jax has
+  no AD rule for the primitive (the barrier is AD-transparent by
+  definition: it only pins XLA scheduling).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh):
+        with mesh:
+            yield mesh
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, **kw):
+        if check_vma is not None:
+            kw.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """Static size of a mapped axis (pre-0.5: psum of 1 constant-folds
+        to the axis size without touching the wire)."""
+        return jax.lax.psum(1, axis_name)
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """``lax.optimization_barrier`` with an identity gradient."""
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    return optimization_barrier(primals[0]), tangents[0]

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
+
 
 def pairwise_scores(queries, corpus, metric: str = "euclidean"):
     """Similarity scores (higher = closer). [Q,I] x [M,I] → [Q,M]."""
@@ -159,7 +161,7 @@ def distributed_predict(queries, corpus, k: int, alpha: float, mesh, rules,
         nbr_sum = jax.lax.psum(partial, axes)
         return alpha * q + (1.0 - alpha) * nbr_sum / k
 
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), P(axes, None)),
         out_specs=P(None, None), check_vma=False,

@@ -8,11 +8,15 @@ sparse_row_scatter — sparse per-row scatter-add into the [M, I] state
                      (batched add/delete-path deltas, DESIGN.md §3.3/§3.5)
 sparse_row_gather  — sparse per-row gather of the [M, I] state (the read
                      half of the pair: update-path supports)
+tile_plan          — host/jit touched-tile plans driving the sparse pair's
+                     block index maps (O(U·W) TPU HBM traffic)
 flash_attention    — blocked online-softmax attention (LM train/prefill)
 """
-from repro.kernels import ops, ref
-from repro.kernels.ops import (flash_attention, knn_topk, multihot_scatter,
-                               sparse_row_gather, sparse_row_scatter)
+from repro.kernels import ops, ref, tile_plan
+from repro.kernels.ops import (default_impl, flash_attention, knn_topk,
+                               multihot_scatter, sparse_row_gather,
+                               sparse_row_scatter)
 
-__all__ = ["ops", "ref", "flash_attention", "knn_topk", "multihot_scatter",
-           "sparse_row_gather", "sparse_row_scatter"]
+__all__ = ["ops", "ref", "tile_plan", "default_impl", "flash_attention",
+           "knn_topk", "multihot_scatter", "sparse_row_gather",
+           "sparse_row_scatter"]

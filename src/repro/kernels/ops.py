@@ -4,12 +4,20 @@ The public entry points the rest of the system calls; each picks the
 fastest implementation available for the current backend and is
 guaranteed (by tests/test_kernels.py shape/dtype sweeps) to match the
 ref.py oracles.
+
+``default_impl`` overrides the per-call default process-wide — the
+benchmark's ``--backend interpret`` arm and the interpret-mode stream
+equivalence tests route the *whole* update pipeline through the Pallas
+kernels on CPU with it.  The override is read at trace time, so entering
+or leaving the context clears jax's compilation caches.
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 
-from repro.kernels import ref
+from repro.kernels import ref, tile_plan
 from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
@@ -19,13 +27,39 @@ from repro.kernels.sparse_row_gather import \
 from repro.kernels.sparse_row_scatter import \
     sparse_row_scatter as _sparse_scatter_pallas
 
+_DEFAULT_IMPL = "auto"
+
+
+@contextlib.contextmanager
+def default_impl(impl: str):
+    """Process-wide impl override (auto | pallas | interpret | ref).
+
+    Jitted callers (core.updates) capture the dispatch decision at trace
+    time, so both transitions clear the jit caches — this is a test /
+    benchmark harness knob, not a serving-path switch.
+    """
+    global _DEFAULT_IMPL
+    prev = _DEFAULT_IMPL
+    _DEFAULT_IMPL = impl
+    jax.clear_caches()
+    try:
+        yield
+    finally:
+        _DEFAULT_IMPL = prev
+        jax.clear_caches()
+
+
+def _resolve(impl):
+    return _DEFAULT_IMPL if impl is None else impl
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def knn_topk(queries, corpus, k: int, impl: str = "auto", **kw):
+def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
     """Fused similarity + top-k. impl: auto | pallas | interpret | ref."""
+    impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.knn_topk_ref(queries, corpus, k,
                                 kw.get("metric", "euclidean"))
@@ -34,8 +68,9 @@ def knn_topk(queries, corpus, k: int, impl: str = "auto", **kw):
                        **kw)
 
 
-def multihot_scatter(ids, weights, n_items: int, impl: str = "auto"):
+def multihot_scatter(ids, weights, n_items: int, impl: str | None = None):
     """Weighted multi-hot scatter (TIFU user-vector builder)."""
+    impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.decayed_scatter_ref(ids, weights, n_items)
     if ids.ndim == 3:
@@ -46,45 +81,73 @@ def multihot_scatter(ids, weights, n_items: int, impl: str = "auto"):
                            interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def sparse_row_scatter(table, rows, ids, vals, impl: str = "auto"):
+def _plan_dims(n_items: int, ids):
+    """(bi, t_max) for the tile-planned kernels, or None → ref fallback.
+
+    ``bi`` is the largest lane-aligned tile dividing ``n_items``;
+    ``t_max`` is the static per-row touched-tile bound.  When ``ids`` is
+    concrete (benchmark / direct calls outside jit) the true maximum is
+    measured on host and pow2-bucketed — typical baskets touch only a
+    few tiles, so the grid shrinks far below the ``min(W, I/bi)`` worst
+    case that tracers must assume.
+    """
+    for bi in (512, 256, 128):
+        if n_items % bi == 0:
+            break
+    else:
+        return None
+    w = ids.shape[1]
+    cap = max(1, min(w, n_items // bi))
+    if isinstance(ids, jax.core.Tracer):
+        return bi, cap
+    from repro.core.types import _pow2_pad
+    return bi, min(_pow2_pad(tile_plan.max_touched_tiles(ids, bi)), cap)
+
+
+def sparse_row_scatter(table, rows, ids, vals, impl: str | None = None):
     """Sparse per-row scatter-add into a [M, I] table (add-path deltas).
 
-    XLA's native scatter is already O(U·W) on CPU/GPU; the Pallas kernel
-    is the TPU path (streams only the touched rows, in place).
+    XLA's native scatter is already O(U·W) on CPU/GPU; the tile-planned
+    Pallas kernel is the TPU path (DMAs only the dirty tiles of the
+    touched rows, in place — O(U·W) HBM traffic too).
     """
+    impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.sparse_row_scatter_ref(table, rows, ids, vals)
-    n_items = table.shape[1]
-    for bi in (512, 256, 128):
-        if n_items % bi == 0:
-            return _sparse_scatter_pallas(
-                table, rows, ids, vals, bi=bi,
-                interpret=(impl == "interpret" or not _on_tpu()))
-    return ref.sparse_row_scatter_ref(table, rows, ids, vals)
+    dims = _plan_dims(table.shape[1], ids)
+    if dims is None:
+        return ref.sparse_row_scatter_ref(table, rows, ids, vals)
+    bi, t_max = dims
+    return _sparse_scatter_pallas(
+        table, rows, ids, vals, bi=bi, t_max=t_max,
+        interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def sparse_row_gather(table, rows, ids, impl: str = "auto"):
+def sparse_row_gather(table, rows, ids, impl: str | None = None):
     """Sparse per-row gather from a [M, I] table (update-path supports).
 
-    XLA's native gather is already O(U·W) on CPU/GPU; the Pallas kernel
-    is the TPU path (streams only the touched rows' tiles).
+    XLA's native gather is already O(U·W) on CPU/GPU; the tile-planned
+    Pallas kernel is the TPU path (DMAs only the touched rows' dirty
+    tiles — O(U·W) HBM traffic too).
     """
+    impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.sparse_row_gather_ref(table, rows, ids)
-    n_items = table.shape[1]
-    for bi in (512, 256, 128):
-        if n_items % bi == 0:
-            return _sparse_gather_pallas(
-                table, rows, ids, bi=bi,
-                interpret=(impl == "interpret" or not _on_tpu()))
-    return ref.sparse_row_gather_ref(table, rows, ids)
+    dims = _plan_dims(table.shape[1], ids)
+    if dims is None:
+        return ref.sparse_row_gather_ref(table, rows, ids)
+    bi, t_max = dims
+    return _sparse_gather_pallas(
+        table, rows, ids, bi=bi, t_max=t_max,
+        interpret=(impl == "interpret" or not _on_tpu()))
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    impl: str = "auto", **kw):
+                    impl: str | None = None, **kw):
     """Blocked attention. [B,S,H,D] each → [B,S,H,D]."""
+    impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.flash_attention_ref(q, k, v, causal, window)
     return _flash_pallas(q, k, v, causal=causal, window=window,
-                         interpret=(impl == "interpret" or not _on_tpu()),
-                         **kw)
+                        interpret=(impl == "interpret" or not _on_tpu()),
+                        **kw)

@@ -73,6 +73,70 @@ def sparse_row_gather_ref(table, rows, ids):
     return jnp.where(valid, vals, 0.0).astype(table.dtype)
 
 
+def replay_scatter_plan_ref(table, ids, vals, plan, bi: int):
+    """Plan-consistency oracle: replay a scatter TilePlan step-by-step
+    under the TPU pipeline's semantics and return the resulting table.
+
+    Models exactly what the hardware observes: a maximal run of
+    consecutive steps mapping the same ``(row, tile)`` block loads the
+    block ONCE from the pre-pass table, accumulates the valid steps'
+    contributions, and flushes once at the run's end.  A plan that maps
+    one block into two separate runs (the non-consecutive-revisit bug the
+    (row, tile) sort exists to prevent) trips the assertion instead of
+    silently losing the first run's update.  ``ids``/``vals`` must be the
+    row-sorted arrays the plan was built from (numpy or jax).
+    """
+    import numpy as np
+    tab = np.array(table, np.float32)       # HBM after all flushes
+    src = tab.copy()                         # what a run's load observes
+    ids = np.asarray(ids)
+    vals = np.asarray(vals)
+    pb, pr = np.asarray(plan.batch), np.asarray(plan.row)
+    pt, pv = np.asarray(plan.tile), np.asarray(plan.valid)
+    flushed = set()
+    acc = None
+    for s in range(pr.size):
+        row, tile = int(pr[s]), int(pt[s])
+        if s == 0 or (row, tile) != (int(pr[s - 1]), int(pt[s - 1])):
+            assert (row, tile) not in flushed, \
+                f"block {(row, tile)} revisited in a second run"
+            acc = src[row, tile * bi:(tile + 1) * bi].copy()
+        if pv[s]:
+            b = int(pb[s])
+            for i, v in zip(ids[b], vals[b]):
+                if tile * bi <= i < (tile + 1) * bi:
+                    acc[int(i) - tile * bi] += float(v)
+        if s == pr.size - 1 or (row, tile) != (int(pr[s + 1]),
+                                               int(pt[s + 1])):
+            tab[row, tile * bi:(tile + 1) * bi] = acc
+            flushed.add((row, tile))
+    return tab
+
+
+def replay_gather_plan_ref(table, ids, plan, bi: int):
+    """Plan-consistency oracle for the gather: replay the plan's valid
+    steps and return f32[U, W] (PAD ids → 0).  Asserts each step reads
+    ids from the batch row that owns the output block (``order="batch"``
+    keeps pbatch[s] == s // T_max)."""
+    import numpy as np
+    tab = np.asarray(table)
+    ids = np.asarray(ids)
+    u, w = ids.shape
+    t_max = np.asarray(plan.row).size // u
+    out = np.zeros((u, w), tab.dtype)
+    pb, pr = np.asarray(plan.batch), np.asarray(plan.row)
+    pt, pv = np.asarray(plan.tile), np.asarray(plan.valid)
+    for s in range(pr.size):
+        if not pv[s]:
+            continue
+        b, row, tile = int(pb[s]), int(pr[s]), int(pt[s])
+        assert b == s // t_max, (b, s, t_max)
+        for wi, i in enumerate(ids[b]):
+            if tile * bi <= i < (tile + 1) * bi:
+                out[b, wi] = tab[row, int(i)]
+    return out
+
+
 def flash_attention_ref(q, k, v, causal: bool = True, window: int = 0,
                         scale: float | None = None):
     """Plain attention oracle. q,k,v: [B,S,H,D] (H == KV heads here)."""

@@ -7,22 +7,22 @@ the *current raw values* of a [M, I] state table at a per-event support
 
     vals[r, w] = table[rows[r], ids[r, w]]          (PAD ids give 0)
 
-This is the read half of the ``sparse_row_scatter`` pair and shares its
-scaffolding: the scalar-prefetched ``rows`` drive the table block index
-map, so a grid step only DMAs the [1, bi] tile of the row it actually
-reads — HBM traffic is O(U·I) worst case (touched rows only), never
-O(M·I).  TPUs dislike data-dependent gather, so per tile the read is a
-compare + reduce: the [W, bi] one-hot of the row's ids against the item
-tile's iota, contracted with the tile values.
+This is the read half of the ``sparse_row_scatter`` pair.  TPUs dislike
+data-dependent gather, so per tile the read is a compare + reduce: the
+[W, bi] one-hot of the row's ids against the item tile's iota,
+contracted with the tile values.
 
-Grid = (U batch rows, I / bi item tiles), tiles innermost: each row's
-output block is revisited only on consecutive grid steps (zeroed on the
-first tile, accumulated across the sweep), which is the same
-consecutive-revisit contract the scatter kernel relies on.  Unlike the
-scatter, duplicate target rows need no sorting — reads commute.
-
-The XLA reference path (kernels.ref.sparse_row_gather_ref) is already
-O(U·W) and is what CPU/GPU use (kernels.ops dispatches).
+Like the scatter, the grid is driven by a **touched-tile plan**
+(kernels.tile_plan): grid ``(U, T_max)`` with the scalar-prefetched plan
+arrays driving the table block index map, so a step DMAs only a ``[1,
+bi]`` tile the row's ids actually touch — O(U·W) HBM traffic, matching
+the XLA reference path (kernels.ref.sparse_row_gather_ref, the CPU/GPU
+path).  The plan keeps ``order="batch"``: reads commute, so duplicate
+target rows need no sorting, and each ``[1, W]`` output block is
+resident for exactly its row's tile run (zeroed on the first step,
+accumulated across the run).  Padding steps repeat the row's last real
+tile (no block change → no DMA) and are ``pl.when``-guarded out of the
+compute.
 """
 from __future__ import annotations
 
@@ -33,51 +33,66 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tile_plan import build_plan
 
-def _kernel(rows_ref, ids_ref, tab_ref, out_ref, *, bi: int):
-    del rows_ref  # consumed by the index maps only
-    ii = pl.program_id(1)
 
-    @pl.when(ii == 0)
+def _kernel(pbatch_ref, prow_ref, ptile_ref, pvalid_ref, ids_ref, tab_ref,
+            out_ref, *, bi: int, t_max: int):
+    del pbatch_ref, prow_ref  # consumed by the index maps only
+    r = pl.program_id(0)
+    t = pl.program_id(1)
+    s = r * t_max + t
+
+    @pl.when(t == 0)
     def _zero():
         out_ref[0, :] = jnp.zeros_like(out_ref[0, :])
 
-    ids = ids_ref[0, :]                              # [W] i32, PAD=-1
-    tile_vals = tab_ref[0, :]                        # [bi] f32
-    base = ii * bi
-    tile = base + jax.lax.broadcasted_iota(jnp.int32,
-                                           (ids.shape[0], bi), 1)
-    onehot = (ids[:, None] == tile).astype(tile_vals.dtype)  # PAD misses
-    out_ref[0, :] += jnp.sum(onehot * tile_vals[None, :], axis=1)
+    @pl.when(pvalid_ref[s] == 1)
+    def _accumulate():
+        ids = ids_ref[0, :]                          # [W] i32, PAD=-1
+        tile_vals = tab_ref[0, :]                    # [bi]
+        base = ptile_ref[s] * bi
+        grid = base + jax.lax.broadcasted_iota(jnp.int32,
+                                               (ids.shape[0], bi), 1)
+        onehot = (ids[:, None] == grid).astype(tile_vals.dtype)  # PAD misses
+        out_ref[0, :] += jnp.sum(onehot * tile_vals[None, :], axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bi", "t_max", "interpret"))
 def sparse_row_gather(table, rows, ids, bi: int = 512,
-                      interpret: bool = False):
+                      t_max: int | None = None, interpret: bool = False):
     """vals f32[U, W] = table[rows i32[U], ids i32[U, W]] (PAD ids → 0).
 
-    Requires I % bi == 0 — the ops.py dispatcher picks bi / falls back
-    to the XLA reference.
+    Requires I % bi == 0 and ``t_max`` >= the largest per-row
+    touched-tile count (None picks the always-safe ``min(W, I/bi)``) —
+    the ops.py dispatcher selects both / falls back to the XLA reference.
     """
     m, n_items = table.shape
     u, w = ids.shape
     bi = min(bi, n_items)
     assert n_items % bi == 0, (n_items, bi)
+    n_tiles = n_items // bi
+    if t_max is None:
+        t_max = min(w, n_tiles)
+    t_max = max(1, min(t_max, w, n_tiles))
     rows = jnp.clip(rows, 0, m - 1).astype(jnp.int32)
+    plan = build_plan(rows, ids, bi=bi, t_max=t_max, order="batch")
 
-    grid = (u, n_items // bi)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
+        num_scalar_prefetch=4,
+        grid=(u, t_max),
         in_specs=[
-            pl.BlockSpec((1, w), lambda r, ii, rows: (r, 0)),
-            pl.BlockSpec((1, bi), lambda r, ii, rows: (rows[r], ii)),
+            pl.BlockSpec((1, w), lambda r, t, pb, pr, pt, pv: (r, 0)),
+            pl.BlockSpec((1, bi),
+                         lambda r, t, pb, pr, pt, pv: (pr[r * t_max + t],
+                                                       pt[r * t_max + t])),
         ],
-        out_specs=pl.BlockSpec((1, w), lambda r, ii, rows: (r, 0)),
+        out_specs=pl.BlockSpec((1, w),
+                               lambda r, t, pb, pr, pt, pv: (r, 0)),
     )
     return pl.pallas_call(
-        functools.partial(_kernel, bi=bi),
+        functools.partial(_kernel, bi=bi, t_max=t_max),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((u, w), table.dtype),
         interpret=interpret,
-    )(rows, ids, table)
+    )(plan.batch, plan.row, plan.tile, plan.valid, ids, table)

@@ -7,24 +7,27 @@ produces per-event deltas whose support is only the touched items:
     table[rows[r], ids[r, w]] += vals[r, w]        (PAD ids skipped)
 
 in place (``input_output_aliases``), so the full [M, I] state never
-leaves HBM and only the touched *rows* are streamed through VMEM.
+leaves HBM.  TPUs dislike data-dependent scatter, so per tile the update
+is a compare + reduce: the [W, bi] one-hot of a row's ids against the
+item tile's iota, contracted with vals.
 
-TPUs dislike data-dependent scatter, so per tile the update is a compare
-+ reduce: the [W, bi] one-hot of the row's ids against the item tile's
-iota, contracted with vals.  Grid = (I / bi item tiles, U batch rows),
-batch rows innermost and **sorted by target row** by the dispatcher:
-duplicate target rows become *consecutive* grid steps, which the kernel
-accumulates in a VMEM scratch and writes back once per (row, tile) block
-— revisiting an output block non-consecutively would be undefined.
+The grid is driven by a **touched-tile plan** (kernels.tile_plan): the
+``(U, T_max)`` step sequence enumerates only the ``(target row, item
+tile)`` blocks some row's ids actually touch, sorted by (row, tile) so
+every output block's visits — including visits contributed by duplicate
+target rows — are *consecutive* grid steps.  The scalar-prefetched plan
+arrays drive the block index maps; a step DMAs only a genuinely dirty
+``[1, bi]`` tile (padding steps clone the previous block, which the
+pipeline does not re-fetch, and a PAD ``pl.when`` guard skips their
+compute), so HBM traffic is O(U·W) — matching the XLA reference path's
+asymptotics (kernels.ref.sparse_row_scatter_ref, the CPU/GPU path) and
+the paper's flat latency-vs-vocabulary curve on TPU.
 
-The scalar-prefetched ``rows`` drive the block index map (the classic
-embedding-update pattern), so a step only fetches the [1, bi] tile of
-the row it actually updates: HBM traffic is O(U·I) worst case (touched
-rows only) instead of O(M·I), and compute is O(U·W·I/bi) compares per
-tile sweep.  A future refinement (ROADMAP) is a per-row touched-tile
-list to skip clean tiles and reach O(U·W) traffic on TPU as well; the
-XLA reference path (kernels.ref.sparse_row_scatter_ref) is already
-O(U·W) and is what CPU uses.
+Within one output block's run the kernel accumulates in a VMEM scratch
+(loaded on the run's first step, stored on its last), which is the same
+consecutive-revisit contract the pre-plan kernel relied on — the plan's
+(row, tile) sort is what makes it hold for duplicate rows with differing
+supports.
 """
 from __future__ import annotations
 
@@ -35,70 +38,90 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tile_plan import build_plan
 
-def _kernel(rows_ref, ids_ref, vals_ref, tab_ref, out_ref, acc, *, bi: int):
-    ii = pl.program_id(0)
-    r = pl.program_id(1)
-    nr = pl.num_programs(1)
 
-    row = rows_ref[r]
-    prev_same = jnp.where(r > 0, rows_ref[jnp.maximum(r - 1, 0)] == row,
-                          False)
-    next_same = jnp.where(r < nr - 1,
-                          rows_ref[jnp.minimum(r + 1, nr - 1)] == row, False)
+def _kernel(pbatch_ref, prow_ref, ptile_ref, pvalid_ref, ids_ref, vals_ref,
+            tab_ref, out_ref, acc, *, bi: int, t_max: int):
+    del pbatch_ref  # consumed by the ids/vals index maps only
+    r = pl.program_id(0)
+    t = pl.program_id(1)
+    s = r * t_max + t
+    ns = pl.num_programs(0) * t_max
+
+    row = prow_ref[s]
+    tile = ptile_ref[s]
+    sp = jnp.maximum(s - 1, 0)
+    sn = jnp.minimum(s + 1, ns - 1)
+    prev_same = (s > 0) & (prow_ref[sp] == row) & (ptile_ref[sp] == tile)
+    next_same = (s < ns - 1) & (prow_ref[sn] == row) & (ptile_ref[sn] == tile)
 
     @pl.when(jnp.logical_not(prev_same))
     def _load():
         acc[...] = tab_ref[0, :]
 
-    ids = ids_ref[0, :]                              # [W] i32, PAD=-1
-    vals = vals_ref[0, :]                            # [W] f32
-    base = ii * bi
-    tile = base + jax.lax.broadcasted_iota(jnp.int32,
-                                           (ids.shape[0], bi), 1)
-    onehot = (ids[:, None] == tile).astype(jnp.float32)   # PAD never matches
-    acc[...] += jnp.sum(onehot * vals[:, None], axis=0)
+    @pl.when(pvalid_ref[s] == 1)
+    def _accumulate():
+        ids = ids_ref[0, :]                          # [W] i32, PAD=-1
+        vals = vals_ref[0, :]                        # [W] f32
+        base = tile * bi
+        grid = base + jax.lax.broadcasted_iota(jnp.int32,
+                                               (ids.shape[0], bi), 1)
+        onehot = (ids[:, None] == grid).astype(jnp.float32)  # PAD misses
+        acc[...] += jnp.sum(onehot * vals[:, None], axis=0)
 
     @pl.when(jnp.logical_not(next_same))
     def _store():
         out_ref[0, :] = acc[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bi", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bi", "t_max", "interpret"))
 def sparse_row_scatter(table, rows, ids, vals, bi: int = 512,
-                       interpret: bool = False):
+                       t_max: int | None = None, interpret: bool = False):
     """table f32[M, I] (+)= scatter(rows i32[U], ids i32[U, W] PAD=-1,
     vals f32[U, W]).  Returns the updated table (aliased in place).
 
-    Duplicate rows are handled (sorted internally so they land on
-    consecutive grid steps and accumulate).  Requires I % bi == 0 —
-    the ops.py dispatcher picks bi / falls back to the XLA reference.
+    Duplicate rows are handled (the tile plan sorts every (row, tile)
+    block's visits onto consecutive grid steps, accumulating).  Requires
+    I % bi == 0 and ``t_max`` >= the largest per-row touched-tile count
+    (None picks the always-safe ``min(W, I/bi)``); the ops.py dispatcher
+    selects both / falls back to the XLA reference.
     """
     m, n_items = table.shape
     u, w = ids.shape
     bi = min(bi, n_items)
     assert n_items % bi == 0, (n_items, bi)
-    order = jnp.argsort(rows)
+    n_tiles = n_items // bi
+    if t_max is None:
+        t_max = min(w, n_tiles)
+    t_max = max(1, min(t_max, w, n_tiles))
+    order = jnp.argsort(rows, stable=True)
     rows_s = jnp.clip(rows[order], 0, m - 1).astype(jnp.int32)
     ids_s = ids[order]
     vals_s = jnp.where(ids_s >= 0, vals[order], 0.0)
+    plan = build_plan(rows_s, ids_s, bi=bi, t_max=t_max, order="target")
 
-    grid = (n_items // bi, u)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
+        num_scalar_prefetch=4,
+        grid=(u, t_max),
         in_specs=[
-            pl.BlockSpec((1, w), lambda ii, r, rows: (r, 0)),
-            pl.BlockSpec((1, w), lambda ii, r, rows: (r, 0)),
-            pl.BlockSpec((1, bi), lambda ii, r, rows: (rows[r], ii)),
+            pl.BlockSpec((1, w),
+                         lambda r, t, pb, pr, pt, pv: (pb[r * t_max + t], 0)),
+            pl.BlockSpec((1, w),
+                         lambda r, t, pb, pr, pt, pv: (pb[r * t_max + t], 0)),
+            pl.BlockSpec((1, bi),
+                         lambda r, t, pb, pr, pt, pv: (pr[r * t_max + t],
+                                                       pt[r * t_max + t])),
         ],
-        out_specs=pl.BlockSpec((1, bi), lambda ii, r, rows: (rows[r], ii)),
+        out_specs=pl.BlockSpec((1, bi),
+                               lambda r, t, pb, pr, pt, pv:
+                               (pr[r * t_max + t], pt[r * t_max + t])),
         scratch_shapes=[pltpu.VMEM((bi,), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, bi=bi),
+        functools.partial(_kernel, bi=bi, t_max=t_max),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(table.shape, table.dtype),
-        input_output_aliases={3: 0},   # table (after the prefetch arg)
+        input_output_aliases={6: 0},   # table (after prefetch + ids/vals)
         interpret=interpret,
-    )(rows_s, ids_s, vals_s, table)
+    )(plan.batch, plan.row, plan.tile, plan.valid, ids_s, vals_s, table)

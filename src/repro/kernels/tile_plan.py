@@ -1,0 +1,146 @@
+"""Host/jit tile plans for the sparse row kernels (DESIGN.md §3.3/§3.5).
+
+The sparse scatter/gather pair addresses O(U·W) table *elements*, but a
+TPU grid step moves whole ``[1, bi]`` item tiles: without a plan the
+kernels sweep every tile of every touched row — O(U·I) HBM traffic, the
+one place the TPU path used to be asymptotically worse than the XLA
+reference.  A ``TilePlan`` fixes that: it enumerates, per batch row, the
+sorted deduplicated list of item tiles the row's ids actually touch
+(``row_tiles``; PAD = −1), then flattens those ``(batch, target row,
+tile)`` work items into a static ``U·T_max`` step sequence whose
+scalar-prefetched arrays drive the kernels' block index maps.  A grid
+step DMAs only a genuinely dirty tile; padding steps repeat the previous
+step's block (the pipeline skips the fetch when the block index does not
+change) and are ``pl.when``-guarded out of the compute, so HBM traffic
+is O(U·W) regardless of vocabulary size.
+
+Two step orders serve the two kernels:
+
+* ``order="target"`` (scatter): work items are sorted by
+  ``(target row, tile)``, so every visit to one output block — including
+  visits contributed by *duplicate* target rows — lands on consecutive
+  grid steps.  That is the only order under which the scatter's
+  load/accumulate/store-per-run contract is safe: duplicate rows with
+  differing supports would otherwise revisit a block non-consecutively,
+  which Pallas leaves undefined.  Padding steps clone the last real work
+  item and sort to the end.
+* ``order="batch"`` (gather): work items stay grouped by batch row
+  (reads commute, duplicates need no merging), so each output ``[1, W]``
+  row block is resident for exactly its row's tile run.  Padding steps
+  repeat the row's last real tile (tile 0 for all-PAD rows).
+
+``plan_dma_tiles`` counts the table tiles a plan actually DMAs (block
+index changes + 1) — the quantity the acceptance tests pin to the
+touched-tile count rather than ``I/bi``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+class TilePlan(NamedTuple):
+    """Flattened step sequence for a ``(U, T_max)`` kernel grid.
+
+    All arrays are i32[U·T_max]; step ``s = r·T_max + t``.  ``batch[s]``
+    is the batch row whose ids/vals the step reads, ``row[s]``/``tile[s]``
+    the table block it maps (always safe to index — padding steps clone a
+    real block), ``valid[s]`` 1 for real work items and 0 for padding.
+    """
+    batch: jax.Array
+    row: jax.Array
+    tile: jax.Array
+    valid: jax.Array
+
+
+def row_tiles(ids, bi: int):
+    """Per-row sorted deduplicated touched item tiles, PAD = −1.
+
+    ids: i32[U, W] (PAD = −1) → i32[U, W] with each row's unique tiles
+    ascending first and −1 padding after (at most W uniques per row).
+    """
+    u, w = ids.shape
+    t = jnp.where(ids >= 0, ids // bi, _SENTINEL)
+    t = jnp.sort(t, axis=1)
+    dup = jnp.concatenate([jnp.zeros((u, 1), bool), t[:, 1:] == t[:, :-1]],
+                          axis=1)
+    t = jnp.sort(jnp.where(dup, _SENTINEL, t), axis=1)
+    return jnp.where(t == _SENTINEL, -1, t).astype(jnp.int32)
+
+
+def build_plan(rows, ids, *, bi: int, t_max: int,
+               order: str = "target") -> TilePlan:
+    """Build the step plan for ``rows i32[U]``, ``ids i32[U, W]``.
+
+    ``t_max`` is static and must be >= the largest per-row touched-tile
+    count (``min(W, I/bi)`` is always safe; the ops dispatcher measures
+    the true maximum when the inputs are concrete).  Traceable under jit.
+    """
+    u, w = ids.shape
+    tiles = row_tiles(ids, bi)[:, :t_max]                    # [U, T]
+    rows = jnp.clip(rows, 0, None).astype(jnp.int32)
+    batch = jnp.broadcast_to(
+        jnp.arange(u, dtype=jnp.int32)[:, None], (u, t_max))
+    trow = jnp.broadcast_to(rows[:, None], (u, t_max))
+    valid = tiles >= 0
+
+    if order == "batch":
+        # padding repeats the row's last real tile -> no block change, no
+        # DMA; all-PAD rows fall back to tile 0 (guarded to a no-op).
+        safe = jnp.maximum(jax.lax.cummax(tiles, axis=1), 0)
+        return TilePlan(batch.ravel(), trow.ravel(), safe.ravel(),
+                        valid.ravel().astype(jnp.int32))
+    if order != "target":
+        raise ValueError(order)
+
+    fb, fr = batch.ravel(), trow.ravel()
+    ft, fv = tiles.ravel(), valid.ravel()
+    # lexicographic (target row, tile) via two stable passes; padding
+    # sorts to the very end of the step sequence
+    o1 = jnp.argsort(jnp.where(fv, ft, _SENTINEL), stable=True)
+    fb, fr, ft, fv = fb[o1], fr[o1], ft[o1], fv[o1]
+    o2 = jnp.argsort(jnp.where(fv, fr, _SENTINEL), stable=True)
+    fb, fr, ft, fv = fb[o2], fr[o2], ft[o2], fv[o2]
+    # padding clones the last real work item (guarded no-op on the same
+    # block, extending its run); an all-PAD batch falls back to block
+    # (rows[0], 0) which is loaded and stored back unchanged.
+    n_valid = jnp.sum(fv.astype(jnp.int32))
+    last = jnp.maximum(n_valid - 1, 0)
+
+    def fill(x, default):
+        filler = jnp.where(n_valid > 0, x[last], default)
+        return jnp.where(fv, x, filler)
+
+    return TilePlan(fill(fb, 0), fill(fr, rows[0]), fill(ft, 0),
+                    fv.astype(jnp.int32))
+
+
+def plan_dma_tiles(plan: TilePlan) -> int:
+    """Number of table tiles the plan DMAs: consecutive steps mapping the
+    same ``(row, tile)`` block share one fetch, so this is the count of
+    block-index changes + 1.  The acceptance contract pins it to the
+    touched-tile count (never ``U · I/bi``)."""
+    r, t = np.asarray(plan.row), np.asarray(plan.tile)
+    if r.size == 0:
+        return 0
+    return int(np.sum((r[1:] != r[:-1]) | (t[1:] != t[:-1]))) + 1
+
+
+def max_touched_tiles(ids, bi: int) -> int:
+    """Largest per-row touched-tile count (host-side, concrete ids only).
+
+    The ops dispatcher uses this to shrink ``T_max`` below the static
+    ``min(W, I/bi)`` worst case when the batch is available on host."""
+    t = np.asarray(ids)
+    t = np.where(t >= 0, t // bi, -1)
+    best = 1
+    for row in t:
+        row = row[row >= 0]
+        if row.size:
+            best = max(best, int(np.unique(row).size))
+    return best

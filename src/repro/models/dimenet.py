@@ -27,6 +27,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 
@@ -223,7 +225,7 @@ def forward_sharded(params, batch, c: DimeNetConfig, mesh, rules):
     dyn = dict(batch)
     pspecs = jax.tree.map(lambda s: P(*([None] * len(s.shape))),
                           params, is_leaf=lambda x: hasattr(x, "shape"))
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(pspecs, in_specs), out_specs=n_spec,
         check_vma=False)(params, dyn)

@@ -120,9 +120,14 @@ class StreamingEngine:
         # per micro-batch) processes events OUT of seqno order, so a plain
         # high-watermark would drop deferred-but-unprocessed events on
         # replay.  We track the contiguous frontier + the sparse set of
-        # processed seqnos above it.
+        # processed seqnos above it, PLUS the seqnos currently sitting in
+        # the pending queues: an at-least-once source may redeliver an
+        # event before its first copy was ever processed, and without the
+        # pending set that duplicate would be enqueued (and applied)
+        # twice.
         self.watermark = -1                 # all seqnos <= this are done
         self._processed_above: set = set()
+        self._pending_seqnos: set = set()
         self._next_seqno = 0
         self.metrics = EngineMetrics()
         if stability_target_rel_err is not None:
@@ -144,6 +149,7 @@ class StreamingEngine:
             q = self._queues[ev.user] = deque()
             heapq.heappush(self._heap, (ev.seqno, ev.user))
         q.append(ev)
+        self._pending_seqnos.add(ev.seqno)
         self._n_pending += 1
 
     def submit(self, events: Iterable[Event]) -> None:
@@ -152,8 +158,11 @@ class StreamingEngine:
                 ev = dataclasses.replace(ev, seqno=self._next_seqno)
                 self._next_seqno += 1
             elif ev.seqno <= self.watermark \
-                    or ev.seqno in self._processed_above:
-                continue  # replay of an already-processed event: skip
+                    or ev.seqno in self._processed_above \
+                    or ev.seqno in self._pending_seqnos:
+                # replay of an event that was already processed OR is
+                # still buffered: skip (at-least-once -> exactly-once)
+                continue
             else:
                 self._next_seqno = max(self._next_seqno, ev.seqno + 1)
             self._enqueue(ev)
@@ -185,6 +194,8 @@ class StreamingEngine:
                 del self._queues[user]
         for entry in requeue:
             heapq.heappush(self._heap, entry)
+        for ev in taken:
+            self._pending_seqnos.discard(ev.seqno)
         self._n_pending -= len(taken)
         return taken
 
@@ -208,6 +219,20 @@ class StreamingEngine:
             return want
         return cur
 
+    def _decay_absent_buckets(self, present) -> None:
+        """Advance the shrink hysteresis of kinds ABSENT from this
+        micro-batch.  Without this, a one-off burst (e.g. a GDPR delete
+        wave) pins its large pow2 bucket forever: the kind never appears
+        again, `_bucket` is never consulted, and the next singleton of
+        that kind pads to the stale burst-sized bucket.  An absent batch
+        counts as a zero-row batch, so after ``bucket_hysteresis``
+        consecutive batches without the kind its bucket decays to the
+        minimum (re-growth stays immediate, and previously compiled
+        buckets are still cached)."""
+        for kind in list(self._kind_bucket):
+            if kind not in present and self._kind_bucket[kind] > 1:
+                self._bucket(kind, 0)
+
     def _apply_events(self, events: List[Event]) -> None:
         """Partition a micro-batch by kind and run one homogeneous
         compiled program per kind present (users are disjoint across the
@@ -215,6 +240,10 @@ class StreamingEngine:
         adds = [ev for ev in events if ev.kind == KIND_ADD_BASKET]
         delb = [ev for ev in events if ev.kind == KIND_DEL_BASKET]
         deli = [ev for ev in events if ev.kind == KIND_DEL_ITEM]
+        self._decay_absent_buckets({kind for kind, evs in
+                                    ((KIND_ADD_BASKET, adds),
+                                     (KIND_DEL_BASKET, delb),
+                                     (KIND_DEL_ITEM, deli)) if evs})
         b = self.store.cfg.max_basket_size
         if adds:
             batch = AddBatch.build(
@@ -305,19 +334,30 @@ class StreamingEngine:
     # -- recovery ---------------------------------------------------------------
 
     def checkpoint(self, directory: str, step: int) -> None:
-        self.store.checkpoint(directory, step)
-        with open(os.path.join(directory, "ENGINE"), "w") as f:
-            json.dump({"watermark": self.watermark,
-                       "processed_above": sorted(self._processed_above),
-                       "next_seqno": self._next_seqno}, f)
+        # The exactly-once log rides inside the store's LATEST metadata,
+        # which is the checkpoint's single atomic commit point (fsync'd
+        # tmp + os.replace): a crash anywhere — even between files —
+        # can never pair a new state npz with an old/truncated log
+        # (a torn pair would replay below the old watermark onto the
+        # new state: double-apply).
+        self.store.checkpoint(
+            directory, step,
+            extra_meta={"engine": {
+                "watermark": self.watermark,
+                "processed_above": sorted(self._processed_above),
+                "next_seqno": self._next_seqno}})
 
     def restore(self, directory: str) -> None:
         self.store.restore(directory)
-        with open(os.path.join(directory, "ENGINE")) as f:
-            meta = json.load(f)
+        meta = self.store.last_restored_meta.get("engine")
+        if meta is None:
+            # legacy checkpoint layout: separate ENGINE file
+            with open(os.path.join(directory, "ENGINE")) as f:
+                meta = json.load(f)
         self.watermark = meta["watermark"]
         self._processed_above = set(meta.get("processed_above", []))
         self._next_seqno = meta["next_seqno"]
         self._queues.clear()
         self._heap.clear()
+        self._pending_seqnos.clear()
         self._n_pending = 0

@@ -42,6 +42,35 @@ class StoreConfig:
     # mesh axis names: user axis and item axis sharding
     user_axes: tuple = ("data",)
     item_axes: tuple = ("model",)
+    # corpus cache: once more than this fraction of user rows is dirty,
+    # one full materialize beats a huge scattered row refresh (ROADMAP:
+    # very high delete rates)
+    corpus_rebuild_frac: float = 0.25
+
+
+def _fsync_dir(path: str) -> None:
+    """Make a rename in ``path`` durable (the file fsync orders the DATA,
+    the directory fsync orders the ENTRY — both are needed for the
+    crash-anywhere guarantee)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def atomic_write_json(path: str, payload: dict) -> None:
+    """Write json via tmp-file + fsync + ``os.replace`` + directory
+    fsync so a crash — process OR system — leaves either the previous
+    intact file or nothing, never a truncated one (the same contract as
+    the state npz writes)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path) or ".")
 
 
 def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
@@ -91,6 +120,8 @@ class StateStore:
         self._dirty: Set[int] = set()
         self.corpus_full_builds = 0
         self.corpus_rows_refreshed = 0
+        self.corpus_threshold_rebuilds = 0
+        self.last_restored_meta: dict = {}
 
     # -- serving corpus cache (DESIGN.md §3.6) --------------------------------
 
@@ -124,6 +155,14 @@ class StateStore:
             self._corpus = self.state.materialized_user_vecs()
             self._dirty.clear()
             self.corpus_full_builds += 1
+        elif len(self._dirty) > self.cfg.corpus_rebuild_frac \
+                * self.cfg.n_users:
+            # past the crossover one full rebuild is cheaper than a
+            # scattered refresh of most rows (and compiles exactly once)
+            self._corpus = self.state.materialized_user_vecs()
+            self._dirty.clear()
+            self.corpus_full_builds += 1
+            self.corpus_threshold_rebuilds += 1
         elif self._dirty:
             rows = np.fromiter(self._dirty, np.int32, len(self._dirty))
             self.corpus_rows_refreshed += rows.size
@@ -139,7 +178,8 @@ class StateStore:
 
     # -- persistence (exactly-once recovery substrate) -----------------------
 
-    def checkpoint(self, directory: str, step: int) -> str:
+    def checkpoint(self, directory: str, step: int,
+                   extra_meta: Optional[dict] = None) -> str:
         os.makedirs(directory, exist_ok=True)
         path = os.path.join(directory, f"state_{step:010d}.npz")
         tmp = path + ".tmp"
@@ -156,17 +196,53 @@ class StateStore:
         }
         with open(tmp, "wb") as f:
             np.savez_compressed(f, **leaves)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, path)
+        _fsync_dir(directory)
         meta = dict(step=step, **dataclasses.asdict(self.cfg))
         meta["user_axes"] = list(meta["user_axes"])
         meta["item_axes"] = list(meta["item_axes"])
-        with open(os.path.join(directory, "LATEST"), "w") as f:
-            json.dump(meta, f)
+        if extra_meta:
+            meta.update(extra_meta)
+        # LATEST is the single commit point: the npz above is durable
+        # before this replace lands, and any co-checkpointed metadata
+        # (the engine's exactly-once log) rides in the SAME atomic write
+        # — a crash anywhere leaves the previous checkpoint fully
+        # consistent, never a new state with an old log.
+        atomic_write_json(os.path.join(directory, "LATEST"), meta)
         return path
+
+    def _validate_meta(self, meta: dict) -> None:
+        """A checkpoint written under different shape dimensions must be
+        rejected loudly: silently installing wrong-shaped state either
+        fails later (shape error far from the cause) or — worse — runs
+        with aliased user/item indices."""
+        mismatches = []
+        for field in ("n_users", "n_items", "max_baskets",
+                      "max_basket_size"):
+            want = getattr(self.cfg, field)
+            got = meta.get(field)
+            if got is not None and got != want:
+                mismatches.append(f"{field}: checkpoint={got} store={want}")
+        k_ckpt = meta.get("max_groups") or meta.get("max_baskets")
+        k_cfg = self.cfg.max_groups or self.cfg.max_baskets
+        if meta.get("max_baskets") is not None and k_ckpt != k_cfg:
+            mismatches.append(
+                f"max_groups (effective): checkpoint={k_ckpt} store={k_cfg}")
+        if mismatches:
+            raise ValueError(
+                "checkpoint/store shape mismatch — refusing to restore: "
+                + "; ".join(mismatches))
 
     def restore(self, directory: str) -> int:
         with open(os.path.join(directory, "LATEST")) as f:
             meta = json.load(f)
+        self._validate_meta(meta)
+        # keep the parsed commit metadata for co-checkpointed payloads
+        # (the engine's exactly-once log rides in meta["engine"]) — one
+        # reader, one parse
+        self.last_restored_meta = meta
         step = meta["step"]
         path = os.path.join(directory, f"state_{step:010d}.npz")
         data = np.load(path)

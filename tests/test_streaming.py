@@ -99,6 +99,100 @@ def test_exactly_once_recovery(rng, tmp_path):
                                atol=1e-5)
 
 
+def test_redelivered_pending_event_is_not_double_applied(rng):
+    """At-least-once sources may redeliver an event whose first copy is
+    still BUFFERED (not yet processed): the duplicate must be dropped at
+    submit time, not enqueued and applied twice (regression: submit only
+    deduped against processed seqnos)."""
+    eng, store = make_engine()
+    ref = RefEngine(P, dtype=np.float32)
+    baskets = [rng.choice(P.n_items, size=3, replace=False)
+               for _ in range(4)]
+    events = [Event(KIND_ADD_BASKET, 2, items=b, seqno=i)
+              for i, b in enumerate(baskets)]
+    for b in baskets:
+        ref.add_basket(2, b)
+    eng.submit(events)
+    assert eng.n_pending == 4
+    # redelivery before ANY processing: all four still pending
+    eng.submit(events)
+    assert eng.n_pending == 4
+    eng.step()          # conflict deferral: one event applied, 3 pending
+    assert eng.n_pending == 3
+    # redelivery straddling processed AND pending copies
+    eng.submit(events)
+    assert eng.n_pending == 3
+    eng.run_until_drained()
+    assert int(store.state.n_baskets[2]) == 4    # not 8
+    np.testing.assert_allclose(
+        np.asarray(store.state.materialized_user_vecs()[2]),
+        ref.state(2).user_vec.astype(np.float32), atol=1e-4)
+
+
+def test_interrupted_engine_checkpoint_write_is_not_picked_up(rng, tmp_path):
+    """The exactly-once log commits atomically WITH the state inside
+    LATEST (fsync'd tmp + os.replace): a crash mid-write leaves a stray
+    partial .tmp next to the intact previous commit, and restore must
+    read the intact one (regression: ENGINE was a second, separately
+    written file, so a crash could tear the state/log pair — a torn log
+    replays below the old watermark onto the new state)."""
+    import json
+    import os
+    eng, store = make_engine()
+    for t in range(8):
+        eng.add_basket(t % 4, rng.choice(P.n_items, size=3, replace=False))
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 1)
+    assert not os.path.exists(os.path.join(str(tmp_path), "LATEST.tmp"))
+    watermark = eng.watermark
+    assert watermark >= 0
+    # simulate a crash mid-way through the NEXT checkpoint's commit
+    with open(os.path.join(str(tmp_path), "LATEST.tmp"), "w") as f:
+        f.write('{"step": 2, "engine": {"watermark": 99999, "proc')
+    eng2, _ = make_engine()
+    eng2.restore(str(tmp_path))
+    assert eng2.watermark == watermark            # intact commit won
+    # legacy layout (separate ENGINE file, pre-fold checkpoints) still
+    # restores through the fallback path
+    latest = os.path.join(str(tmp_path), "LATEST")
+    with open(latest) as f:
+        meta = json.load(f)
+    legacy_engine = meta.pop("engine")
+    with open(latest, "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(str(tmp_path), "ENGINE"), "w") as f:
+        json.dump(legacy_engine, f)
+    eng3, _ = make_engine()
+    eng3.restore(str(tmp_path))
+    assert eng3.watermark == watermark
+
+
+def test_restore_rejects_mismatched_shapes(rng, tmp_path):
+    """Restoring a checkpoint whose LATEST meta disagrees with the
+    store's shape config must raise, not silently install wrong-shaped
+    (or index-aliased) state."""
+    import pytest
+    eng, store = make_engine(n_users=8)
+    eng.add_basket(1, rng.choice(P.n_items, size=3, replace=False))
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 0)
+    for bad in [dict(n_users=16), dict(n_items=P.n_items + 1),
+                dict(max_baskets=99), dict(max_basket_size=2)]:
+        cfg = StoreConfig(n_users=8, n_items=P.n_items, max_baskets=24,
+                          max_basket_size=6)
+        for k, v in bad.items():
+            setattr(cfg, k, v)
+        store2 = StateStore(cfg)
+        with pytest.raises(ValueError, match="shape mismatch"):
+            store2.restore(str(tmp_path))
+        with pytest.raises(ValueError, match=next(iter(bad))):
+            store2.restore(str(tmp_path))
+    # matching config still restores
+    ok = StateStore(StoreConfig(n_users=8, n_items=P.n_items,
+                                max_baskets=24, max_basket_size=6))
+    assert ok.restore(str(tmp_path)) == 0
+
+
 def test_paper_deletion_scenario(rng):
     """§6.1 setup: 1/1000 users delete 10% of baskets; engine stays
     consistent with from-scratch on the surviving history."""

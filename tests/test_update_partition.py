@@ -421,10 +421,11 @@ def test_engine_bucket_hysteresis():
 
 def test_store_corpus_cache_tracks_state(rng):
     """store.corpus() == materialized_user_vecs() after every batch while
-    refreshing only the rows the engine touched."""
+    refreshing only the rows the engine touched (threshold rebuilds
+    disabled: batches here dirty half the 8-user store every step)."""
     store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
                                    max_baskets=N, max_basket_size=B,
-                                   max_groups=K))
+                                   max_groups=K, corpus_rebuild_frac=1.0))
     eng = StreamingEngine(store, P, batch_size=4)
     ref = RefEngine(P, dtype=np.float32)
     events = random_mixed_events(rng, ref, 80, M)
@@ -447,6 +448,83 @@ def test_store_corpus_cache_tracks_state(rng):
         np.asarray(store.state.materialized_user_vecs()), rtol=1e-6,
         atol=1e-7)
     assert store.corpus_full_builds == 2
+
+
+def test_store_corpus_rebuild_threshold_crossover(rng):
+    """Below ``corpus_rebuild_frac`` the cache refreshes rows; above it,
+    one full materialize (ROADMAP: high delete rates).  Both paths are
+    counted and both produce the exact corpus."""
+    store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K, corpus_rebuild_frac=0.5))
+    state = StreamState.zeros(M, P.n_items, N, B, K)
+    for u in range(M):
+        b = rng.choice(P.n_items, size=3, replace=False)
+        state = apply_add_batch(state, AddBatch.build([u], [b], B), P)
+    store.state = state
+    store.corpus()                               # cold full build
+    assert store.corpus_full_builds == 1
+
+    def touch(users):
+        b = [rng.choice(P.n_items, size=3, replace=False) for _ in users]
+        store.state = apply_add_batch(
+            store.state, AddBatch.build(list(users), b, B), P)
+        store.invalidate_users(list(users))
+
+    touch(range(3))                              # 3/8 <= 0.5: row refresh
+    np.testing.assert_allclose(
+        np.asarray(store.corpus()),
+        np.asarray(store.state.materialized_user_vecs()), rtol=1e-6,
+        atol=1e-7)
+    assert store.corpus_threshold_rebuilds == 0
+    assert store.corpus_rows_refreshed >= 3
+
+    rows_before = store.corpus_rows_refreshed
+    touch(range(5))                              # 5/8 > 0.5: full rebuild
+    np.testing.assert_allclose(
+        np.asarray(store.corpus()),
+        np.asarray(store.state.materialized_user_vecs()), rtol=1e-6,
+        atol=1e-7)
+    assert store.corpus_threshold_rebuilds == 1
+    assert store.corpus_full_builds == 2
+    assert store.corpus_rows_refreshed == rows_before   # no scattered path
+
+
+def test_engine_bucket_decay_for_absent_kinds():
+    """A one-off burst of one kind must not pin its pow2 bucket forever:
+    batches WITHOUT the kind advance its shrink hysteresis too, so the
+    bucket decays and a later singleton pads small again (regression:
+    a GDPR delete wave pinned del-basket at its burst bucket)."""
+    store = StateStore(StoreConfig(n_users=64, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B,
+                                   max_groups=K))
+    eng = StreamingEngine(store, P, batch_size=32, bucket_hysteresis=3)
+    rng = np.random.default_rng(0)
+    for u in range(64):
+        eng.add_basket(u, rng.choice(P.n_items, size=3, replace=False))
+    eng.run_until_drained()
+    # burst: 9 basket deletions in one micro-batch -> bucket 16
+    for u in range(9):
+        eng.delete_basket(u, 0)
+    eng.step()
+    assert eng._kind_bucket[KIND_DEL_BASKET] == 16
+    # add-only batches: the del-basket bucket decays after hysteresis
+    for i in range(3):
+        for u in range(4):
+            eng.add_basket(10 + 4 * i + u,
+                           rng.choice(P.n_items, size=3, replace=False))
+        eng.step()
+    assert eng._kind_bucket[KIND_DEL_BASKET] == 1
+    assert eng.metrics.bucket_shrinks >= 1
+    # a later singleton delete pads to the decayed bucket, not the burst
+    eng.delete_basket(30, 0)
+    eng.step()
+    assert eng._kind_bucket[KIND_DEL_BASKET] == 1
+    # and re-growth stays immediate
+    for u in range(40, 49):
+        eng.delete_basket(u, 0)
+    eng.step()
+    assert eng._kind_bucket[KIND_DEL_BASKET] == 16
 
 
 # ---------------------------------------------------------------------------
