@@ -35,8 +35,13 @@ def _runs(path: str) -> dict:
         runs = payload["runs"]
     else:                                   # legacy single-run layout
         runs = [payload]
-    return {(r.get("backend", "cpu"), r.get("mode", "full")): r
-            for r in runs}
+    return {(r.get("backend", "cpu"), r.get("mode", "full"),
+             r.get("arm")): r for r in runs}
+
+
+def _key_name(key) -> str:
+    backend, mode, arm = key
+    return f"{backend}/{mode}" + (f"/{arm}" if arm else "")
 
 
 def main(argv=None) -> int:
@@ -53,11 +58,11 @@ def main(argv=None) -> int:
     base_runs = _runs(args.baseline)
     regressions = []
     compared = 0
-    for key, new in sorted(new_runs.items()):
+    for key, new in sorted(new_runs.items(), key=lambda kv: _key_name(
+            kv[0])):
         base = base_runs.get(key)
         if base is None:
-            print(f"[skip] no baseline run for backend={key[0]} "
-                  f"mode={key[1]}")
+            print(f"[skip] no baseline run for {_key_name(key)}")
             continue
         ns, bs = new.get("summary", {}), base.get("summary", {})
         for metric in sorted(set(ns) & set(bs)):
@@ -80,13 +85,13 @@ def main(argv=None) -> int:
                 status = "below floor, not enforced"
             else:
                 status = "informational"
-            print(f"[{key[0]}/{key[1]}] {metric}: {bv:.2f} -> {nv:.2f} "
+            print(f"[{_key_name(key)}] {metric}: {bv:.2f} -> {nv:.2f} "
                   f"({status})")
     if regressions:
         print(f"\n{len(regressions)} summary speedup(s) regressed by more "
               f"than {args.tolerance:.0%}:")
         for key, metric, bv, nv, drop in regressions:
-            print(f"  [{key[0]}/{key[1]}] {metric}: {bv:.2f} -> {nv:.2f} "
+            print(f"  [{_key_name(key)}] {metric}: {bv:.2f} -> {nv:.2f} "
                   f"(-{drop:.0%})")
         return 1
     print(f"\nbench-trend OK ({compared} enforced comparisons)")

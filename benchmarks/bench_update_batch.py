@@ -29,14 +29,22 @@ history window (N·B ids), not the vocabulary.
                     (plumbing/equivalence numbers, not perf), so it is
                     only allowed together with ``--smoke``.
 
+``--shards N [N ...]`` switches to the **sharded-engine arm**: instead
+of the kernel-path grid it measures end-to-end add latency through a
+``ShardedStreamingEngine`` at each user-shard count (DESIGN.md §7) and
+records one ``arm="sharded"`` entry — the acceptance claim is that add
+latency stays flat in the shard count.
+
 Each result row records its backend, and BENCH_updates.json accumulates
-one entry per (backend, mode) in ``runs`` — re-running a backend
+one entry per (backend, mode, arm) in ``runs`` — re-running a backend
 replaces only that entry, so CPU and TPU numbers are tracked
-side-by-side.  ``benchmarks/bench_trend.py`` diffs the summary speedups
-of a fresh run against the committed file (the CI bench-trend step).
+side-by-side (schema: benchmarks/README.md).  ``benchmarks/
+bench_trend.py`` diffs the summary speedups of a fresh run against the
+committed file (the CI bench-trend step).
 
     PYTHONPATH=src python benchmarks/bench_update_batch.py [--quick]
     PYTHONPATH=src python benchmarks/bench_update_batch.py --smoke  # CI
+    PYTHONPATH=src python benchmarks/bench_update_batch.py --shards 1 2 4
 
 ``--smoke`` shrinks every dimension (users/batch/vocab/iters) so the CI
 bench job exercises the full harness in seconds on CPU; its numbers are
@@ -185,6 +193,79 @@ PATHS = {
 }
 
 
+def bench_sharded(cfg: BenchConfig, shard_counts, backend: str) -> tuple:
+    """Engine-level add latency vs user-shard count (DESIGN.md §7).
+
+    Feeds identical per-iteration add batches (distinct users, routed by
+    ``user % n_shards``) through a `ShardedStreamingEngine` and times
+    `run_until_drained` — ingestion, routing, per-shard kind-partitioned
+    sub-batch cuts and the batched add path, end to end.  The acceptance
+    claim is that add latency stays FLAT in the shard count: sharding
+    splits the same work across smaller per-shard sub-batches, so the
+    per-batch wall time must not grow with n_shards (on a single test
+    host the shards share one device; on a real deployment they run on
+    disjoint device groups and this same number shrinks).
+    """
+    from repro.parallel.sharding import UserShardSpec
+    from repro.streaming import ShardedStreamingEngine
+    n_items = cfg.n_items_grid[min(1, len(cfg.n_items_grid) - 1)]
+    params = make_params(n_items)
+    # normalize: the growth metric is defined as max-vs-min shard count
+    shard_counts = sorted(set(shard_counts))
+    results = []
+    for n_shards in shard_counts:
+        spec = UserShardSpec(cfg.m_users, n_shards)
+        eng = ShardedStreamingEngine.create(
+            spec, params, max_baskets=cfg.max_baskets,
+            max_basket_size=cfg.max_bsize, batch_size=cfg.batch)
+        rng = np.random.default_rng(0)
+        per_shard = cfg.batch // n_shards
+        n_fed = sum(min(per_shard, spec.shard_users(s))
+                    for s in range(n_shards))
+
+        def feed():
+            # shard-balanced batches (a hash-partitioned source): each
+            # shard receives batch/n_shards events, so the per-shard
+            # pow2 buckets sit at batch/n_shards instead of flapping
+            # across the boundary on sampling noise
+            for s in range(n_shards):
+                owned = spec.owned_users(s)
+                for u in rng.choice(owned, size=min(per_shard, len(owned)),
+                                    replace=False):
+                    eng.add_basket(int(u), rng.choice(
+                        n_items,
+                        size=int(rng.integers(2, cfg.max_bsize // 2)),
+                        replace=False))
+
+        for _ in range(3):                       # warmup/compile
+            feed()
+            eng.run_until_drained()
+        times = []
+        for _ in range(cfg.iters):
+            feed()
+            t0 = time.perf_counter()
+            eng.run_until_drained()
+            times.append(time.perf_counter() - t0)
+        times = np.asarray(times)
+        r = {"kind": "add", "path": "sharded_engine", "backend": backend,
+             "shards": n_shards, "n_items": n_items, "batch": n_fed,
+             "iters": cfg.iters, "mean_ms": float(times.mean() * 1e3),
+             "p50_ms": float(np.median(times) * 1e3),
+             "min_ms": float(times.min() * 1e3),
+             "events_per_s": float(n_fed / times.mean())}
+        results.append(r)
+        print(f"sharded_engine add shards={n_shards:2d} "
+              f"n_items={n_items:>6d} mean={r['mean_ms']:8.2f} ms  "
+              f"({r['events_per_s']:,.0f} ev/s)")
+    base = results[0]
+    summary = {"shards": list(shard_counts),
+               "add_mean_ms_by_shards": {str(r["shards"]): r["mean_ms"]
+                                         for r in results},
+               "add_latency_growth_max_vs_min_shards":
+                   results[-1]["mean_ms"] / base["mean_ms"]}
+    return results, summary
+
+
 def bench(path: str, params, rng, kind: str, iters: int,
           cfg: BenchConfig, backend: str) -> dict:
     apply_fn = PATHS[path]
@@ -262,10 +343,12 @@ def summarize(results: list, cfg: BenchConfig) -> dict:
 
 
 def merge_runs(out_path: str, entry: dict) -> dict:
-    """Accumulate per-(backend, mode) run entries in the bench JSON.
+    """Accumulate per-(backend, mode, arm) run entries in the bench JSON.
 
-    Re-running one backend replaces only its entry; a legacy single-run
-    file (pre-ISSUE-3 format) is migrated into ``runs`` first."""
+    Re-running one backend replaces only its entry (``arm`` is None for
+    the default kernel-path grid, "sharded" for the ``--shards`` engine
+    sweep); a legacy single-run file (pre-ISSUE-3 format) is migrated
+    into ``runs`` first.  See benchmarks/README.md for the schema."""
     payload = {"benchmark": "bench_update_batch", "runs": []}
     if os.path.exists(out_path):
         try:
@@ -279,12 +362,14 @@ def merge_runs(out_path: str, entry: dict) -> dict:
             payload["runs"] = [{k: old.get(k) for k in
                                 ("backend", "mode", "config", "summary",
                                  "results")}]
-    key = (entry["backend"], entry["mode"])
+    key = (entry["backend"], entry["mode"], entry.get("arm"))
     payload["runs"] = [r for r in payload["runs"]
-                       if (r.get("backend"), r.get("mode")) != key]
+                       if (r.get("backend"), r.get("mode"),
+                           r.get("arm")) != key]
     payload["runs"].append(entry)
     payload["runs"].sort(key=lambda r: (str(r.get("backend")),
-                                        str(r.get("mode"))))
+                                        str(r.get("mode")),
+                                        str(r.get("arm"))))
     return payload
 
 
@@ -299,6 +384,12 @@ def main() -> int:
                     default=None,
                     help="kernel path to exercise (default: tpu on a TPU "
                          "host, else cpu)")
+    ap.add_argument("--shards", type=int, nargs="+", default=None,
+                    metavar="N",
+                    help="run the sharded-engine add-latency sweep over "
+                         "these user-shard counts (e.g. --shards 1 2 4) "
+                         "instead of the kernel-path grid; records one "
+                         "arm='sharded' entry (DESIGN.md §7)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_updates.json"))
     args = ap.parse_args()
@@ -313,13 +404,18 @@ def main() -> int:
                  "magnitude slower): only allowed with --smoke")
 
     with ops.default_impl(BACKEND_IMPL[backend]):
-        results = run_grid(cfg, backend, args.quick)
-    summary = summarize(results, cfg)
+        if args.shards:
+            results, summary = bench_sharded(cfg, args.shards, backend)
+        else:
+            results = run_grid(cfg, backend, args.quick)
+            summary = summarize(results, cfg)
     print(f"\nsummary [{backend}]:")
     for k, v in summary.items():
         note = ""
         if k == "add_latency_growth_to_max_items":
             note = "  (acceptance: < 1.5x)"
+        elif k == "add_latency_growth_max_vs_min_shards":
+            note = "  (acceptance: flat, ~1x)"
         elif k.startswith(("del_basket", "del_item")):
             note = "  (acceptance: >= 5x)"
         print(f"  {k}: {v:.2f}{note}" if isinstance(v, float)
@@ -334,6 +430,9 @@ def main() -> int:
         "summary": summary,
         "results": results,
     }
+    if args.shards:
+        entry["arm"] = "sharded"
+        entry["shards"] = summary["shards"]
     out = os.path.abspath(args.out)
     payload = merge_runs(out, entry)
     with open(out, "w") as f:

@@ -216,6 +216,96 @@ def recommend_for_users(corpus, user_ids, k: int, alpha: float, topn: int,
 
 
 # ---------------------------------------------------------------------------
+# Cross-shard serving (user-axis sharded deployment, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "shard",
+                                             "n_shards"))
+def shard_topk_candidates(queries, corpus, k: int, shard: int,
+                          n_shards: int, query_ids=None,
+                          metric: str = "euclidean"):
+    """Per-shard neighbour candidates: ``([Q, k] scores, global ids)``.
+
+    ``corpus`` is one shard's local corpus (rows = users owned by
+    ``shard`` under the round-robin `UserShardSpec` contract, so local
+    row r is global user ``r·n_shards + shard``).  Scores are the same
+    per-pair values the single-corpus path computes; self-exclusion
+    compares global ids, so a query user is masked only on its owner
+    shard.  O(Q·M_s) compute, O(Q·k) output — the merge step moves
+    candidate lists, never corpora.
+    """
+    m_s = corpus.shape[0]
+    scores = pairwise_scores(queries, corpus, metric).astype(jnp.float32)
+    col_gid = jnp.arange(m_s, dtype=jnp.int32) * n_shards + shard
+    if query_ids is not None:
+        scores = jnp.where(col_gid[None, :] == query_ids[:, None],
+                           -jnp.inf, scores)
+    vals, idx = jax.lax.top_k(scores, min(k, m_s))
+    return vals, col_gid[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("topn",))
+def _combine_neighbors(queries, neighbor_rows, alpha, topn: int):
+    """alpha-blend + top-n over gathered neighbour rows [Q, k, I]."""
+    neighbors = jnp.mean(neighbor_rows, axis=1)
+    pred = alpha * queries + (1.0 - alpha) * neighbors
+    return recommend_topn(pred, topn)
+
+
+def sharded_recommend_for_users(corpora, user_ids, k: int, alpha: float,
+                                topn: int, n_shards: int,
+                                metric: str = "euclidean") -> np.ndarray:
+    """Distributed TIFU-kNN serving over per-shard corpora (§7).
+
+    Pipeline: (1) gather query rows from their owner shards; (2) each
+    shard scores queries against only its local corpus and returns its
+    top-k candidate ``(score, global id)`` lists; (3) a streaming merge
+    takes the global top-k — candidates are ordered by (score desc,
+    global id asc), exactly `jax.lax.top_k`'s tie-break on a single
+    corpus, so the selected neighbour set and order match the unsharded
+    path bitwise; (4) only the k selected neighbour ROWS are fetched
+    (O(Q·k·I), never a corpus) and blended exactly as
+    `recommend_for_users` does.  Cross-shard traffic is the [Q, k]
+    candidate lists plus the selected rows — corpora and row
+    invalidation stay shard-local (`StateStore.corpus`).
+
+    Returns i32[Q, topn] item ids, bitwise-identical to
+    ``recommend_for_users`` on the equivalent single corpus
+    (tests/test_sharded_engine.py pins this).
+    """
+    user_ids = np.asarray(user_ids, np.int64)
+    corpora_np = [np.asarray(c) for c in corpora]
+    q_n = user_ids.shape[0]
+    n_items = corpora_np[0].shape[1]
+    queries = np.empty((q_n, n_items), corpora_np[0].dtype)
+    for s in range(n_shards):
+        m = user_ids % n_shards == s
+        if m.any():
+            queries[m] = corpora_np[s][user_ids[m] // n_shards]
+    qs = jnp.asarray(queries)
+    qids = jnp.asarray(user_ids.astype(np.int32))
+    vals, gids = [], []
+    for s in range(n_shards):
+        v, g = shard_topk_candidates(qs, corpora[s], k, s, n_shards,
+                                     query_ids=qids, metric=metric)
+        vals.append(np.asarray(v))
+        gids.append(np.asarray(g))
+    all_vals = np.concatenate(vals, axis=1)
+    all_gids = np.concatenate(gids, axis=1)
+    # merge: score desc, global id asc — lax.top_k's tie-break order
+    order = np.lexsort((all_gids, -all_vals), axis=-1)
+    sel = np.take_along_axis(all_gids, order, axis=1)[:, :k]
+    neighbor_rows = np.empty((q_n, sel.shape[1], n_items),
+                             corpora_np[0].dtype)
+    for s in range(n_shards):
+        m = sel % n_shards == s
+        if m.any():
+            neighbor_rows[m] = corpora_np[s][sel[m] // n_shards]
+    return np.asarray(_combine_neighbors(qs, jnp.asarray(neighbor_rows),
+                                         alpha, topn))
+
+
+# ---------------------------------------------------------------------------
 # Ranking metrics (numpy; evaluation only)
 # ---------------------------------------------------------------------------
 

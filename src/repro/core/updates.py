@@ -38,8 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import decay
-from repro.core.tifu import (closed_form_basket_weights,
-                             last_group_vector_padded,
+from repro.core.tifu import (last_group_vector_padded,
                              weighted_multihot_scatter, user_vector_padded)
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM,
                               KIND_NOOP, PAD_ID, AddBatch, DelBasketBatch,
@@ -63,9 +62,11 @@ SCALE_CEIL = 1e18
 # ---------------------------------------------------------------------------
 
 def _multi_hot(items, n_items):
-    """items: i32[B] (PAD_ID padded) → f32[I].  Set semantics (duplicate
-    ids count once), matching ``tifu.multi_hot`` and the sparse add
-    path's first-occurrence dedup."""
+    """Multi-hot encode a basket: i32[B] (PAD_ID padded) → f32[I].
+
+    Set semantics (duplicate ids count once), matching
+    ``tifu.multi_hot`` and the sparse add path's first-occurrence dedup.
+    """
     valid = items >= 0
     ids = jnp.where(valid, items, 0)
     return jnp.zeros((n_items,), jnp.float32).at[ids].max(
@@ -73,8 +74,11 @@ def _multi_hot(items, n_items):
 
 
 def _row_group_geometry(group_sizes, max_baskets):
-    """Per-history-row group index g (0-based), in-group pos p (1-based),
-    group size tau, for fixed max_baskets rows."""
+    """Locate every history row in its group.
+
+    Returns per-row group index g (0-based), in-group position p
+    (1-based) and group size tau, for fixed ``max_baskets`` rows.
+    """
     sizes = group_sizes.astype(jnp.int32)
     ends = jnp.cumsum(sizes)
     starts = ends - sizes
@@ -87,8 +91,11 @@ def _row_group_geometry(group_sizes, max_baskets):
 
 
 def _locate(group_sizes, pos):
-    """Group index j (0-based) and in-group position i (1-based) of a
-    global basket index ``pos`` (traced)."""
+    """Locate a global basket index inside the group structure.
+
+    Returns group index j (0-based) and in-group position i (1-based)
+    of basket ``pos`` (traced).
+    """
     sizes = group_sizes.astype(jnp.int32)
     ends = jnp.cumsum(sizes)
     starts = ends - sizes
@@ -278,7 +285,7 @@ def _single_update(user_vec, last_group_vec, history, group_sizes, n_baskets,
     delb = _delete_basket(*state, safe_pos, params)
     deli = _delete_item(*state, safe_pos, item, params)
 
-    def sel(a, b, c, d):
+    def _sel(a, b, c, d):
         return jnp.where(kind == KIND_ADD_BASKET, b,
                          jnp.where(kind == KIND_DEL_BASKET, c,
                                    jnp.where(kind == KIND_DEL_ITEM, d, a)))
@@ -287,7 +294,7 @@ def _single_update(user_vec, last_group_vec, history, group_sizes, n_baskets,
     empty = n_baskets == 0
     kind = jnp.where(empty & ((kind == KIND_DEL_BASKET)
                               | (kind == KIND_DEL_ITEM)), KIND_NOOP, kind)
-    return tuple(sel(s, a, b, c)
+    return tuple(_sel(s, a, b, c)
                  for s, a, b, c in zip(state, add, delb, deli))
 
 
@@ -296,19 +303,24 @@ def _single_update(user_vec, last_group_vec, history, group_sizes, n_baskets,
 # ---------------------------------------------------------------------------
 
 def _capacity_mask(nb, k, tau, max_baskets, max_groups, group_size):
-    """True where an add would overflow the padded history/group arrays
-    (the single source of truth for apply_add_batch's no-op guard and
-    the engine's dropped_adds metric)."""
+    """Mask adds that would overflow the padded history/group arrays.
+
+    The single source of truth for apply_add_batch's no-op guard and
+    the engine's dropped_adds metric.
+    """
     new_group = (k == 0) | (tau >= group_size)
     return (nb >= max_baskets) | (new_group & (k >= max_groups))
 
 
 def _first_occurrence(ids):
-    """bool[U, W]: True on exactly one slot per distinct non-PAD id per
-    row (set-semantics dedup inside the support window).  Sort-based —
+    """Pick one representative slot per distinct non-PAD id per row.
+
+    Returns bool[U, W], True on exactly one slot per distinct id
+    (set-semantics dedup inside the support window).  Sort-based —
     O(U·W·logW), no [U, W, W] pairwise intermediate; any representative
     slot works because every consumer scatters a value that depends only
-    on the id, not the slot."""
+    on the id, not the slot.
+    """
     u, w = ids.shape
     order = jnp.argsort(ids, axis=1)
     sorted_ids = jnp.take_along_axis(ids, order, axis=1)
@@ -321,7 +333,7 @@ def _first_occurrence(ids):
 
 
 def _apply_add_batch(state: StreamState, batch: AddBatch,
-                     params: TifuParams):
+                     params: TifuParams, t_max_cap: int = 0):
     """Apply a homogeneous basket-addition sub-batch with sparse deltas.
 
     The support of one addition is the new basket plus the last group's
@@ -378,7 +390,8 @@ def _apply_add_batch(state: StreamState, batch: AddBatch,
 
     # gather the true last-group values on the support (O(U·W), sparse;
     # PAD ids read 0, which the `first` mask already zeroes downstream)
-    lraw = sparse_row_gather(state.last_group_vecs, u, ids_all)
+    lraw = sparse_row_gather(state.last_group_vecs, u, ids_all,
+                             t_max_cap=t_max_cap)
     ltrue = lraw * sig[:, None]
 
     # --- scale updates (the dense part of Eq. 7/8, now scalar) ---------------
@@ -415,8 +428,10 @@ def _apply_add_batch(state: StreamState, batch: AddBatch,
         [zeros_old, bfirst / ((tauf + 1.0) * sig_new)[:, None]], axis=1)
     lgv_vals = jnp.where(new_group[:, None], lgv_reset, lgv_append)
 
-    user_vecs = sparse_row_scatter(state.user_vecs, u, ids_all, user_vals)
-    lg_vecs = sparse_row_scatter(state.last_group_vecs, u, ids_all, lgv_vals)
+    user_vecs = sparse_row_scatter(state.user_vecs, u, ids_all, user_vals,
+                                   t_max_cap=t_max_cap)
+    lg_vecs = sparse_row_scatter(state.last_group_vecs, u, ids_all, lgv_vals,
+                                 t_max_cap=t_max_cap)
 
     # --- per-row scalar/bookkeeping scatters (no [batch, N, B] dense delta) --
     valid_i = valid.astype(jnp.int32)
@@ -447,20 +462,35 @@ def _apply_add_batch(state: StreamState, batch: AddBatch,
     ), dropped
 
 
-@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+@functools.partial(jax.jit, static_argnames=("params", "t_max_cap"),
+                   donate_argnums=(0,))
 def apply_add_batch(state: StreamState, batch: AddBatch,
-                    params: TifuParams) -> StreamState:
-    """See _apply_add_batch (the drop count is dead-code-eliminated)."""
-    return _apply_add_batch(state, batch, params)[0]
+                    params: TifuParams, t_max_cap: int = 0) -> StreamState:
+    """Apply a homogeneous basket-addition sub-batch with sparse deltas.
+
+    Eq. 7–9 under the scaled representation: O(batch · W) state traffic
+    (W = (group_size+1) · max_basket_size), never an [n_items]
+    temporary — the paper's O(1)-per-add asymptotic on the batched path
+    (see ``_apply_add_batch`` for the full derivation; the drop count is
+    dead-code-eliminated here).  ``t_max_cap`` (static) is the engine's
+    host-measured touched-tile bound, forwarded to the sparse kernels
+    (DESIGN.md §3.3); 0 disables.
+    """
+    return _apply_add_batch(state, batch, params, t_max_cap)[0]
 
 
-@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+@functools.partial(jax.jit, static_argnames=("params", "t_max_cap"),
+                   donate_argnums=(0,))
 def apply_add_batch_counted(state: StreamState, batch: AddBatch,
-                            params: TifuParams):
-    """As apply_add_batch, also returning the number of valid rows the
-    capacity guard masked to no-ops (i32 scalar) — one fused program, so
-    the engine's dropped_adds metric costs no extra dispatch."""
-    return _apply_add_batch(state, batch, params)
+                            params: TifuParams, t_max_cap: int = 0):
+    """As ``apply_add_batch`` (Eq. 7–9, O(batch · W)), counting drops.
+
+    Returns ``(state, dropped)`` where ``dropped`` is the number of
+    valid rows the capacity guard masked to no-ops (i32 scalar) — one
+    fused program, so the engine's dropped_adds metric costs no extra
+    dispatch.
+    """
+    return _apply_add_batch(state, batch, params, t_max_cap)
 
 
 # ---------------------------------------------------------------------------
@@ -483,7 +513,8 @@ def _scatter_del_deltas(state: StreamState, u, valid, old, new):
     Raw deltas are divided by the (unchanged) per-user scales; invalid
     rows carry zero deltas, so padding rows may alias any user.  The
     last-group raw row is *set* to new_true/sigma (its support after a
-    deletion is recomputed from history, DESIGN.md §3.3 invariant)."""
+    deletion is recomputed from history, DESIGN.md §3.3 invariant).
+    """
     uv, lgv, hist, gs, nb, ng, em, s, sig = old
     n_uv, n_lgv, n_hist, n_gs, n_nb, n_ng, n_em = new
     vf = valid[:, None]
@@ -513,9 +544,11 @@ def apply_del_basket_batch_dense(state: StreamState, batch: DelBasketBatch,
     """Apply a homogeneous basket-deletion sub-batch (Eq. 10-12), densely.
 
     Dense masked per-user rows: gathers [batch, n_items] state rows and
-    writes dense deltas.  Retained as the correctness baseline and the
-    benchmark baseline for the sparse path (``apply_del_basket_batch``,
-    DESIGN.md §3.5), which touches only the history-window support."""
+    writes dense deltas — O(batch · n_items) state traffic.  Retained as
+    the correctness baseline and the benchmark baseline for the sparse
+    path (``apply_del_basket_batch``, DESIGN.md §3.5), which touches
+    only the history-window support.
+    """
     u = batch.user
     old = _gather_true(state, u)
     uv, lgv, hist, gs, nb, ng, em = old[:7]
@@ -530,8 +563,12 @@ def apply_del_basket_batch_dense(state: StreamState, batch: DelBasketBatch,
 @functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
 def apply_del_item_batch_dense(state: StreamState, batch: DelItemBatch,
                                params: TifuParams) -> StreamState:
-    """Apply a homogeneous item-deletion sub-batch (Eq. 13 + fallback),
-    densely — the correctness/benchmark baseline of the sparse path."""
+    """Apply a homogeneous item-deletion sub-batch, densely.
+
+    Eq. 13 + the basket-vanish fallback on dense [batch, n_items] rows —
+    O(batch · n_items) state traffic; the correctness/benchmark baseline
+    of the sparse path (``apply_del_item_batch``).
+    """
     u = batch.user
     old = _gather_true(state, u)
     uv, lgv, hist, gs, nb, ng, em = old[:7]
@@ -559,14 +596,17 @@ def apply_del_item_batch_dense(state: StreamState, batch: DelItemBatch,
 
 
 def _slots(c_row, bh):
-    """Expand per-history-row coefficients [U, N] to per-slot values
-    [U, N·B] (each valid id in row t carries weight c_row[t])."""
+    """Expand per-history-row coefficients to per-slot values.
+
+    [U, N] → [U, N·B]: each valid id in row t carries weight c_row[t].
+    """
     u, n = c_row.shape
     return jnp.broadcast_to(c_row[:, :, None], (u, n, bh)).reshape(u, -1)
 
 
 def _del_basket_sparse_core(state: StreamState, u, hist, gs, nb, k, s, sig,
-                            em, pos, valid, params: TifuParams):
+                            em, pos, valid, params: TifuParams,
+                            t_max_cap: int = 0):
     """Shared sparse basket-deletion math (Eq. 10-12 on the support).
 
     Rows with ``valid`` False produce all-PAD support ids, zero scatter
@@ -607,8 +647,9 @@ def _del_basket_sparse_core(state: StreamState, u, hist, gs, nb, k, s, sig,
     ids = jnp.where(valid_row[:, :, None], hist,
                     PAD_ID).reshape(n_rows, n_bask * bh)
     first = _first_occurrence(ids).astype(f32)
-    uraw = sparse_row_gather(state.user_vecs, u, ids)
-    lraw = sparse_row_gather(state.last_group_vecs, u, ids)
+    uraw = sparse_row_gather(state.user_vecs, u, ids, t_max_cap=t_max_cap)
+    lraw = sparse_row_gather(state.last_group_vecs, u, ids,
+                             t_max_cap=t_max_cap)
 
     # --- scenario 1: per-slot expansion of r_g^(k-1-j)·(v'_gj - v_gj)/k ----
     pow_tp = rb ** jnp.where(in_gj, tau_j[:, None] - p, 0)
@@ -666,15 +707,19 @@ def _del_basket_sparse_core(state: StreamState, u, hist, gs, nb, k, s, sig,
             d_nb, d_ng)
 
 
-@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+@functools.partial(jax.jit, static_argnames=("params", "t_max_cap"),
+                   donate_argnums=(0,))
 def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
-                           params: TifuParams) -> StreamState:
+                           params: TifuParams,
+                           t_max_cap: int = 0) -> StreamState:
     """Apply a homogeneous basket-deletion sub-batch with sparse deltas.
 
-    State traffic is O(batch · N·B) — the deleted user's history window —
-    instead of the dense path's O(batch · n_items).  Semantics match
-    ``apply_del_basket_batch_dense`` and the RefEngine to ~1e-4
-    (tests/test_update_partition.py).
+    Implements Eq. 10–12 (suffix contractions expanded to per-history-
+    slot coefficients, DESIGN.md §3.5).  State traffic is O(batch · N·B)
+    — the deleted user's history window — instead of the dense path's
+    O(batch · n_items).  Semantics match ``apply_del_basket_batch_dense``
+    and the RefEngine to ~1e-4 (tests/test_update_partition.py).
+    ``t_max_cap`` as in :func:`apply_add_batch`.
     """
     u = batch.user
     hist = state.history[u]
@@ -688,12 +733,13 @@ def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
     pos = jnp.clip(batch.pos, 0, jnp.maximum(nb - 1, 0))
     (ids, u_vals, l_vals, s_ratio, em_ratio, new_hist, new_gs, d_nb,
      d_ng) = _del_basket_sparse_core(state, u, hist, gs, nb, k, s, sig, em,
-                                     pos, valid, params)
+                                     pos, valid, params, t_max_cap)
     vf = valid[:, None]
     return StreamState(
-        user_vecs=sparse_row_scatter(state.user_vecs, u, ids, u_vals),
+        user_vecs=sparse_row_scatter(state.user_vecs, u, ids, u_vals,
+                                     t_max_cap=t_max_cap),
         last_group_vecs=sparse_row_scatter(state.last_group_vecs, u, ids,
-                                           l_vals),
+                                           l_vals, t_max_cap=t_max_cap),
         history=state.history.at[u].add(
             jnp.where(valid[:, None, None], new_hist - hist, 0)),
         group_sizes=state.group_sizes.at[u].add(
@@ -708,15 +754,19 @@ def apply_del_basket_batch(state: StreamState, batch: DelBasketBatch,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+@functools.partial(jax.jit, static_argnames=("params", "t_max_cap"),
+                   donate_argnums=(0,))
 def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
-                         params: TifuParams) -> StreamState:
+                         params: TifuParams,
+                         t_max_cap: int = 0) -> StreamState:
     """Apply a homogeneous item-deletion sub-batch with sparse deltas.
 
     The Eq. 13 in-place branch touches a single (user, item) cell of each
-    vector table; the basket-vanish fallback reuses the sparse
-    basket-deletion core on the history window.  One fused program serves
-    both branches (the support is the window plus one appended item slot).
+    vector table — O(1) per event; the basket-vanish fallback reuses the
+    sparse Eq. 10–12 core on the history window, O(N·B) per event.  One
+    fused program serves both branches (the support is the window plus
+    one appended item slot).  ``t_max_cap`` as in :func:`apply_add_batch`
+    (the hint covers the appended item slot too).
     """
     u = batch.user
     hist = state.history[u]
@@ -739,7 +789,7 @@ def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
 
     (ids_db, u_db, l_db, s_ratio, em_ratio, hist_db, gs_db, d_nb,
      d_ng) = _del_basket_sparse_core(state, u, hist, gs, nb, k, s, sig, em,
-                                     pos, apply_db, params)
+                                     pos, apply_db, params, t_max_cap)
 
     # --- Eq. 13 in place: one cell per table -------------------------------
     j, i = jax.vmap(_locate)(gs, pos)
@@ -765,9 +815,10 @@ def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
     new_gs = jnp.where(apply_db[:, None], gs_db, gs)
     touched = apply_db | apply_ip
     return StreamState(
-        user_vecs=sparse_row_scatter(state.user_vecs, u, ids, u_vals),
+        user_vecs=sparse_row_scatter(state.user_vecs, u, ids, u_vals,
+                                     t_max_cap=t_max_cap),
         last_group_vecs=sparse_row_scatter(state.last_group_vecs, u, ids,
-                                           l_vals),
+                                           l_vals, t_max_cap=t_max_cap),
         history=state.history.at[u].add(
             jnp.where(touched[:, None, None], new_hist - hist, 0)),
         group_sizes=state.group_sizes.at[u].add(
@@ -788,14 +839,17 @@ def apply_del_item_batch(state: StreamState, batch: DelItemBatch,
 
 def apply_update_batch(state: StreamState, batch: UpdateBatch,
                        params: TifuParams) -> StreamState:
-    """Apply a mixed micro-batch by host-partitioning it into homogeneous
-    kind sub-batches (compat shim over the partitioned pipeline).
+    """Apply a mixed micro-batch through the partitioned pipeline.
 
-    INVARIANT (enforced by streaming.engine): within one batch each user
-    appears at most once among non-noop rows.  The sub-batches therefore
-    touch disjoint users and can be applied in any order.  Requires
-    concrete (non-traced) ``batch.kind``; fully-traced callers should
-    build homogeneous sub-batches themselves (see configs/tifu_knn.py).
+    Compat shim: host-partitions the batch into homogeneous kind
+    sub-batches, so each event pays its own kind's cost (adds
+    O(batch·W), deletions O(batch·N·B) — Eq. 7–13 via the sparse
+    appliers above).  INVARIANT (enforced by streaming.engine): within
+    one batch each user appears at most once among non-noop rows; the
+    sub-batches therefore touch disjoint users and can be applied in
+    any order.  Requires concrete (non-traced) ``batch.kind``;
+    fully-traced callers should build homogeneous sub-batches
+    themselves (see configs/tifu_knn.py).
     """
     kind = np.asarray(jax.device_get(batch.kind))
     add_rows = np.nonzero(kind == KIND_ADD_BASKET)[0]
@@ -825,11 +879,14 @@ def apply_update_batch(state: StreamState, batch: UpdateBatch,
 @functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
 def apply_update_batch_dense(state: StreamState, batch: UpdateBatch,
                              params: TifuParams) -> StreamState:
-    """The seed's mixed-kind dense path: gather [batch, n_items] rows,
-    compute ALL update rules per row, select one, scatter dense deltas.
+    """Apply a mixed micro-batch via the seed's dense path.
 
-    Retained as the benchmark baseline (bench_update_batch.py measures
-    the partitioned pipeline against it) and as a second oracle."""
+    Gathers [batch, n_items] rows, computes ALL update rules (Eq. 7–13)
+    per row, selects one, scatters dense deltas — ~4x redundant compute
+    and O(batch · n_items) traffic regardless of kind mix.  Retained as
+    the benchmark baseline (bench_update_batch.py measures the
+    partitioned pipeline against it) and as a second oracle.
+    """
     u = batch.user
     *gathered, s, sig = _gather_true(state, u)
     gathered = tuple(gathered)
@@ -860,9 +917,12 @@ def apply_update_batch_dense(state: StreamState, batch: UpdateBatch,
 
 @functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
 def refresh_users(state: StreamState, users, params: TifuParams) -> StreamState:
-    """Exact from-scratch refresh of selected users (stability tracker).
+    """Recompute selected users from scratch (stability tracker).
 
-    Resets the per-user scales to 1 (the fresh rows are true values)."""
+    The exact Eq. 1+2 closed-form rebuild on the padded history —
+    O(|users| · (N·B + n_items)) — resetting the per-user error
+    trackers and scales to 1 (the fresh rows are true values).
+    """
     h = state.history[users]
     gs = state.group_sizes[users]
     ng = state.n_groups[users]
@@ -887,9 +947,11 @@ def refresh_users(state: StreamState, users, params: TifuParams) -> StreamState:
 def renormalize_users(state: StreamState, users) -> StreamState:
     """Fold the per-user scales back into the raw rows (scale -> 1).
 
-    Dense per selected user but value-preserving and rare: the engine
-    triggers it only when a scale approaches SCALE_FLOOR (hundreds of
-    group openings per user between triggers)."""
+    Dense per selected user — O(|users| · n_items) — but
+    value-preserving and rare: the engine triggers it only when a scale
+    approaches SCALE_FLOOR/SCALE_CEIL (hundreds of group openings or
+    Eq. 12 deletions per user between triggers).
+    """
     s = state.uv_scale[users]
     sig = state.lgv_scale[users]
     return StreamState(

@@ -58,7 +58,12 @@ def _on_tpu() -> bool:
 
 
 def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
-    """Fused similarity + top-k. impl: auto | pallas | interpret | ref."""
+    """Fused similarity + top-k (paper §2.2 neighbour search).
+
+    O(Q·M·I) compute over corpus tiles with an on-chip [Q, k] running
+    merge — never a [Q, M] score matrix in HBM (DESIGN.md §3.4).
+    impl: auto | pallas | interpret | ref.
+    """
     impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.knn_topk_ref(queries, corpus, k,
@@ -69,7 +74,11 @@ def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
 
 
 def multihot_scatter(ids, weights, n_items: int, impl: str | None = None):
-    """Weighted multi-hot scatter (TIFU user-vector builder)."""
+    """Weighted multi-hot scatter (the Eq. 1+2 from-scratch builder).
+
+    One decayed-average user/group vector per call: O(N·B) input ids
+    against an [n_items] output (DESIGN.md §3.1).
+    """
     impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.decayed_scatter_ref(ids, weights, n_items)
@@ -81,7 +90,21 @@ def multihot_scatter(ids, weights, n_items: int, impl: str | None = None):
                            interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def _plan_dims(n_items: int, ids):
+def plan_bi(n_items: int) -> int | None:
+    """Item-tile width for the tile-planned kernels, or None.
+
+    The largest lane-aligned tile (512/256/128) dividing ``n_items``;
+    None means the Pallas path falls back to the XLA reference.  Public
+    so hint producers (the streaming engine's host-measured ``T_max``,
+    DESIGN.md §3.3) bucket ids with the same tile width the kernels use.
+    """
+    for bi in (512, 256, 128):
+        if n_items % bi == 0:
+            return bi
+    return None
+
+
+def _plan_dims(n_items: int, ids, t_max_cap: int = 0):
     """(bi, t_max) for the tile-planned kernels, or None → ref fallback.
 
     ``bi`` is the largest lane-aligned tile dividing ``n_items``;
@@ -89,32 +112,37 @@ def _plan_dims(n_items: int, ids):
     concrete (benchmark / direct calls outside jit) the true maximum is
     measured on host and pow2-bucketed — typical baskets touch only a
     few tiles, so the grid shrinks far below the ``min(W, I/bi)`` worst
-    case that tracers must assume.
+    case that tracers must otherwise assume.  Under jit, a caller-
+    supplied ``t_max_cap`` (the engine's host-measured bound, threaded
+    through the batch appliers as a static arg) shrinks the tracer-side
+    grid the same way; 0 means no hint.
     """
-    for bi in (512, 256, 128):
-        if n_items % bi == 0:
-            break
-    else:
+    bi = plan_bi(n_items)
+    if bi is None:
         return None
     w = ids.shape[1]
     cap = max(1, min(w, n_items // bi))
     if isinstance(ids, jax.core.Tracer):
-        return bi, cap
+        return bi, (max(1, min(cap, t_max_cap)) if t_max_cap else cap)
     from repro.core.types import _pow2_pad
     return bi, min(_pow2_pad(tile_plan.max_touched_tiles(ids, bi)), cap)
 
 
-def sparse_row_scatter(table, rows, ids, vals, impl: str | None = None):
+def sparse_row_scatter(table, rows, ids, vals, impl: str | None = None,
+                       t_max_cap: int = 0):
     """Sparse per-row scatter-add into a [M, I] table (add-path deltas).
 
     XLA's native scatter is already O(U·W) on CPU/GPU; the tile-planned
     Pallas kernel is the TPU path (DMAs only the dirty tiles of the
-    touched rows, in place — O(U·W) HBM traffic too).
+    touched rows, in place — O(U·W) HBM traffic too).  ``t_max_cap``
+    (optional, static) is a host-measured upper bound on per-row touched
+    tiles that shrinks the kernel grid under jit; it MUST be sound (>=
+    the true maximum) — the plan truncates beyond it.
     """
     impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.sparse_row_scatter_ref(table, rows, ids, vals)
-    dims = _plan_dims(table.shape[1], ids)
+    dims = _plan_dims(table.shape[1], ids, t_max_cap)
     if dims is None:
         return ref.sparse_row_scatter_ref(table, rows, ids, vals)
     bi, t_max = dims
@@ -123,17 +151,19 @@ def sparse_row_scatter(table, rows, ids, vals, impl: str | None = None):
         interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def sparse_row_gather(table, rows, ids, impl: str | None = None):
+def sparse_row_gather(table, rows, ids, impl: str | None = None,
+                      t_max_cap: int = 0):
     """Sparse per-row gather from a [M, I] table (update-path supports).
 
     XLA's native gather is already O(U·W) on CPU/GPU; the tile-planned
     Pallas kernel is the TPU path (DMAs only the touched rows' dirty
-    tiles — O(U·W) HBM traffic too).
+    tiles — O(U·W) HBM traffic too).  ``t_max_cap`` as in
+    :func:`sparse_row_scatter`.
     """
     impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.sparse_row_gather_ref(table, rows, ids)
-    dims = _plan_dims(table.shape[1], ids)
+    dims = _plan_dims(table.shape[1], ids, t_max_cap)
     if dims is None:
         return ref.sparse_row_gather_ref(table, rows, ids)
     bi, t_max = dims
@@ -144,7 +174,11 @@ def sparse_row_gather(table, rows, ids, impl: str | None = None):
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,
                     impl: str | None = None, **kw):
-    """Blocked attention. [B,S,H,D] each → [B,S,H,D]."""
+    """Blocked attention: [B,S,H,D] each → [B,S,H,D].
+
+    O(S²·D) compute with O(S·D) memory (never an [S, S] score matrix in
+    HBM); serves the LM stack, not the TIFU maintenance path.
+    """
     impl = _resolve(impl)
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         return ref.flash_attention_ref(q, k, v, causal, window)

@@ -26,6 +26,31 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_user_shard_meshes(n_shards: int, devices=None):
+    """One ``("data", "model")`` mesh per user shard (DESIGN.md §7).
+
+    The sharded streaming engine runs one independent `StateStore` +
+    exactly-once log per user shard; each shard's arrays live on its own
+    device group.  Devices are dealt round-robin so shard ``s`` gets
+    ``devices[s::n_shards]``; on hosts with fewer devices than shards
+    (the CPU test runner: one device) shards share devices — the layout
+    is then logical only, but every code path is identical to the
+    multi-host one.
+
+    Each mesh keeps a size-1 ``"model"`` axis so `StoreConfig`'s default
+    ``item_axes=("model",)`` placement resolves without a special case.
+    """
+    from jax.sharding import Mesh
+    import numpy as np
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    groups = [devices[s::n_shards] or [devices[s % len(devices)]]
+              for s in range(n_shards)]
+    return [Mesh(np.asarray(g).reshape(len(g), 1), ("data", "model"))
+            for g in groups]
+
+
 # Hardware constants for the roofline model (TPU v5e).
 PEAK_FLOPS_BF16 = 197e12       # per chip
 HBM_BW = 819e9                 # bytes/s per chip

@@ -23,6 +23,56 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
 @dataclasses.dataclass(frozen=True)
+class UserShardSpec:
+    """User-axis partitioning contract for the sharded streaming engine.
+
+    Users are assigned **round-robin** (DESIGN.md §7): global user ``u``
+    lives on shard ``u % n_shards`` at local row ``u // n_shards``.  The
+    mapping is a bijection between global ids and ``(shard, row)`` pairs,
+    it is stable under growth of ``n_users`` (existing users never move
+    when new ids are appended), and it interleaves ids so per-shard
+    candidate lists merge with the same tie-break order as a single
+    corpus (``core.knn.sharded_recommend_for_users``).  Shards own
+    near-equal user counts (they differ by at most one row), so no
+    per-shard padding rows exist — every corpus row is a real user.
+
+    Resharding (restoring an N-shard checkpoint into M shards,
+    ``ShardedStreamingEngine.restore``) is pure re-indexing under this
+    contract: ``u = row·N + shard`` recovers the global id, which then
+    re-partitions under M.
+    """
+
+    n_users: int
+    n_shards: int
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.n_users < 1:
+            raise ValueError(f"n_users must be >= 1, got {self.n_users}")
+
+    def shard_of(self, user):
+        """Owning shard of global user id(s) ``user`` (int or array)."""
+        return user % self.n_shards
+
+    def local_row(self, user):
+        """Local state-store row of global user id(s) ``user``."""
+        return user // self.n_shards
+
+    def global_user(self, shard, row):
+        """Inverse mapping: global id of local ``row`` on ``shard``."""
+        return row * self.n_shards + shard
+
+    def shard_users(self, shard: int) -> int:
+        """Number of users owned by ``shard`` (its state-store size)."""
+        return (self.n_users - shard + self.n_shards - 1) // self.n_shards
+
+    def owned_users(self, shard: int) -> np.ndarray:
+        """Global ids owned by ``shard``, in local-row order."""
+        return np.arange(shard, self.n_users, self.n_shards)
+
+
+@dataclasses.dataclass(frozen=True)
 class ShardingRules:
     """Named logical axes → physical mesh axes.
 

@@ -1,7 +1,12 @@
 """Streaming: micro-batch state maintenance (Spark Structured Streaming
-analog — paper §5), exactly-once recovery, stability-triggered refresh."""
-from repro.streaming.engine import Event, StreamingEngine
-from repro.streaming.state_store import StateStore, StoreConfig, state_shardings
+analog — paper §5), exactly-once recovery, stability-triggered refresh,
+and the user-axis sharded deployment (DESIGN.md §7)."""
+from repro.streaming.engine import (Event, ShardedStreamingEngine,
+                                    StreamingEngine)
+from repro.streaming.state_store import (StateStore, StoreConfig,
+                                         load_checkpoint_arrays,
+                                         state_shardings)
 
-__all__ = ["Event", "StreamingEngine", "StateStore", "StoreConfig",
-           "state_shardings"]
+__all__ = ["Event", "StreamingEngine", "ShardedStreamingEngine",
+           "StateStore", "StoreConfig", "state_shardings",
+           "load_checkpoint_arrays"]

@@ -42,13 +42,16 @@ import numpy as np
 from repro.core import stability
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
                               KIND_DEL_ITEM, PAD_ID, AddBatch,
-                              DelBasketBatch, DelItemBatch, TifuParams,
-                              _pow2_pad)
+                              DelBasketBatch, DelItemBatch, StreamState,
+                              TifuParams, _pow2_pad)
 from repro.core.updates import (SCALE_CEIL, SCALE_FLOOR,
                                 apply_add_batch_counted,
                                 apply_del_basket_batch, apply_del_item_batch,
                                 refresh_users, renormalize_users)
-from repro.streaming.state_store import StateStore
+from repro.parallel.sharding import UserShardSpec
+from repro.streaming.state_store import (StateStore, StoreConfig,
+                                         atomic_write_json,
+                                         load_checkpoint_arrays)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,12 +67,23 @@ class Event:
 
 @dataclasses.dataclass
 class EngineMetrics:
+    """Counters one engine accumulates over its lifetime.
+
+    Observability only — never read back by the update logic.
+    """
+
     events_processed: int = 0
     batches: int = 0
     refreshes: int = 0
     renormalizations: int = 0
     # adds masked to no-ops by apply_add_batch's capacity guard
     dropped_adds: int = 0
+    # explicit-seqno submissions skipped by the exactly-once dedup.
+    # Under the documented contract these are redeliveries; a number
+    # far above the source's redelivery rate means the contract is
+    # being violated (out-of-order FIRST deliveries are
+    # indistinguishable from duplicates and are dropped — watch this).
+    dedup_skips: int = 0
     # pow2 sub-batch bucket transitions (each is a fresh compile unless
     # that bucket was seen before); shrinks are hysteresis-gated
     bucket_grows: int = 0
@@ -84,10 +98,20 @@ class StreamingEngine:
                  batch_size: int = 256,
                  stability_target_rel_err: Optional[float] = 1e-2,
                  renorm_check_interval: int = 64,
-                 bucket_hysteresis: int = 8):
+                 bucket_hysteresis: int = 8,
+                 tile_hints: Optional[bool] = None):
         self.store = store
         self.params = params
         self.batch_size = batch_size
+        # Host-measured touched-tile bounds (T_max) threaded into the
+        # jitted appliers as static args (DESIGN.md §3.3): shrinks the
+        # tile-planned TPU kernel grids below the static min(W, I/bi)
+        # worst case.  Costs one small host fetch of the touched users'
+        # history per micro-batch, so it defaults on only where it pays
+        # (the Pallas path); tests force it on under interpret mode.
+        if tile_hints is None:
+            tile_hints = jax.default_backend() == "tpu"
+        self.tile_hints = tile_hints
         # pow2 sub-batch bucket hysteresis (DESIGN.md §4.1): a kind's
         # bucket grows immediately (the rows exist, there is no choice)
         # but only shrinks after this many CONSECUTIVE micro-batches
@@ -116,18 +140,31 @@ class StreamingEngine:
         self._queues: Dict[int, deque] = {}
         self._heap: List[tuple] = []   # a user is in the heap iff its
         self._n_pending = 0            # queue exists in _queues
-        # Exactly-once bookkeeping.  Conflict deferral (one event per user
-        # per micro-batch) processes events OUT of seqno order, so a plain
-        # high-watermark would drop deferred-but-unprocessed events on
-        # replay.  We track the contiguous frontier + the sparse set of
-        # processed seqnos above it, PLUS the seqnos currently sitting in
-        # the pending queues: an at-least-once source may redeliver an
-        # event before its first copy was ever processed, and without the
-        # pending set that duplicate would be enqueued (and applied)
-        # twice.
-        self.watermark = -1                 # all seqnos <= this are done
+        # Exactly-once bookkeeping (DESIGN.md §5/§7).  Conflict deferral
+        # (one event per user per micro-batch) processes events OUT of
+        # seqno order, so a plain high-watermark would drop
+        # deferred-but-unprocessed events on replay.  We track a frontier
+        # + the sparse set of processed seqnos above it, PLUS the seqnos
+        # currently sitting in the pending queues: an at-least-once
+        # source may redeliver an event before its first copy was ever
+        # processed, and without the pending set that duplicate would be
+        # enqueued (and applied) twice.
+        #
+        # SUBSEQUENCE SEMANTICS: this engine may be one shard of a
+        # user-partitioned deployment, in which case it sees only the
+        # subsequence of global seqnos routed to it.  The watermark
+        # therefore means "every seqno <= watermark that was DELIVERED to
+        # this engine has been processed", and it advances past gaps
+        # (seqnos owned by other shards) up to `_max_delivered` — but
+        # never past a pending (delivered, unprocessed) seqno and never
+        # past `_max_delivered` itself.  The contract this relies on:
+        # FIRST deliveries arrive in increasing seqno order (standard log
+        # semantics; duplicates may arrive in any order).  The dense
+        # single-engine stream is the gap-free special case.
+        self.watermark = -1                 # all delivered <= this: done
         self._processed_above: set = set()
         self._pending_seqnos: set = set()
+        self._max_delivered = -1
         self._next_seqno = 0
         self.metrics = EngineMetrics()
         if stability_target_rel_err is not None:
@@ -153,6 +190,18 @@ class StreamingEngine:
         self._n_pending += 1
 
     def submit(self, events: Iterable[Event]) -> None:
+        """Enqueue events, deduplicating at-least-once redeliveries.
+
+        Events without a seqno are assigned the next one; events WITH a
+        seqno are replays/redeliveries and are skipped when already
+        processed (``<= watermark`` under the subsequence semantics, or
+        in the sparse processed set above it) or still buffered.
+        CONTRACT: first deliveries must arrive in increasing seqno
+        order — a late out-of-order first delivery is indistinguishable
+        from a redelivery and is dropped (counted in
+        ``metrics.dedup_skips``).  Cost: O(1) per event (amortized heap
+        push).
+        """
         for ev in events:
             if ev.seqno < 0:
                 ev = dataclasses.replace(ev, seqno=self._next_seqno)
@@ -162,26 +211,34 @@ class StreamingEngine:
                     or ev.seqno in self._pending_seqnos:
                 # replay of an event that was already processed OR is
                 # still buffered: skip (at-least-once -> exactly-once)
+                self.metrics.dedup_skips += 1
                 continue
             else:
                 self._next_seqno = max(self._next_seqno, ev.seqno + 1)
+            self._max_delivered = max(self._max_delivered, ev.seqno)
             self._enqueue(ev)
 
     def add_basket(self, user: int, items: Sequence[int]) -> None:
+        """Enqueue one basket addition (Eq. 7–9) for ``user``."""
         self.submit([Event(KIND_ADD_BASKET, user,
                            items=np.asarray(items, np.int32))])
 
     def delete_basket(self, user: int, pos: int) -> None:
+        """Enqueue deletion of basket ``pos`` (Eq. 10–12) for ``user``."""
         self.submit([Event(KIND_DEL_BASKET, user, pos=pos)])
 
     def delete_item(self, user: int, pos: int, item: int) -> None:
+        """Enqueue deletion of ``item`` from basket ``pos`` (Eq. 13)."""
         self.submit([Event(KIND_DEL_ITEM, user, pos=pos, item=item)])
 
     # -- micro-batch processing -------------------------------------------------
 
     def _cut_batch(self) -> List[Event]:
-        """Take up to batch_size events in seqno order, at most one per
-        user; a user's later events stay queued for the next batch."""
+        """Take up to batch_size events in seqno order, one per user.
+
+        A user's later events stay queued for the next batch; cost is
+        O(taken · log users) heap work.
+        """
         taken: List[Event] = []
         requeue = []
         while self._heap and len(taken) < self.batch_size:
@@ -200,9 +257,12 @@ class StreamingEngine:
         return taken
 
     def _bucket(self, kind: int, n: int) -> int:
-        """Padded sub-batch size for ``n`` rows of ``kind``, with shrink
-        hysteresis: growth is immediate, shrink waits for
-        ``bucket_hysteresis`` consecutive under-boundary micro-batches."""
+        """Pick the padded sub-batch size for ``n`` rows of ``kind``.
+
+        Shrink hysteresis (DESIGN.md §4.1): growth is immediate, shrink
+        waits for ``bucket_hysteresis`` consecutive under-boundary
+        micro-batches.
+        """
         want = _pow2_pad(n, self.batch_size)
         cur = self._kind_bucket.get(kind, 0)
         if want >= cur:
@@ -220,23 +280,82 @@ class StreamingEngine:
         return cur
 
     def _decay_absent_buckets(self, present) -> None:
-        """Advance the shrink hysteresis of kinds ABSENT from this
-        micro-batch.  Without this, a one-off burst (e.g. a GDPR delete
-        wave) pins its large pow2 bucket forever: the kind never appears
-        again, `_bucket` is never consulted, and the next singleton of
-        that kind pads to the stale burst-sized bucket.  An absent batch
+        """Advance the shrink hysteresis of kinds ABSENT from a batch.
+
+        Without this, a one-off burst (e.g. a GDPR delete wave) pins its
+        large pow2 bucket forever: the kind never appears again,
+        `_bucket` is never consulted, and the next singleton of that
+        kind pads to the stale burst-sized bucket.  An absent batch
         counts as a zero-row batch, so after ``bucket_hysteresis``
         consecutive batches without the kind its bucket decays to the
         minimum (re-growth stays immediate, and previously compiled
-        buckets are still cached)."""
+        buckets are still cached).
+        """
         for kind in list(self._kind_bucket):
             if kind not in present and self._kind_bucket[kind] > 1:
                 self._bucket(kind, 0)
 
+    def _tile_hints(self, adds, delb, deli) -> Dict[int, int]:
+        """Host-measured per-kind touched-tile bounds (DESIGN.md §3.3).
+
+        Measures, for each kind sub-batch, the maximum number of item
+        tiles any row's support ids touch — the add support is the new
+        basket plus the last group's history rows, the delete supports
+        are the whole history window (plus the deleted item id) — and
+        pow2-buckets it, so the jitted appliers receive a sound static
+        ``T_max`` far below the ``min(W, I/bi)`` tracer worst case.
+        Sound because distinct tiles <= distinct ids, and the supports
+        here are supersets of what the device constructs (capacity /
+        validity masks only shrink them).  Cost: one O(batch · N·B) host
+        fetch of the touched users' history per micro-batch.
+        """
+        from repro.kernels import ops
+        bi = ops.plan_bi(self.store.cfg.n_items)
+        if bi is None:       # kernels fall back to the XLA reference
+            return {}
+        evs_all = adds + delb + deli
+        idx = jnp.asarray(np.asarray([ev.user for ev in evs_all], np.int32))
+        hist, gs, nb, ng = jax.device_get(
+            (self.store.state.history[idx], self.store.state.group_sizes[idx],
+             self.store.state.n_baskets[idx], self.store.state.n_groups[idx]))
+
+        def _tiles(ids) -> int:
+            ids = ids[ids >= 0]
+            return int(np.unique(ids // bi).size) if ids.size else 1
+
+        hints: Dict[int, int] = {}
+        off = 0
+        if adds:
+            best = 1
+            for r, ev in enumerate(adds):
+                k, n = int(ng[off + r]), int(nb[off + r])
+                tau = int(gs[off + r, max(k - 1, 0)]) if k > 0 else 0
+                window = hist[off + r, max(n - tau, 0):n].ravel()
+                best = max(best, _tiles(np.concatenate(
+                    [window, np.asarray(ev.items, np.int32).ravel()])))
+            hints[KIND_ADD_BASKET] = _pow2_pad(best)
+            off += len(adds)
+        for kind, evs in ((KIND_DEL_BASKET, delb), (KIND_DEL_ITEM, deli)):
+            if not evs:
+                continue
+            best = 1
+            for r, ev in enumerate(evs):
+                ids = hist[off + r, :int(nb[off + r])].ravel()
+                if kind == KIND_DEL_ITEM:
+                    ids = np.append(ids, np.int32(ev.item))
+                best = max(best, _tiles(ids))
+            hints[kind] = _pow2_pad(best)
+            off += len(evs)
+        return hints
+
     def _apply_events(self, events: List[Event]) -> None:
-        """Partition a micro-batch by kind and run one homogeneous
-        compiled program per kind present (users are disjoint across the
-        sub-batches, so application order is irrelevant)."""
+        """Partition a micro-batch by kind and apply each sub-batch.
+
+        One homogeneous compiled program per kind present (users are
+        disjoint across the sub-batches, so application order is
+        irrelevant): adds pay O(batch·W), deletions O(batch·N·B)
+        (DESIGN.md §3.3/§3.5).
+        """
         adds = [ev for ev in events if ev.kind == KIND_ADD_BASKET]
         delb = [ev for ev in events if ev.kind == KIND_DEL_BASKET]
         deli = [ev for ev in events if ev.kind == KIND_DEL_ITEM]
@@ -244,6 +363,7 @@ class StreamingEngine:
                                     ((KIND_ADD_BASKET, adds),
                                      (KIND_DEL_BASKET, delb),
                                      (KIND_DEL_ITEM, deli)) if evs})
+        hints = self._tile_hints(adds, delb, deli) if self.tile_hints else {}
         b = self.store.cfg.max_basket_size
         if adds:
             batch = AddBatch.build(
@@ -252,21 +372,24 @@ class StreamingEngine:
             # the counted variant surfaces capacity drops (masked to
             # no-ops by the guard) from the same fused program
             self.store.state, dropped = apply_add_batch_counted(
-                self.store.state, batch, self.params)
+                self.store.state, batch, self.params,
+                t_max_cap=hints.get(KIND_ADD_BASKET, 0))
             self.metrics.dropped_adds += int(dropped)
         if delb:
             batch = DelBasketBatch.build(
                 [ev.user for ev in delb], [ev.pos for ev in delb],
                 pad_to=self._bucket(KIND_DEL_BASKET, len(delb)))
-            self.store.state = apply_del_basket_batch(self.store.state,
-                                                      batch, self.params)
+            self.store.state = apply_del_basket_batch(
+                self.store.state, batch, self.params,
+                t_max_cap=hints.get(KIND_DEL_BASKET, 0))
         if deli:
             batch = DelItemBatch.build(
                 [ev.user for ev in deli], [ev.pos for ev in deli],
                 [ev.item for ev in deli],
                 pad_to=self._bucket(KIND_DEL_ITEM, len(deli)))
-            self.store.state = apply_del_item_batch(self.store.state, batch,
-                                                    self.params)
+            self.store.state = apply_del_item_batch(
+                self.store.state, batch, self.params,
+                t_max_cap=hints.get(KIND_DEL_ITEM, 0))
         # serving-corpus cache: only these rows changed (DESIGN.md §3.6)
         self.store.invalidate_users([ev.user for ev in events])
 
@@ -304,25 +427,48 @@ class StreamingEngine:
                 self.store.state, jnp.asarray(out, jnp.int32))
             self.metrics.renormalizations += int(out.size)
 
-    def step(self) -> int:
-        """Process one micro-batch. Returns number of events applied."""
+    def _begin_step(self) -> List[Event]:
+        """Cut one micro-batch and dispatch its update programs (async).
+
+        Split from `_finish_step` so a sharded deployment can dispatch
+        every shard's programs before any shard blocks on its
+        maintenance syncs (`ShardedStreamingEngine.step`).
+        """
         events = self._cut_batch()
-        if not events:
-            return 0
-        t0 = time.perf_counter()
-        self._apply_events(events)
+        if events:
+            self._apply_events(events)
+        return events
+
+    def _finish_step(self, events: List[Event], t0: float) -> int:
+        """Maintenance + exactly-once log advance for one micro-batch."""
         self._maintain()
         for ev in events:
             self._processed_above.add(ev.seqno)
-        while self.watermark + 1 in self._processed_above:
-            self.watermark += 1
-            self._processed_above.discard(self.watermark)
+        # Advance the frontier under the subsequence semantics: a seqno
+        # can be passed when it was processed here, OR when it was never
+        # delivered here (another shard owns it — in-order first delivery
+        # guarantees it never will be).  Pending seqnos (delivered,
+        # unprocessed) and anything beyond _max_delivered block.
+        nxt = self.watermark + 1
+        while nxt <= self._max_delivered and nxt not in self._pending_seqnos:
+            self._processed_above.discard(nxt)
+            self.watermark = nxt
+            nxt += 1
         self.metrics.events_processed += len(events)
         self.metrics.batches += 1
         self.metrics.last_batch_seconds = time.perf_counter() - t0
         return len(events)
 
+    def step(self) -> int:
+        """Process one micro-batch. Returns number of events applied."""
+        t0 = time.perf_counter()
+        events = self._begin_step()
+        if not events:
+            return 0
+        return self._finish_step(events, t0)
+
     def run_until_drained(self, max_batches: int = 10_000) -> int:
+        """Step until the pending queues empty; returns events applied."""
         total = 0
         for _ in range(max_batches):
             n = self.step()
@@ -334,30 +480,415 @@ class StreamingEngine:
     # -- recovery ---------------------------------------------------------------
 
     def checkpoint(self, directory: str, step: int) -> None:
-        # The exactly-once log rides inside the store's LATEST metadata,
-        # which is the checkpoint's single atomic commit point (fsync'd
-        # tmp + os.replace): a crash anywhere — even between files —
-        # can never pair a new state npz with an old/truncated log
-        # (a torn pair would replay below the old watermark onto the
-        # new state: double-apply).
+        """Commit state + exactly-once log atomically (DESIGN.md §5).
+
+        The log rides inside the store's LATEST metadata, which is the
+        checkpoint's single atomic commit point (fsync'd tmp +
+        os.replace): a crash anywhere — even between files — can never
+        pair a new state npz with an old/truncated log (a torn pair
+        would replay below the old watermark onto the new state:
+        double-apply).  Cost: one O(state) device fetch + write.
+        """
         self.store.checkpoint(
             directory, step,
             extra_meta={"engine": {
                 "watermark": self.watermark,
                 "processed_above": sorted(self._processed_above),
+                "delivered": self._max_delivered,
                 "next_seqno": self._next_seqno}})
 
     def restore(self, directory: str) -> None:
+        """Install a checkpoint: state, serving cache, exactly-once log.
+
+        Pending queues are dropped (they were never part of the commit);
+        an at-least-once source replays the stream WITH THE ORIGINAL
+        seqnos and `submit` skips everything at or below the restored
+        log (a replay without seqnos is indistinguishable from new
+        traffic and will re-apply).  Cost: one O(state) read + device
+        upload.
+        """
         self.store.restore(directory)
         meta = self.store.last_restored_meta.get("engine")
         if meta is None:
             # legacy checkpoint layout: separate ENGINE file
             with open(os.path.join(directory, "ENGINE")) as f:
                 meta = json.load(f)
-        self.watermark = meta["watermark"]
-        self._processed_above = set(meta.get("processed_above", []))
-        self._next_seqno = meta["next_seqno"]
+        self._load_log(meta)
         self._queues.clear()
         self._heap.clear()
         self._pending_seqnos.clear()
         self._n_pending = 0
+
+    def _load_log(self, meta: dict) -> None:
+        """Install a persisted exactly-once log (see `checkpoint`)."""
+        self.watermark = meta["watermark"]
+        self._processed_above = set(meta.get("processed_above", []))
+        self._next_seqno = meta["next_seqno"]
+        # legacy (pre-sharding) checkpoints lack `delivered`; they were
+        # written by dense single engines, where every seqno below
+        # next_seqno was delivered
+        self._max_delivered = meta.get("delivered", meta["next_seqno"] - 1)
+
+    def _reset_log(self) -> None:
+        """Fresh empty log (resharding restore starts a new shard log)."""
+        self.watermark = -1
+        self._processed_above = set()
+        self._pending_seqnos = set()
+        self._max_delivered = -1
+        self._next_seqno = 0
+        self._queues.clear()
+        self._heap.clear()
+        self._n_pending = 0
+
+
+# ---------------------------------------------------------------------------
+# User-axis sharded deployment (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+_SHARD_MANIFEST = "SHARDS"
+
+# every StreamState leaf, derived so a new field cannot silently be
+# dropped by the resharding assembler
+_STATE_LEAVES = tuple(f.name for f in dataclasses.fields(StreamState))
+
+
+class ShardedStreamingEngine:
+    """User-axis sharded streaming maintenance (DESIGN.md §7).
+
+    The paper's Spark deployment partitions the keyed state store by
+    user; this is the jax analog: ``n_shards`` fully independent
+    :class:`StreamingEngine` instances, each owning its own
+    :class:`StateStore` (optionally on its own device mesh, see
+    ``launch.mesh.make_user_shard_meshes``), its own exactly-once log,
+    its own pow2 sub-batch buckets and its own atomic ``LATEST`` commit.
+    This router only (a) assigns global seqnos, (b) routes events to
+    shard ``user % n_shards`` translated to local row ``user //
+    n_shards`` (:class:`repro.parallel.sharding.UserShardSpec`), and
+    (c) orchestrates cross-shard checkpoint/restore and serving — no
+    per-event cross-shard communication exists, matching the paper's
+    "each user vector is calculated independently".
+
+    Exactly-once across shards: each shard's log stores its watermark
+    under SUBSEQUENCE semantics (see :class:`StreamingEngine`), so a
+    crash that lands between two shard commits restores shards at
+    different steps and a full-stream replay re-applies exactly the
+    events each shard lost — never a double-apply (the failure table in
+    DESIGN.md §7).  Resharding (restore an N-shard checkpoint into M
+    shards) reassembles global rows by the spec bijection and carries
+    the N old logs as **legacy logs**: redelivered events are checked
+    against the log of their OLD owner shard (`user % N` is computable
+    at submit time), which is exact, bounded, and survives further
+    checkpoints.
+    """
+
+    def __init__(self, stores: Sequence[StateStore], params: TifuParams,
+                 spec: UserShardSpec, **engine_kw):
+        if len(stores) != spec.n_shards:
+            raise ValueError(f"{len(stores)} stores for {spec.n_shards} "
+                             "shards")
+        for s, st in enumerate(stores):
+            want = spec.shard_users(s)
+            if st.cfg.n_users != want:
+                raise ValueError(
+                    f"shard {s}: store has {st.cfg.n_users} user rows, "
+                    f"spec owns {want} (n_users={spec.n_users})")
+        self.spec = spec
+        self.params = params
+        self.shards = [StreamingEngine(st, params, **engine_kw)
+                       for st in stores]
+        self._next_seqno = 0
+        # Legacy exactly-once logs from resharding restores:
+        # [{"n_shards": N_old, "logs": [{"watermark", "processed_above"}]}]
+        self._legacy: List[dict] = []
+
+    @classmethod
+    def create(cls, spec: UserShardSpec, params: TifuParams,
+               max_baskets: int, max_basket_size: int,
+               max_groups: Optional[int] = None, meshes=None,
+               **engine_kw) -> "ShardedStreamingEngine":
+        """Build the per-shard stores from the spec and store shapes.
+
+        ``meshes`` (optional) is one device mesh per shard
+        (``launch.mesh.make_user_shard_meshes``); None keeps every
+        shard's arrays on the default device.
+        """
+        stores = []
+        for s in range(spec.n_shards):
+            cfg = StoreConfig(n_users=spec.shard_users(s),
+                              n_items=params.n_items,
+                              max_baskets=max_baskets,
+                              max_basket_size=max_basket_size,
+                              max_groups=max_groups)
+            stores.append(StateStore(
+                cfg, mesh=None if meshes is None else meshes[s]))
+        return cls(stores, params, spec, **engine_kw)
+
+    # -- ingestion ------------------------------------------------------------
+
+    @property
+    def n_pending(self) -> int:
+        """Buffered (not yet applied) events across all shards."""
+        return sum(sh.n_pending for sh in self.shards)
+
+    @property
+    def events_processed(self) -> int:
+        """Total events applied across all shards."""
+        return sum(sh.metrics.events_processed for sh in self.shards)
+
+    def _legacy_processed(self, user: int, seqno: int) -> bool:
+        """True when a pre-reshard deployment already processed seqno.
+
+        The old owner shard of ``user`` is computable from the legacy
+        partition count, so the check is an exact per-event lookup into
+        that shard's persisted log — O(#reshards) per event.
+        """
+        for entry in self._legacy:
+            log = entry["logs"][user % entry["n_shards"]]
+            if seqno <= log["watermark"] \
+                    or seqno in log["processed_above"]:
+                return True
+        return False
+
+    def submit(self, events: Iterable[Event]) -> None:
+        """Assign global seqnos and route events to their owner shards.
+
+        Explicit-seqno events (at-least-once redelivery) are first
+        checked against the legacy logs of any previous shard layout,
+        then against the owner shard's live log (inside the shard's own
+        ``submit``).  Cost: O(1) per event plus O(#reshards) dedup.
+        """
+        for ev in events:
+            if ev.seqno < 0:
+                ev = dataclasses.replace(ev, seqno=self._next_seqno)
+                self._next_seqno += 1
+            else:
+                self._next_seqno = max(self._next_seqno, ev.seqno + 1)
+                if self._legacy and self._legacy_processed(ev.user,
+                                                           ev.seqno):
+                    continue
+            shard = self.spec.shard_of(ev.user)
+            self.shards[shard].submit([dataclasses.replace(
+                ev, user=int(self.spec.local_row(ev.user)))])
+
+    def add_basket(self, user: int, items: Sequence[int]) -> None:
+        """Enqueue one basket addition (Eq. 7–9) for global ``user``."""
+        self.submit([Event(KIND_ADD_BASKET, user,
+                           items=np.asarray(items, np.int32))])
+
+    def delete_basket(self, user: int, pos: int) -> None:
+        """Enqueue deletion of basket ``pos`` (Eq. 10–12) for ``user``."""
+        self.submit([Event(KIND_DEL_BASKET, user, pos=pos)])
+
+    def delete_item(self, user: int, pos: int, item: int) -> None:
+        """Enqueue deletion of ``item`` from basket ``pos`` (Eq. 13)."""
+        self.submit([Event(KIND_DEL_ITEM, user, pos=pos, item=item)])
+
+    # -- micro-batch processing -----------------------------------------------
+
+    def step(self) -> int:
+        """Process one micro-batch per shard; returns events applied.
+
+        Kind partitioning happens locally, so pow2 sub-batch bucket
+        sizes stay shard-local.  Two phases: every shard first cuts +
+        dispatches its update programs (async), then every shard runs
+        its maintenance pass (which blocks on device syncs) — so one
+        shard's sync never delays another shard's dispatch.  Each
+        shard's ``last_batch_seconds`` covers only its own two phase
+        durations, not the other shards' syncs.
+        """
+        begun = []
+        for sh in self.shards:
+            t0 = time.perf_counter()
+            evs = sh._begin_step()
+            begun.append((sh, evs, time.perf_counter() - t0))
+        total = 0
+        for sh, evs, begin_dt in begun:
+            if evs:
+                # shift the start so elapsed = own begin + own finish
+                total += sh._finish_step(evs,
+                                         time.perf_counter() - begin_dt)
+        return total
+
+    def run_until_drained(self, max_batches: int = 10_000) -> int:
+        """Step all shards until no shard has pending events."""
+        total = 0
+        for _ in range(max_batches):
+            n = self.step()
+            if n == 0:
+                break
+            total += n
+        return total
+
+    # -- serving ---------------------------------------------------------------
+
+    def corpora(self) -> List[jax.Array]:
+        """Per-shard cached serving corpora (each shard-local, §3.6)."""
+        return [sh.store.corpus() for sh in self.shards]
+
+    def recommend(self, user_ids, topn: int = 10, k: Optional[int] = None,
+                  alpha: Optional[float] = None,
+                  metric: str = "euclidean") -> np.ndarray:
+        """Cross-shard top-n recommendations for global ``user_ids``.
+
+        Delegates to ``core.knn.sharded_recommend_for_users`` (per-shard
+        candidate top-k, streaming merge of [Q, k] score lists — never a
+        corpus gather; DESIGN.md §7).
+        """
+        from repro.core import knn
+        return knn.sharded_recommend_for_users(
+            self.corpora(), np.asarray(user_ids, np.int64),
+            k=self.params.k_neighbors if k is None else k,
+            alpha=self.params.alpha if alpha is None else alpha,
+            topn=topn, n_shards=self.spec.n_shards, metric=metric)
+
+    # -- recovery ---------------------------------------------------------------
+
+    def _shard_dir(self, directory: str, shard: int) -> str:
+        return os.path.join(directory, f"shard_{shard:03d}")
+
+    def _serialized_legacy(self) -> list:
+        return [{"n_shards": e["n_shards"],
+                 "logs": [{"watermark": lg["watermark"],
+                           "processed_above": sorted(lg["processed_above"])}
+                          for lg in e["logs"]]} for e in self._legacy]
+
+    @staticmethod
+    def _parse_legacy(raw: list) -> list:
+        return [{"n_shards": e["n_shards"],
+                 "logs": [{"watermark": lg["watermark"],
+                           "processed_above":
+                               set(lg.get("processed_above", []))}
+                          for lg in e["logs"]]} for e in raw]
+
+    def checkpoint(self, directory: str, step: int) -> None:
+        """Commit every shard, then the cross-shard manifest.
+
+        Each shard commits independently and atomically (its own
+        fsync'd ``LATEST``, carrying its own exactly-once log); the
+        ``SHARDS`` manifest (atomic too) only records the layout, the
+        router seqno counter and the legacy logs.  A crash anywhere
+        leaves shards at possibly different steps — recoverable by
+        replay (DESIGN.md §7 failure table).  A directory written under
+        a DIFFERENT layout is refused: re-partitioned shard files would
+        tear the old manifest's view.
+        """
+        os.makedirs(directory, exist_ok=True)
+        man_path = os.path.join(directory, _SHARD_MANIFEST)
+        if os.path.exists(man_path):
+            with open(man_path) as f:
+                man = json.load(f)
+            if man["n_shards"] != self.spec.n_shards \
+                    or man["n_users"] != self.spec.n_users:
+                raise ValueError(
+                    f"checkpoint directory holds a "
+                    f"{man['n_shards']}-shard/{man['n_users']}-user "
+                    f"layout; refusing to overwrite with "
+                    f"{self.spec.n_shards}/{self.spec.n_users} — use a "
+                    "fresh directory after resharding")
+        for s, sh in enumerate(self.shards):
+            sh.checkpoint(self._shard_dir(directory, s), step)
+        atomic_write_json(man_path, {
+            "version": 1,
+            "n_shards": self.spec.n_shards,
+            "n_users": self.spec.n_users,
+            "step": step,
+            "next_seqno": self._next_seqno,
+            "legacy_logs": self._serialized_legacy(),
+        })
+
+    def restore(self, directory: str) -> None:
+        """Install a sharded checkpoint, resharding when layouts differ.
+
+        Same shard count: each shard restores its own commit (states may
+        sit at different steps after a torn crash; replay converges
+        them).  Different shard count (N→M): global user rows are
+        reassembled through the spec bijection and the N old logs become
+        legacy logs (`_legacy_processed`).  A flat single-engine
+        checkpoint (no manifest, root ``LATEST``) restores as N=1.
+        """
+        man_path = os.path.join(directory, _SHARD_MANIFEST)
+        man = None
+        if os.path.exists(man_path):
+            with open(man_path) as f:
+                man = json.load(f)
+            n_old = man["n_shards"]
+            if man["n_users"] != self.spec.n_users:
+                raise ValueError(
+                    f"checkpoint n_users={man['n_users']} != spec "
+                    f"n_users={self.spec.n_users}")
+            dirs = [self._shard_dir(directory, s) for s in range(n_old)]
+        elif os.path.exists(os.path.join(directory, "LATEST")):
+            n_old, dirs = 1, [directory]      # flat single-engine layout
+        else:
+            raise FileNotFoundError(
+                f"no {_SHARD_MANIFEST} manifest or LATEST in {directory}")
+        self._legacy = self._parse_legacy(man.get("legacy_logs", [])
+                                          if man else [])
+        if n_old == self.spec.n_shards:
+            for s, sh in enumerate(self.shards):
+                sh.restore(dirs[s])
+            self._next_seqno = max(
+                [sh._next_seqno for sh in self.shards]
+                + ([man["next_seqno"]] if man else []))
+        else:
+            self._restore_resharded(dirs, n_old)
+
+    def _restore_resharded(self, dirs: List[str], n_old: int) -> None:
+        """N→M restore: re-partition states, demote old logs to legacy."""
+        spec = self.spec
+        metas, leaves, old_logs = [], [], []
+        for d in dirs:
+            meta, lv = load_checkpoint_arrays(d)
+            # shape validation minus the per-shard user count (which
+            # legitimately differs across layouts)
+            probe = dict(meta)
+            probe.pop("n_users", None)
+            self.shards[0].store._validate_meta(probe)
+            log = meta.get("engine")
+            if log is None:
+                path = os.path.join(d, "ENGINE")
+                if os.path.exists(path):       # legacy flat layout
+                    with open(path) as f:
+                        log = json.load(f)
+            if log is None:
+                raise ValueError(
+                    f"shard checkpoint {d} carries no exactly-once log; "
+                    "refusing to reshard (replay could double-apply)")
+            metas.append(meta)
+            leaves.append(lv)
+            old_logs.append(log)
+        n_total = sum(lv["n_baskets"].shape[0] for lv in leaves)
+        if n_total != spec.n_users:
+            raise ValueError(f"checkpoint holds {n_total} user rows, spec "
+                             f"n_users={spec.n_users}")
+        # assemble per-new-shard host buffers; the spec bijection covers
+        # every row, so no initialization value survives
+        out = []
+        for s in range(spec.n_shards):
+            cfg = self.shards[s].store.cfg
+            zero = StreamState.zeros(cfg.n_users, cfg.n_items,
+                                     cfg.max_baskets, cfg.max_basket_size,
+                                     cfg.max_groups)
+            out.append({name: np.asarray(getattr(zero, name)).copy()
+                        for name in _STATE_LEAVES})
+        for so, lv in enumerate(leaves):
+            rows = lv["n_baskets"].shape[0]
+            u_glob = np.arange(rows, dtype=np.int64) * n_old + so
+            keep = u_glob < spec.n_users
+            u_glob = u_glob[keep]
+            ns, nr = u_glob % spec.n_shards, u_glob // spec.n_shards
+            for name in _STATE_LEAVES:
+                src = lv[name][keep]
+                for s in range(spec.n_shards):
+                    m = ns == s
+                    out[s][name][nr[m]] = src[m]
+        for s, sh in enumerate(self.shards):
+            sh.store.install_state(StreamState(
+                **{k: jnp.asarray(v) for k, v in out[s].items()}))
+            sh._reset_log()
+        self._legacy.append({"n_shards": n_old, "logs": [
+            {"watermark": lg["watermark"],
+             "processed_above": set(lg.get("processed_above", []))}
+            for lg in old_logs]})
+        self._next_seqno = max(max(lg["next_seqno"] for lg in old_logs),
+                               self._next_seqno)

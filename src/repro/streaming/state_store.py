@@ -33,6 +33,12 @@ from repro.core.types import StreamState, _pow2_pad
 
 @dataclasses.dataclass
 class StoreConfig:
+    """Shapes, placement and cache policy of one state store.
+
+    In a sharded deployment its user rows are ONE shard's slice
+    (DESIGN.md §7).
+    """
+
     n_users: int
     n_items: int
     max_baskets: int
@@ -49,9 +55,11 @@ class StoreConfig:
 
 
 def _fsync_dir(path: str) -> None:
-    """Make a rename in ``path`` durable (the file fsync orders the DATA,
-    the directory fsync orders the ENTRY — both are needed for the
-    crash-anywhere guarantee)."""
+    """Make a rename in ``path`` durable.
+
+    The file fsync orders the DATA, the directory fsync orders the
+    ENTRY — both are needed for the crash-anywhere guarantee.
+    """
     fd = os.open(path, os.O_RDONLY)
     try:
         os.fsync(fd)
@@ -60,10 +68,13 @@ def _fsync_dir(path: str) -> None:
 
 
 def atomic_write_json(path: str, payload: dict) -> None:
-    """Write json via tmp-file + fsync + ``os.replace`` + directory
-    fsync so a crash — process OR system — leaves either the previous
-    intact file or nothing, never a truncated one (the same contract as
-    the state npz writes)."""
+    """Write json atomically and durably (the commit-point primitive).
+
+    Tmp-file + fsync + ``os.replace`` + directory fsync, so a crash —
+    process OR system — leaves either the previous intact file or
+    nothing, never a truncated one (the same contract as the state npz
+    writes).
+    """
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump(payload, f)
@@ -71,6 +82,30 @@ def atomic_write_json(path: str, payload: dict) -> None:
         os.fsync(f.fileno())
     os.replace(tmp, path)
     _fsync_dir(os.path.dirname(path) or ".")
+
+
+def load_checkpoint_arrays(directory: str):
+    """Read one checkpoint commit as host arrays: ``(meta, leaves)``.
+
+    Reads the ``LATEST`` metadata (the atomic commit point) and the state
+    npz it names, migrating pre-scaled-representation checkpoints (no
+    ``uv_scale``/``lgv_scale`` leaves) to scales of 1.  Shared by
+    :meth:`StateStore.restore` and the resharding restore path
+    (``streaming.engine.ShardedStreamingEngine.restore``, DESIGN.md §7),
+    which reassembles N shard checkpoints without installing them into a
+    same-shape store first.  Cost: one O(state) read, no device work.
+    """
+    with open(os.path.join(directory, "LATEST")) as f:
+        meta = json.load(f)
+    step = meta["step"]
+    path = os.path.join(directory, f"state_{step:010d}.npz")
+    data = np.load(path)
+    leaves = {k: np.asarray(data[k]) for k in data.files}
+    for scale in ("uv_scale", "lgv_scale"):
+        if scale not in leaves:
+            leaves[scale] = np.ones(leaves["err_mult"].shape,
+                                    leaves["err_mult"].dtype)
+    return meta, leaves
 
 
 def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
@@ -92,10 +127,11 @@ def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _refresh_corpus_rows(corpus, user_vecs, uv_scale, rows):
-    """corpus[rows] = uv_scale[rows] * user_vecs[rows], in place.
+    """Refresh ``corpus[rows] = uv_scale[rows] * user_vecs[rows]`` in place.
 
     ``rows`` may contain duplicates (pow2 padding repeats the first dirty
-    row); duplicate writes carry identical values."""
+    row); duplicate writes carry identical values.
+    """
     return corpus.at[rows].set(user_vecs[rows] * uv_scale[rows, None])
 
 
@@ -126,8 +162,11 @@ class StateStore:
     # -- serving corpus cache (DESIGN.md §3.6) --------------------------------
 
     def invalidate_users(self, users) -> None:
-        """Mark user rows stale (the engine calls this after every
-        micro-batch / stability refresh with the touched users)."""
+        """Mark user rows of the serving corpus stale.
+
+        The engine calls this after every micro-batch / stability
+        refresh with the touched users; O(|users|) set inserts.
+        """
         if self._corpus is None:
             return            # no cache yet: the first corpus() builds it
         self._dirty.update(int(x) for x in np.asarray(users).ravel())
@@ -150,7 +189,8 @@ class StateStore:
         only until the next ``corpus()`` call that follows an
         invalidation.  Finish (or copy) a request batch before applying
         the next micro-batch's refresh — the serving loop here is
-        synchronous, matching launch/serve.py."""
+        synchronous, matching launch/serve.py.
+        """
         if self._corpus is None:
             self._corpus = self.state.materialized_user_vecs()
             self._dirty.clear()
@@ -180,6 +220,14 @@ class StateStore:
 
     def checkpoint(self, directory: str, step: int,
                    extra_meta: Optional[dict] = None) -> str:
+        """Write one atomic checkpoint commit; returns the npz path.
+
+        The state npz is made durable FIRST; the ``LATEST`` metadata
+        write (which carries ``extra_meta``, e.g. the engine's
+        exactly-once log) is the single atomic commit point — see the
+        comment at the write below.  Cost: one O(state) device fetch +
+        compressed write.
+        """
         os.makedirs(directory, exist_ok=True)
         path = os.path.join(directory, f"state_{step:010d}.npz")
         tmp = path + ".tmp"
@@ -214,10 +262,12 @@ class StateStore:
         return path
 
     def _validate_meta(self, meta: dict) -> None:
-        """A checkpoint written under different shape dimensions must be
-        rejected loudly: silently installing wrong-shaped state either
-        fails later (shape error far from the cause) or — worse — runs
-        with aliased user/item indices."""
+        """Reject checkpoints written under different shape dimensions.
+
+        Silently installing wrong-shaped state either fails later (shape
+        error far from the cause) or — worse — runs with aliased
+        user/item indices.
+        """
         mismatches = []
         for field in ("n_users", "n_items", "max_baskets",
                       "max_basket_size"):
@@ -235,28 +285,34 @@ class StateStore:
                 "checkpoint/store shape mismatch — refusing to restore: "
                 + "; ".join(mismatches))
 
-    def restore(self, directory: str) -> int:
-        with open(os.path.join(directory, "LATEST")) as f:
-            meta = json.load(f)
-        self._validate_meta(meta)
-        # keep the parsed commit metadata for co-checkpointed payloads
-        # (the engine's exactly-once log rides in meta["engine"]) — one
-        # reader, one parse
-        self.last_restored_meta = meta
-        step = meta["step"]
-        path = os.path.join(directory, f"state_{step:010d}.npz")
-        data = np.load(path)
-        leaves = {k: jax.numpy.asarray(data[k]) for k in data.files}
-        # migrate pre-scaled-representation checkpoints: scale 1 == the
-        # old unscaled storage
-        for scale in ("uv_scale", "lgv_scale"):
-            if scale not in leaves:
-                leaves[scale] = jax.numpy.ones(
-                    leaves["err_mult"].shape, leaves["err_mult"].dtype)
-        state = StreamState(**leaves)
+    def install_state(self, state: StreamState) -> None:
+        """Replace the owned state out-of-band (resharding restore).
+
+        Applies the store's device/mesh placement and drops the serving
+        corpus cache — every row may have changed.  Callers are
+        responsible for shape-validating ``state`` against the config
+        (the resharding path does, via the checkpoint metadata).
+        """
         if self.mesh is not None:
             sh = state_shardings(self.cfg, self.mesh)
             state = jax.tree.map(jax.device_put, state, sh)
         self.state = state
         self.invalidate_all()
+
+    def restore(self, directory: str) -> int:
+        """Install the checkpoint in ``directory``; returns its step.
+
+        Reads the atomic ``LATEST`` commit, validates its shape metadata
+        against this store's config (refusing mismatches loudly), keeps
+        the parsed metadata in :attr:`last_restored_meta` for
+        co-checkpointed payloads (the engine's exactly-once log rides in
+        ``meta["engine"]`` — one reader, one parse), and drops the
+        serving-corpus cache.  Cost: one O(state) read + device upload.
+        """
+        meta, leaves = load_checkpoint_arrays(directory)
+        self._validate_meta(meta)
+        self.last_restored_meta = meta
+        step = meta["step"]
+        self.install_state(StreamState(
+            **{k: jax.numpy.asarray(v) for k, v in leaves.items()}))
         return step

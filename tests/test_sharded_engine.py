@@ -1,0 +1,357 @@
+"""User-axis sharded deployment (DESIGN.md §7): routing, per-shard
+exactly-once logs under cross-shard redelivery and torn commits,
+resharding (N→M) restore, cross-shard KNN serving parity, and the
+host-measured tile hints threaded through the appliers.
+
+The headline acceptance pin: a 2-shard and a 4-shard engine replaying
+the same 520-event mixed stream produce recommendations **bitwise
+identical** to the single-shard engine (and state matching the
+paper-faithful RefEngine), including after a mid-stream crash/restore
+and a reshard restore."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import RefEngine, TifuParams, knn
+from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
+from repro.kernels import ops
+from repro.parallel.sharding import UserShardSpec
+from repro.streaming import (Event, ShardedStreamingEngine, StateStore,
+                             StoreConfig, StreamingEngine)
+
+P = TifuParams(n_items=41, group_size=3, r_b=0.9, r_g=0.7)
+M, N, B = 8, 48, 6
+TOPN, K_NN = 5, 4
+
+
+def make_single(batch_size=16):
+    store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                   max_baskets=N, max_basket_size=B))
+    return StreamingEngine(store, P, batch_size=batch_size), store
+
+
+def make_sharded(n_shards, batch_size=16):
+    return ShardedStreamingEngine.create(
+        UserShardSpec(M, n_shards), P, max_baskets=N, max_basket_size=B,
+        batch_size=batch_size)
+
+
+def random_mixed_events(rng, ref: RefEngine, n_events: int, n_users: int,
+                        n_items=P.n_items, p_add=0.6):
+    """Valid mixed add/del-basket/del-item stream with explicit seqnos,
+    applying each event to ``ref`` as it is drawn."""
+    events = []
+    for seqno in range(n_events):
+        u = int(rng.integers(0, n_users))
+        st = ref.state(u)
+        nb = st.n_baskets
+        if nb == 0 or (rng.random() < p_add and nb < N - 2):
+            items = rng.choice(n_items, size=int(rng.integers(1, B)),
+                               replace=False).astype(np.int32)
+            ref.add_basket(u, items)
+            events.append(Event(KIND_ADD_BASKET, u, items=items,
+                                seqno=seqno))
+        elif rng.random() < 0.5:
+            pos = int(rng.integers(0, nb))
+            ref.delete_basket(u, pos)
+            events.append(Event(KIND_DEL_BASKET, u, pos=pos, seqno=seqno))
+        else:
+            pos = int(rng.integers(0, nb))
+            item = int(rng.choice(st.history[pos]))
+            ref.delete_item(u, pos, item)
+            events.append(Event(KIND_DEL_ITEM, u, pos=pos, item=item,
+                                seqno=seqno))
+    return events
+
+
+def sharded_state_rows(eng: ShardedStreamingEngine):
+    """Global [M, I] materialized user vectors re-assembled from shards."""
+    out = np.empty((M, P.n_items), np.float32)
+    for u in range(M):
+        s = eng.spec.shard_of(u)
+        r = eng.spec.local_row(u)
+        out[u] = np.asarray(
+            eng.shards[s].store.state.materialized_user_vecs()[r])
+    return out
+
+
+def single_recs(store):
+    return np.asarray(knn.recommend_for_users(
+        store.corpus(), jnp.asarray(np.arange(M)), k=K_NN, alpha=P.alpha,
+        topn=TOPN))
+
+
+@pytest.fixture(scope="module")
+def stream():
+    """One 520-event mixed stream + the drained single-shard engine."""
+    rng = np.random.default_rng(7)
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 520, M)
+    eng, store = make_single()
+    eng.submit(events)
+    assert eng.run_until_drained() == len(events)
+    return {"events": events, "ref": ref, "single": eng, "store": store,
+            "recs": single_recs(store)}
+
+
+# ---------------------------------------------------------------------------
+# Partitioning contract
+# ---------------------------------------------------------------------------
+
+def test_user_shard_spec_bijection():
+    for n_users, n_shards in [(8, 2), (10, 4), (7, 3), (5, 1), (3, 8)]:
+        spec = UserShardSpec(n_users, n_shards)
+        assert sum(spec.shard_users(s) for s in range(n_shards)) == n_users
+        seen = set()
+        for s in range(n_shards):
+            owned = spec.owned_users(s)
+            assert len(owned) == spec.shard_users(s)
+            for r, u in enumerate(owned):
+                assert spec.shard_of(u) == s
+                assert spec.local_row(u) == r
+                assert spec.global_user(s, r) == u
+                seen.add(int(u))
+        assert seen == set(range(n_users))
+
+
+def test_make_user_shard_meshes_smoke():
+    from repro.launch.mesh import make_user_shard_meshes
+    meshes = make_user_shard_meshes(3)
+    assert len(meshes) == 3
+    for m in meshes:
+        assert set(m.axis_names) == {"data", "model"}
+
+
+# ---------------------------------------------------------------------------
+# Cross-shard serving
+# ---------------------------------------------------------------------------
+
+def test_sharded_knn_matches_single_corpus(rng):
+    """Per-shard candidates + merge == single-corpus top-k, bitwise, on a
+    random corpus (independent of the engine)."""
+    m, n_items, k, topn = 23, 37, 7, 6
+    corpus = rng.normal(size=(m, n_items)).astype(np.float32)
+    users = rng.choice(m, size=9, replace=False)
+    want = np.asarray(knn.recommend_for_users(
+        jnp.asarray(corpus), jnp.asarray(users.astype(np.int32)), k=k,
+        alpha=0.7, topn=topn))
+    for n_shards in (2, 3, 5):
+        spec = UserShardSpec(m, n_shards)
+        corpora = [jnp.asarray(corpus[spec.owned_users(s)])
+                   for s in range(n_shards)]
+        got = knn.sharded_recommend_for_users(
+            corpora, users, k=k, alpha=0.7, topn=topn, n_shards=n_shards)
+        np.testing.assert_array_equal(got, want, err_msg=f"S={n_shards}")
+
+
+# ---------------------------------------------------------------------------
+# Engine equivalence on the 520-event stream (acceptance pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_stream_bitwise_vs_single_and_ref(stream, n_shards):
+    eng = make_sharded(n_shards)
+    eng.submit(stream["events"])
+    assert eng.run_until_drained() == len(stream["events"])
+    # per-user state: bitwise vs the single-shard engine (same compiled
+    # per-row math, disjoint users), allclose vs the paper oracle
+    got = sharded_state_rows(eng)
+    want = np.asarray(stream["store"].state.materialized_user_vecs())
+    np.testing.assert_array_equal(got, want)
+    for u in range(M):
+        np.testing.assert_allclose(
+            got[u], stream["ref"].state(u).user_vec.astype(np.float32),
+            atol=1e-4)
+    # recommendations: bitwise vs the single-shard fused serving path
+    recs = eng.recommend(np.arange(M), topn=TOPN, k=K_NN)
+    np.testing.assert_array_equal(recs, stream["recs"])
+
+
+def test_sharded_crash_restore_and_reshard(stream, tmp_path):
+    """Mid-stream crash → restore (2 shards), reshard restores 2→4 and
+    4→2, full-stream replay after each: recommendations stay bitwise
+    equal to the single-shard engine."""
+    events = stream["events"]
+    half = len(events) // 2
+
+    eng = make_sharded(2)
+    eng.submit(events[:half])
+    eng.run_until_drained()
+    ck2 = str(tmp_path / "ck2")
+    eng.checkpoint(ck2, step=1)
+
+    # crash/restore at the same shard count + at-least-once full replay
+    eng2 = make_sharded(2)
+    eng2.restore(ck2)
+    eng2.submit(events)          # first half must dedup against the log
+    assert eng2.n_pending == len(events) - half
+    eng2.run_until_drained()
+    np.testing.assert_array_equal(
+        eng2.recommend(np.arange(M), topn=TOPN, k=K_NN), stream["recs"])
+
+    # reshard the mid-stream checkpoint 2 → 4, replay the full stream
+    eng4 = make_sharded(4)
+    eng4.restore(ck2)
+    assert eng4._legacy and eng4._legacy[0]["n_shards"] == 2
+    eng4.submit(events)
+    assert eng4.n_pending == len(events) - half   # legacy logs dedup
+    eng4.run_until_drained()
+    np.testing.assert_array_equal(
+        eng4.recommend(np.arange(M), topn=TOPN, k=K_NN), stream["recs"])
+
+    # ... and back: drained 4-shard checkpoint → 2 shards; a further
+    # replay is now FULLY deduplicated through the legacy logs
+    ck4 = str(tmp_path / "ck4")
+    eng4.checkpoint(ck4, step=2)
+    eng2b = make_sharded(2)
+    eng2b.restore(ck4)
+    eng2b.submit(events)
+    assert eng2b.n_pending == 0
+    np.testing.assert_array_equal(
+        eng2b.recommend(np.arange(M), topn=TOPN, k=K_NN), stream["recs"])
+
+
+def test_flat_single_engine_checkpoint_reshards(stream, tmp_path):
+    """A plain StreamingEngine checkpoint (no manifest) restores into a
+    sharded deployment as the N=1 special case."""
+    ck = str(tmp_path / "flat")
+    stream["single"].checkpoint(ck, step=3)
+    eng = make_sharded(2)
+    eng.restore(ck)
+    eng.submit(stream["events"])       # all processed pre-reshard
+    assert eng.n_pending == 0
+    np.testing.assert_array_equal(
+        eng.recommend(np.arange(M), topn=TOPN, k=K_NN), stream["recs"])
+
+
+# ---------------------------------------------------------------------------
+# Per-shard exactly-once
+# ---------------------------------------------------------------------------
+
+def test_exactly_once_under_cross_shard_redelivery(rng):
+    """At-least-once redelivery of mixed cross-shard batches — before
+    processing, straddling partial processing, and after a drain — must
+    never double-apply on any shard."""
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 60, M)
+    eng = make_sharded(2, batch_size=4)
+    eng.submit(events)
+    n0 = eng.n_pending
+    eng.submit(events)                  # redelivery before any processing
+    assert eng.n_pending == n0
+    for _ in range(3):                  # partial progress on both shards
+        eng.step()
+    done = eng.events_processed
+    eng.submit(events)                  # straddles processed AND pending
+    assert eng.n_pending == n0 - done
+    eng.run_until_drained()
+    eng.submit(events)                  # after drain: all duplicates
+    assert eng.n_pending == 0
+    assert eng.events_processed == len(events)
+    got = sharded_state_rows(eng)
+    for u in range(M):
+        np.testing.assert_allclose(
+            got[u], ref.state(u).user_vec.astype(np.float32), atol=1e-4)
+
+
+def test_exactly_once_across_torn_shard_commits(rng, tmp_path):
+    """Crash BETWEEN shard commits: one shard checkpointed at a later
+    step than the other.  Restore + full replay must re-apply exactly
+    the lost events per shard (DESIGN.md §7 failure table)."""
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 60, M)
+    half = len(events) // 2
+    ck = str(tmp_path / "torn")
+
+    eng = make_sharded(2)
+    eng.submit(events[:half])
+    eng.run_until_drained()
+    eng.checkpoint(ck, step=1)
+    eng.submit(events[half:])
+    eng.run_until_drained()
+    # simulate the crash: only shard 0 commits step 2
+    eng.shards[0].checkpoint(eng._shard_dir(ck, 0), step=2)
+
+    eng2 = make_sharded(2)
+    eng2.restore(ck)
+    # shard 0 restored beyond shard 1: replay fills only shard 1's gap
+    assert eng2.shards[0].watermark > eng2.shards[1].watermark
+    eng2.submit(events)
+    eng2.run_until_drained()
+    got = sharded_state_rows(eng2)
+    for u in range(M):
+        np.testing.assert_allclose(
+            got[u], ref.state(u).user_vec.astype(np.float32), atol=1e-4,
+            err_msg=f"u={u}")
+
+
+def test_checkpoint_refuses_layout_mismatch(rng, tmp_path):
+    """Re-using a checkpoint directory across layouts would tear the
+    manifest's view of the shard files — must raise."""
+    eng = make_sharded(2)
+    eng.add_basket(0, [1, 2, 3])
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), step=1)
+    other = make_sharded(4)
+    with pytest.raises(ValueError, match="layout"):
+        other.checkpoint(str(tmp_path), step=2)
+
+
+# ---------------------------------------------------------------------------
+# Host-measured tile hints (T_max threading, ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+def test_tile_hint_stream_matches_ref_interpret():
+    """Mixed stream through the tile-planned Pallas kernels (interpret
+    mode) with host-measured T_max hints enabled: an unsound hint would
+    truncate the plan and corrupt the state, so equivalence with the
+    RefEngine pins the hints' soundness end-to-end."""
+    p = TifuParams(n_items=256, group_size=3)   # 256 % 128 == 0: planned
+    rng = np.random.default_rng(3)
+    ref = RefEngine(p, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 60, M, n_items=p.n_items)
+    with ops.default_impl("interpret"):
+        store = StateStore(StoreConfig(n_users=M, n_items=p.n_items,
+                                       max_baskets=N, max_basket_size=B))
+        eng = StreamingEngine(store, p, batch_size=8, tile_hints=True)
+        eng.submit(events)
+        eng.run_until_drained()
+        mat = np.asarray(store.state.materialized_user_vecs())
+    for u in range(M):
+        np.testing.assert_allclose(
+            mat[u], ref.state(u).user_vec.astype(np.float32), atol=1e-4)
+
+
+def test_tile_hints_bound_measured_tiles(rng):
+    """The per-kind hints are sound upper bounds on the touched tiles of
+    the ids the appliers actually construct."""
+    from repro.kernels.tile_plan import max_touched_tiles
+    p = TifuParams(n_items=256, group_size=3)
+    store = StateStore(StoreConfig(n_users=M, n_items=p.n_items,
+                                   max_baskets=N, max_basket_size=B))
+    eng = StreamingEngine(store, p, batch_size=8, tile_hints=True)
+    for t in range(30):
+        eng.add_basket(int(rng.integers(0, M)),
+                       rng.choice(p.n_items, size=3, replace=False))
+    eng.run_until_drained()
+    bi = ops.plan_bi(p.n_items)
+    adds = [Event(KIND_ADD_BASKET, u,
+                  items=rng.choice(p.n_items, size=4, replace=False)
+                  .astype(np.int32)) for u in range(M)]
+    delb = [Event(KIND_DEL_BASKET, u, pos=0) for u in range(M)]
+    hints = eng._tile_hints(adds, delb, [])
+    hist = np.asarray(store.state.history)
+    nb = np.asarray(store.state.n_baskets)
+    ng = np.asarray(store.state.n_groups)
+    gs = np.asarray(store.state.group_sizes)
+    for u in range(M):
+        window = hist[u, :nb[u]].ravel()
+        assert hints[KIND_DEL_BASKET] >= max_touched_tiles(
+            window[None, :], bi)
+        # the add support is the LAST group's rows plus the new basket
+        tau = gs[u, ng[u] - 1] if ng[u] > 0 else 0
+        support = np.concatenate([hist[u, nb[u] - tau:nb[u]].ravel(),
+                                  adds[u].items])
+        assert hints[KIND_ADD_BASKET] >= max_touched_tiles(
+            support[None, :], bi)

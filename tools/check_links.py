@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Intra-repo markdown link checker (the CI docs job; no dependencies).
+
+Validates every markdown link in the given files:
+
+* relative file targets must exist on disk (resolved against the
+  containing file; targets escaping the repo root are skipped — they
+  address the GitHub web UI, e.g. CI badge links);
+* ``file#anchor`` and ``#anchor`` targets must name a real heading in
+  the target file, using GitHub's slugging rules (lowercase, strip
+  punctuation, spaces → hyphens) or an explicit ``<a name="...">``;
+* absolute URLs (http/https/mailto) are skipped — this is an
+  *intra-repo* checker and CI must not flake on the network.
+
+Exit code 1 lists every broken link as ``file:line: target (reason)``.
+
+    python tools/check_links.py README.md DESIGN.md benchmarks/README.md
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+ANCHOR_RE = re.compile(r'<a\s+name="([^"]+)"')
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's heading → anchor slug (the subset we rely on)."""
+    text = re.sub(r"<[^>]+>", "", heading)          # inline HTML tags
+    text = re.sub(r"[*_`]|\[|\]|\([^)]*\)", "", text).strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def collect_anchors(path: str) -> set:
+    anchors = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if m:
+                anchors.add(github_slug(m.group(1)))
+            for name in ANCHOR_RE.findall(line):
+                anchors.add(name.lower())
+    return anchors
+
+
+def check_file(path: str, repo_root: str, anchor_cache: dict) -> list:
+    errors = []
+    base = os.path.dirname(os.path.abspath(path))
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if CODE_FENCE_RE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:")):
+                    continue
+                file_part, _, anchor = target.partition("#")
+                if file_part:
+                    resolved = os.path.normpath(
+                        os.path.join(base, file_part))
+                    if not resolved.startswith(
+                            os.path.abspath(repo_root) + os.sep):
+                        continue        # GitHub-web-relative (badges)
+                    if not os.path.exists(resolved):
+                        errors.append((path, lineno, target,
+                                       "file not found"))
+                        continue
+                else:
+                    resolved = os.path.abspath(path)
+                if anchor:
+                    if os.path.isdir(resolved) \
+                            or not resolved.endswith((".md", ".markdown")):
+                        errors.append((path, lineno, target,
+                                       "anchor on non-markdown target"))
+                        continue
+                    if resolved not in anchor_cache:
+                        anchor_cache[resolved] = collect_anchors(resolved)
+                    if anchor.lower() not in anchor_cache[resolved]:
+                        errors.append((path, lineno, target,
+                                       "anchor not found"))
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+", help="markdown files to check")
+    ap.add_argument("--root", default=".",
+                    help="repo root (targets escaping it are skipped)")
+    args = ap.parse_args(argv)
+
+    anchor_cache: dict = {}
+    errors = []
+    checked = 0
+    for path in args.files:
+        if not os.path.exists(path):
+            errors.append((path, 0, path, "input file missing"))
+            continue
+        checked += 1
+        errors.extend(check_file(path, args.root, anchor_cache))
+    for path, lineno, target, reason in errors:
+        print(f"{path}:{lineno}: {target} ({reason})")
+    if errors:
+        print(f"\n{len(errors)} broken link(s) in {checked} file(s)")
+        return 1
+    print(f"all intra-repo links OK in {checked} file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
