@@ -9,8 +9,12 @@ load-sensitive than absolute latencies — that is what makes them
 gateable on shared CI runners.
 
 Rules:
-  * only ``*speedup*`` summary keys are enforced (absolute-latency and
-    growth metrics are printed for context only);
+  * only ``*speedup*`` summary keys are enforced as ratios
+    (absolute-latency and growth metrics are printed for context only);
+  * ``*compiled*`` summary keys (the serving shape-bucketing counts,
+    ISSUE 5) are enforced as UPPER BOUNDS: the new count may never
+    exceed the committed one — counts are load-insensitive, so there is
+    no tolerance and no floor;
   * metrics whose BASELINE value is below ``--floor`` (default 1.5x) are
     reported but not enforced — smoke-scale ratios near 1x are noise;
   * ``interpret``-backend runs are never enforced (interpret-mode Pallas
@@ -75,11 +79,20 @@ def main(argv=None) -> int:
             enforced = "speedup" in metric and bv >= args.floor \
                 and key[0] != "interpret"
             status = "ok"
-            if enforced and bv > 0:
+            if "compiled" in metric and key[0] != "interpret":
+                # shape-bucketing counts: hard upper bound, no tolerance
+                if nv > bv:
+                    status = f"INCREASED {bv:.0f} -> {nv:.0f}"
+                    regressions.append((key, metric, bv, nv,
+                                        f"+{nv - bv:.0f} compiled "
+                                        f"shape(s)"))
+                compared += 1
+            elif enforced and bv > 0:
                 drop = 1.0 - nv / bv
                 if drop > args.tolerance:
                     status = f"REGRESSED {drop:.0%}"
-                    regressions.append((key, metric, bv, nv, drop))
+                    regressions.append((key, metric, bv, nv,
+                                        f"-{drop:.0%}"))
                 compared += 1
             elif "speedup" in metric:
                 status = "below floor, not enforced"
@@ -88,11 +101,12 @@ def main(argv=None) -> int:
             print(f"[{_key_name(key)}] {metric}: {bv:.2f} -> {nv:.2f} "
                   f"({status})")
     if regressions:
-        print(f"\n{len(regressions)} summary speedup(s) regressed by more "
-              f"than {args.tolerance:.0%}:")
-        for key, metric, bv, nv, drop in regressions:
+        print(f"\n{len(regressions)} summary metric(s) regressed "
+              f"(speedups by more than {args.tolerance:.0%}, or compiled-"
+              f"program counts that increased):")
+        for key, metric, bv, nv, what in regressions:
             print(f"  [{_key_name(key)}] {metric}: {bv:.2f} -> {nv:.2f} "
-                  f"(-{drop:.0%})")
+                  f"({what})")
         return 1
     print(f"\nbench-trend OK ({compared} enforced comparisons)")
     return 0

@@ -3,10 +3,19 @@ and ranking metrics (Recall@K, NDCG@K — paper §6.1).
 
 Prediction:  p = alpha * u_target + (1 - alpha) * mean(top-k neighbours).
 
-``nearest_neighbors``/``predict`` are the reference (jnp) implementations;
-the distributed/tiled fast path is ``kernels.knn_topk`` (same results,
-validated against each other).  Distances follow TIFU-kNN: Euclidean by
-default, cosine optional.
+``nearest_neighbors``/``predict`` are the reference (jnp) formulation —
+the semantics oracle and the building block for ad-hoc analysis.  The
+SERVING entry points (`recommend_for_users`, `shard_topk_candidates`,
+`sharded_recommend_for_users`) dispatch through ``kernels.ops``
+(DESIGN.md §8): on TPU they run the fused Pallas pipeline
+(`kernels.knn_topk` streaming top-k + `kernels.serving_topn` one-hot
+blend/top-n — O(Q·k) HBM intermediates, never a [Q, M] score matrix or
+[Q, k, I] gather); on CPU they run `kernels.ref` oracles that are
+bitwise the historical unfused outputs, and interpret mode drives the
+Pallas path on any host (tests pin all three against each other).
+Distances follow TIFU-kNN: Euclidean by default, cosine optional
+(cosine serves through the reference path — the kernels fuse the
+euclidean surrogate and dot only).
 """
 from __future__ import annotations
 
@@ -17,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
+from repro.kernels import ops
 
 
 def pairwise_scores(queries, corpus, metric: str = "euclidean"):
@@ -197,30 +207,26 @@ def recommend_topn(pred, n: int):
     return jax.lax.top_k(pred, n)[1]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "topn", "metric"))
 def recommend_for_users(corpus, user_ids, k: int, alpha: float, topn: int,
                         metric: str = "euclidean"):
-    """Fused serving path: row gather → TIFU-kNN predict → top-n items.
+    """Fused serving path: corpus rows → top-n item ids (DESIGN.md §8).
 
     ``corpus`` is the (cached) materialized corpus f32[M, I]
     (``StateStore.corpus()``, DESIGN.md §3.6); ``user_ids`` i32[Q] are
     the requesting users, which are corpus rows (self-excluded from the
-    neighbourhood).  One compiled program per request batch shape — no
-    intermediate [Q, I] prediction round-trips through the host.
-    Returns i32[Q, topn] item ids.
+    neighbourhood).  Dispatches through ``kernels.ops.fused_recommend``:
+    one compiled program per request batch shape — the engine-side pow2
+    request bucketing (`StreamingEngine.recommend`) bounds how many
+    such shapes serving ever compiles.  Returns i32[Q, topn] item ids.
     """
-    queries = corpus[user_ids]
-    pred = predict(queries, corpus, k=k, alpha=alpha, metric=metric,
-                   exclude_self=True, query_ids=user_ids)
-    return recommend_topn(pred, topn)
+    return ops.fused_recommend(corpus, user_ids, k=k, alpha=alpha,
+                               topn=topn, metric=metric)
 
 
 # ---------------------------------------------------------------------------
 # Cross-shard serving (user-axis sharded deployment, DESIGN.md §7)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("k", "metric", "shard",
-                                             "n_shards"))
 def shard_topk_candidates(queries, corpus, k: int, shard: int,
                           n_shards: int, query_ids=None,
                           metric: str = "euclidean"):
@@ -231,25 +237,14 @@ def shard_topk_candidates(queries, corpus, k: int, shard: int,
     row r is global user ``r·n_shards + shard``).  Scores are the same
     per-pair values the single-corpus path computes; self-exclusion
     compares global ids, so a query user is masked only on its owner
-    shard.  O(Q·M_s) compute, O(Q·k) output — the merge step moves
-    candidate lists, never corpora.
+    shard.  Dispatches through ``kernels.ops.shard_topk`` (on TPU the
+    streaming top-k kernel — the [Q, M_s] score matrix stays on chip).
+    O(Q·M_s) compute, O(Q·k) output — the merge step moves candidate
+    lists, never corpora.
     """
-    m_s = corpus.shape[0]
-    scores = pairwise_scores(queries, corpus, metric).astype(jnp.float32)
-    col_gid = jnp.arange(m_s, dtype=jnp.int32) * n_shards + shard
-    if query_ids is not None:
-        scores = jnp.where(col_gid[None, :] == query_ids[:, None],
-                           -jnp.inf, scores)
-    vals, idx = jax.lax.top_k(scores, min(k, m_s))
-    return vals, col_gid[idx]
-
-
-@functools.partial(jax.jit, static_argnames=("topn",))
-def _combine_neighbors(queries, neighbor_rows, alpha, topn: int):
-    """alpha-blend + top-n over gathered neighbour rows [Q, k, I]."""
-    neighbors = jnp.mean(neighbor_rows, axis=1)
-    pred = alpha * queries + (1.0 - alpha) * neighbors
-    return recommend_topn(pred, topn)
+    return ops.shard_topk(queries, corpus, k=k, shard=shard,
+                          n_shards=n_shards, query_gids=query_ids,
+                          metric=metric)
 
 
 def sharded_recommend_for_users(corpora, user_ids, k: int, alpha: float,
@@ -265,9 +260,11 @@ def sharded_recommend_for_users(corpora, user_ids, k: int, alpha: float,
     corpus, so the selected neighbour set and order match the unsharded
     path bitwise; (4) only the k selected neighbour ROWS are fetched
     (O(Q·k·I), never a corpus) and blended exactly as
-    `recommend_for_users` does.  Cross-shard traffic is the [Q, k]
-    candidate lists plus the selected rows — corpora and row
-    invalidation stay shard-local (`StateStore.corpus`).
+    `recommend_for_users` does (``kernels.ops.blend_topn_rows`` — on
+    TPU the fused mean/blend/top-n kernel, no [Q, I] prediction
+    intermediate).  Cross-shard traffic is the [Q, k] candidate lists
+    plus the selected rows — corpora and row invalidation stay
+    shard-local (`StateStore.corpus`).
 
     Returns i32[Q, topn] item ids, bitwise-identical to
     ``recommend_for_users`` on the equivalent single corpus
@@ -301,8 +298,8 @@ def sharded_recommend_for_users(corpora, user_ids, k: int, alpha: float,
         m = sel % n_shards == s
         if m.any():
             neighbor_rows[m] = corpora_np[s][sel[m] // n_shards]
-    return np.asarray(_combine_neighbors(qs, jnp.asarray(neighbor_rows),
-                                         alpha, topn))
+    return np.asarray(ops.blend_topn_rows(qs, jnp.asarray(neighbor_rows),
+                                          alpha, topn))
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,10 @@
 """Pallas TPU kernels (+ pure-jnp oracles and jit dispatchers).
 
-knn_topk           — fused similarity × streaming top-k (TIFU serving,
-                     retrieval_cand cells)
+knn_topk           — fused similarity × streaming top-k with in-kernel
+                     tail masks and global-id self-exclusion (serving
+                     stage A, DESIGN.md §8.1; retrieval_cand cells)
+serving_topn       — one-hot neighbour-blend + top-n kernels (serving
+                     stage B and the cross-shard blend, DESIGN.md §8)
 decayed_scatter    — one-hot-matmul weighted multi-hot scatter (TIFU
                      user vectors; EmbeddingBag substrate)
 sparse_row_scatter — sparse per-row scatter-add into the [M, I] state
@@ -12,11 +15,13 @@ tile_plan          — host/jit touched-tile plans driving the sparse pair's
                      block index maps (O(U·W) TPU HBM traffic)
 flash_attention    — blocked online-softmax attention (LM train/prefill)
 """
-from repro.kernels import ops, ref, tile_plan
-from repro.kernels.ops import (default_impl, flash_attention, knn_topk,
-                               multihot_scatter, sparse_row_gather,
-                               sparse_row_scatter)
+from repro.kernels import ops, ref, serving_topn, tile_plan
+from repro.kernels.ops import (blend_topn_rows, default_impl,
+                               flash_attention, fused_recommend, knn_topk,
+                               multihot_scatter, shard_topk,
+                               sparse_row_gather, sparse_row_scatter)
 
-__all__ = ["ops", "ref", "tile_plan", "default_impl", "flash_attention",
-           "knn_topk", "multihot_scatter", "sparse_row_gather",
-           "sparse_row_scatter"]
+__all__ = ["ops", "ref", "serving_topn", "tile_plan", "blend_topn_rows",
+           "default_impl", "flash_attention", "fused_recommend",
+           "knn_topk", "multihot_scatter", "shard_topk",
+           "sparse_row_gather", "sparse_row_scatter"]

@@ -5,15 +5,31 @@ bert4rec ``retrieval_cand`` cells: Q queries against M corpus rows,
 returning per-query top-k WITHOUT materializing the [Q, M] score matrix
 in HBM — the win over the reference path at M = 10⁶.
 
-Design (DESIGN.md §3.4):
-  grid = (Q/bq, M/bm), M innermost (sequential).  Per step the MXU
+Design (DESIGN.md §3.4 / §8):
+  grid = (⌈Q/bq⌉, ⌈M/bm⌉), M innermost (sequential).  Per step the MXU
   computes a [bq, bm] score tile in VMEM (2·q@cᵀ − |c|², the monotone
   euclidean surrogate); a running [bq, k] top-k buffer lives in VMEM
   scratch and is merged tile-by-tile; only [Q, k] leaves the chip.
 
-  The merge uses lax.top_k on the concatenated [bq, k+bm] tile.  On
-  current Mosaic this lowers through sort; if a target toolchain lacks
-  it, set merge="iterative" (k-round max-mask) — same results.
+  Neither Q nor M needs to divide its block size: tail blocks are
+  masked inside the kernel (out-of-range corpus columns score −inf,
+  out-of-range query rows are write-masked by Pallas), so prime-sized
+  request batches and corpora run the same schedule — no host-side
+  padding copy of the corpus.
+
+  Self-exclusion is fused into the scan: when ``query_gids`` is given,
+  a column whose GLOBAL id equals the query's global id is masked to
+  −inf in its score tile.  Column global ids are
+  ``local_idx · col_stride + col_offset`` — identity for a single
+  corpus, ``(row · n_shards + shard)`` for one shard of a user-axis
+  sharded corpus (DESIGN.md §7.1), so a query user is excluded only on
+  its owner shard.
+
+  The merge uses lax.top_k on the concatenated [bq, k+bm] tile, which
+  preserves lax.top_k's tie-break (lowest index wins): the running
+  buffer holds candidates from earlier (lower-id) tiles and sits first
+  in the concat, so an equal-score later column never displaces an
+  earlier one (pinned by tests/test_serving_pipeline.py).
 """
 from __future__ import annotations
 
@@ -25,8 +41,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(q_ref, c_ref, cn_ref, vals_ref, idx_ref, acc_vals, acc_idx,
-            *, k: int, bm: int, metric: str):
+def _kernel(qid_ref, q_ref, c_ref, cn_ref, vals_ref, idx_ref, acc_vals,
+            acc_idx, *, k: int, bm: int, metric: str, m: int,
+            col_offset: int, col_stride: int, sub_qnorm: bool):
     mi = pl.program_id(1)
     nm = pl.num_programs(1)
 
@@ -42,7 +59,21 @@ def _kernel(q_ref, c_ref, cn_ref, vals_ref, idx_ref, acc_vals, acc_idx,
         preferred_element_type=jnp.float32)          # [bq, bm]
     if metric == "euclidean":
         scores = 2.0 * scores - cn_ref[...][None, :]
+        if sub_qnorm:
+            # full −|q−c|²: the shard-candidate path emits these scores
+            # into the cross-shard merge, where they must be the same
+            # per-pair values the reference path computes (§7.3); the
+            # per-query constant is rank-irrelevant, so the single-
+            # corpus path skips it.
+            qf = q.astype(jnp.float32)
+            scores = scores - jnp.sum(qf * qf, axis=1, keepdims=True)
     tile_idx = mi * bm + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    # tail mask: columns past the corpus end carry garbage (the block
+    # read is out of bounds); they must never win the merge
+    scores = jnp.where(tile_idx >= m, -jnp.inf, scores)
+    # fused self-exclusion on GLOBAL ids (qid = -1 disables: gids >= 0)
+    col_gid = tile_idx * col_stride + col_offset
+    scores = jnp.where(col_gid == qid_ref[...][:, None], -jnp.inf, scores)
 
     merged_vals = jnp.concatenate([acc_vals[...], scores], axis=1)
     merged_idx = jnp.concatenate([acc_idx[...], tile_idx], axis=1)
@@ -57,22 +88,44 @@ def _kernel(q_ref, c_ref, cn_ref, vals_ref, idx_ref, acc_vals, acc_idx,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "bq", "bm", "metric", "interpret"))
+                   static_argnames=("k", "bq", "bm", "metric", "interpret",
+                                    "col_offset", "col_stride",
+                                    "sub_qnorm"))
 def knn_topk(queries, corpus, k: int, bq: int = 128, bm: int = 512,
-             metric: str = "euclidean", interpret: bool = False):
-    """queries [Q, D] × corpus [M, D] → (vals [Q, k], idx [Q, k])."""
+             metric: str = "euclidean", interpret: bool = False,
+             query_gids=None, col_offset: int = 0, col_stride: int = 1,
+             sub_qnorm: bool = False):
+    """queries [Q, D] × corpus [M, D] → (vals [Q, k], idx [Q, k]).
+
+    ``idx`` are LOCAL corpus row indices; ``query_gids`` (i32[Q],
+    optional) excludes the column whose global id
+    ``idx·col_stride + col_offset`` equals the query's global id.
+    Q and M need not divide ``bq``/``bm`` (masked tail blocks).  When
+    ``k > M`` the trailing entries are −inf with unspecified indices —
+    callers clamp (``ops.fused_recommend`` does).  ``sub_qnorm`` makes
+    the euclidean scores the full −|q−c|² (the shard-candidate merge
+    needs comparable values); off, they are the monotone surrogate
+    2qc − |c|².
+    """
     qn, d = queries.shape
     m = corpus.shape[0]
+    if qn == 0 or m == 0:
+        return (jnp.full((qn, k), -jnp.inf, jnp.float32),
+                jnp.zeros((qn, k), jnp.int32))
     bq = min(bq, qn)
     bm = min(bm, m)
-    assert qn % bq == 0 and m % bm == 0, (qn, bq, m, bm)
+    if query_gids is None:
+        query_gids = jnp.full((qn,), -1, jnp.int32)
     cnorm = jnp.sum(corpus.astype(jnp.float32) ** 2, axis=-1)
-    grid = (qn // bq, m // bm)
-    kernel = functools.partial(_kernel, k=k, bm=bm, metric=metric)
+    grid = (pl.cdiv(qn, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel, k=k, bm=bm, metric=metric, m=m,
+                               col_offset=col_offset, col_stride=col_stride,
+                               sub_qnorm=sub_qnorm)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((bq,), lambda qi, mi: (qi,)),
             pl.BlockSpec((bq, d), lambda qi, mi: (qi, 0)),
             pl.BlockSpec((bm, d), lambda qi, mi: (mi, 0)),
             pl.BlockSpec((bm,), lambda qi, mi: (mi,)),
@@ -90,4 +143,4 @@ def knn_topk(queries, corpus, k: int, bq: int = 128, bm: int = 512,
             pltpu.VMEM((bq, k), jnp.int32),     # running top-k idx
         ],
         interpret=interpret,
-    )(queries, corpus, cnorm)
+    )(query_gids.astype(jnp.int32), queries, corpus, cnorm)

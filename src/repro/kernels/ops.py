@@ -14,14 +14,18 @@ or leaving the context clears jax's compilation caches.
 from __future__ import annotations
 
 import contextlib
+import functools
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref, tile_plan
 from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.knn_topk import knn_topk as _knn_pallas
+from repro.kernels.serving_topn import (blend_topn_onehot as _blend_onehot,
+                                        blend_topn_rows as _blend_rows)
 from repro.kernels.sparse_row_gather import \
     sparse_row_gather as _sparse_gather_pallas
 from repro.kernels.sparse_row_scatter import \
@@ -71,6 +75,160 @@ def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
     return _knn_pallas(queries, corpus, k,
                        interpret=(impl == "interpret" or not _on_tpu()),
                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fused serving pipeline (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "topn", "metric"))
+def _fused_recommend_ref(corpus, user_ids, alpha, k, topn, metric):
+    return ref.fused_recommend_ref(corpus, user_ids, k, alpha, topn, metric)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "alpha", "topn", "metric",
+                                    "interpret"))
+def _fused_recommend_pallas(corpus, user_ids, k, alpha, topn, metric,
+                            interpret):
+    queries = corpus[user_ids]
+    _, idx = _knn_pallas(queries, corpus, k, metric=metric,
+                         query_gids=user_ids, interpret=interpret)
+    _, ids = _blend_onehot(corpus, user_ids, idx, alpha=alpha, topn=topn,
+                           interpret=interpret)
+    return ids
+
+
+def fused_recommend(corpus, user_ids, k: int, alpha: float, topn: int,
+                    metric: str = "euclidean", impl: str | None = None):
+    """Fused serving path: corpus rows → top-n item ids, one program.
+
+    ``corpus`` f32[M, I] (the cached serving corpus), ``user_ids``
+    i32[Q] corpus rows (self-excluded from their own neighbourhood) →
+    i32[Q, topn].  The TPU path is the two-stage Pallas pipeline of
+    DESIGN.md §8 (streaming top-k + one-hot blend/top-n: O(Q·k) HBM
+    intermediates); the CPU path is the XLA reference — bitwise the
+    historical `recommend_for_users` output.  ``k`` is clamped to M−1
+    (see the comment at the clamp); cosine falls back to the reference
+    (the kernels fuse the euclidean surrogate / dot only).
+    impl: auto | pallas | interpret | ref.
+    """
+    impl = _resolve(impl)
+    q_n, m = user_ids.shape[0], corpus.shape[0]
+    if topn > corpus.shape[1]:
+        raise ValueError(f"topn={topn} > n_items={corpus.shape[1]}")
+    if q_n == 0 or m == 0:
+        return jnp.zeros((q_n, topn), jnp.int32)
+    # clamp BELOW m: self-exclusion leaves m−1 finite candidates, and a
+    # k that admits a −inf slot resolves it differently in the kernel
+    # (accumulator-init index) than in the reference (the self row) —
+    # keeping every selected candidate finite keeps the paths identical
+    k = max(1, min(k, m - 1))
+    if impl == "ref" or metric == "cosine" \
+            or (impl == "auto" and not _on_tpu()):
+        return _fused_recommend_ref(corpus, user_ids, alpha, k=k,
+                                    topn=topn, metric=metric)
+    return _fused_recommend_pallas(
+        corpus, user_ids, k=k, alpha=float(alpha), topn=topn,
+        metric=metric, interpret=(impl == "interpret" or not _on_tpu()))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
+                                             "metric"))
+def _shard_topk_ref(queries, corpus, query_gids, k, shard, n_shards,
+                    metric):
+    return ref.shard_topk_ref(queries, corpus, k, shard, n_shards,
+                              query_gids, metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
+                                             "metric", "interpret"))
+def _shard_topk_pallas(queries, corpus, query_gids, k, shard, n_shards,
+                       metric, interpret):
+    vals, idx = _knn_pallas(queries, corpus, k, metric=metric,
+                            query_gids=query_gids, col_offset=shard,
+                            col_stride=n_shards, sub_qnorm=True,
+                            interpret=interpret)
+    gids = idx * n_shards + shard
+    # k >= m_s on the owner shard admits the excluded self column as a
+    # −inf candidate; the reference resolves its index to the self row
+    # (the only −inf score), the kernel to the accumulator init — pin
+    # the reference's answer so the cross-shard merge sees identical
+    # (score, gid) lists
+    return vals, jnp.where(jnp.isneginf(vals), query_gids[:, None], gids)
+
+
+def shard_topk(queries, corpus, k: int, shard: int, n_shards: int,
+               query_gids=None, metric: str = "euclidean",
+               impl: str | None = None):
+    """Per-shard neighbour candidates ``([Q, k'] scores, global ids)``.
+
+    ``k' = min(k, M_s)``.  The TPU path streams corpus tiles through the
+    fused top-k kernel with the shard's global-id mapping (column gid =
+    ``row·n_shards + shard``) — the [Q, M_s] score matrix never reaches
+    HBM; the CPU path is bitwise the historical
+    `shard_topk_candidates`.  Cosine falls back to the reference.
+    """
+    impl = _resolve(impl)
+    m_s = corpus.shape[0]
+    q_n = queries.shape[0]
+    if m_s == 0 or q_n == 0:
+        kk = min(k, m_s)
+        return (jnp.full((q_n, kk), -jnp.inf, jnp.float32),
+                jnp.zeros((q_n, kk), jnp.int32))
+    if impl == "ref" or metric == "cosine" \
+            or (impl == "auto" and not _on_tpu()):
+        return _shard_topk_ref(queries, corpus, query_gids, k=k,
+                               shard=shard, n_shards=n_shards,
+                               metric=metric)
+    return _shard_topk_pallas(
+        queries, corpus,
+        (query_gids if query_gids is not None
+         else jnp.full((q_n,), -1, jnp.int32)),
+        k=min(k, m_s), shard=shard, n_shards=n_shards, metric=metric,
+        interpret=(impl == "interpret" or not _on_tpu()))
+
+
+@functools.partial(jax.jit, static_argnames=("topn",))
+def _blend_rows_ref(queries, neighbor_rows, alpha, topn):
+    return ref.blend_topn_rows_ref(queries, neighbor_rows, alpha, topn)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "topn", "interpret"))
+def _blend_rows_pallas(queries, neighbor_rows, alpha, topn, interpret):
+    return _blend_rows(queries, neighbor_rows, alpha=alpha, topn=topn,
+                       interpret=interpret)[1]
+
+
+def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
+                    impl: str | None = None):
+    """Cross-shard final stage: fetched rows [Q, k, I] → top-n ids.
+
+    Mean over k + alpha blend + top-n; the TPU path fuses them per item
+    tile (no [Q, I] prediction intermediate), the CPU path is bitwise
+    the historical ``_combine_neighbors``.
+    """
+    impl = _resolve(impl)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _blend_rows_ref(queries, neighbor_rows, alpha, topn=topn)
+    return _blend_rows_pallas(
+        queries, neighbor_rows, alpha=float(alpha), topn=topn,
+        interpret=(impl == "interpret" or not _on_tpu()))
+
+
+def serving_cache_size() -> int:
+    """Number of live compiled programs behind the serving entry points.
+
+    One program per distinct (impl, request-batch bucket, corpus shape,
+    static-arg) combination — the engine-side pow2 request bucketing
+    (`StreamingEngine.recommend`) exists to keep this O(log Q);
+    `launch/serve.py` prints it so a bucketing regression is visible
+    from the CLI.
+    """
+    return sum(f._cache_size() for f in (
+        _fused_recommend_ref, _fused_recommend_pallas,
+        _shard_topk_ref, _shard_topk_pallas,
+        _blend_rows_ref, _blend_rows_pallas))
 
 
 def multihot_scatter(ids, weights, n_items: int, impl: str | None = None):

@@ -24,6 +24,73 @@ def knn_topk_ref(queries, corpus, k: int, metric: str = "euclidean"):
     return jax.lax.top_k(scores.astype(jnp.float32), k)
 
 
+def _pairwise_scores(queries, corpus, metric: str):
+    """Mirror of ``core.knn.pairwise_scores`` (duplicated: kernels must
+    not import core).  Bitwise parity with the core version is pinned by
+    tests/test_serving_pipeline.py."""
+    if metric == "euclidean":
+        qc = queries @ corpus.T
+        qn = jnp.sum(queries * queries, axis=-1, keepdims=True)
+        cn = jnp.sum(corpus * corpus, axis=-1)[None, :]
+        return 2.0 * qc - qn - cn
+    if metric == "cosine":
+        qn = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12)
+        cn = corpus / jnp.maximum(
+            jnp.linalg.norm(corpus, axis=-1, keepdims=True), 1e-12)
+        return qn @ cn.T
+    if metric == "dot":
+        return queries @ corpus.T
+    raise ValueError(f"unknown metric {metric}")
+
+
+def fused_recommend_ref(corpus, user_ids, k: int, alpha, topn: int,
+                        metric: str = "euclidean"):
+    """Oracle for the fused serving pipeline (DESIGN.md §8).
+
+    Computes EXACTLY what the pre-fusion `core.knn.recommend_for_users`
+    computed — row gather, full-score nearest neighbours with self
+    exclusion, [Q, k, I] neighbour gather + mean, alpha blend, top-n —
+    in the same operation order, so the dispatcher's CPU path stays
+    bitwise-identical to the historical serving output.
+    """
+    queries = corpus[user_ids]
+    scores = _pairwise_scores(queries, corpus, metric)
+    scores = scores.at[jnp.arange(queries.shape[0]), user_ids].set(-jnp.inf)
+    _, idx = jax.lax.top_k(scores, k)
+    neighbors = jnp.mean(corpus[idx], axis=1)
+    pred = alpha * queries + (1.0 - alpha) * neighbors
+    return jax.lax.top_k(pred, topn)[1]
+
+
+def shard_topk_ref(queries, corpus, k: int, shard: int, n_shards: int,
+                   query_gids=None, metric: str = "euclidean"):
+    """Oracle for the per-shard candidate stage (DESIGN.md §7.3).
+
+    One shard's local corpus scored in full; self-exclusion compares
+    GLOBAL ids (``local_row · n_shards + shard``) so a query user is
+    masked only on its owner shard.  Returns ``([Q, k'] scores, global
+    ids)`` with ``k' = min(k, M_s)`` — the exact math the pre-fusion
+    `core.knn.shard_topk_candidates` ran.
+    """
+    m_s = corpus.shape[0]
+    scores = _pairwise_scores(queries, corpus, metric).astype(jnp.float32)
+    col_gid = jnp.arange(m_s, dtype=jnp.int32) * n_shards + shard
+    if query_gids is not None:
+        scores = jnp.where(col_gid[None, :] == query_gids[:, None],
+                           -jnp.inf, scores)
+    vals, idx = jax.lax.top_k(scores, min(k, m_s))
+    return vals, col_gid[idx]
+
+
+def blend_topn_rows_ref(queries, neighbor_rows, alpha, topn: int):
+    """Oracle for the cross-shard blend: mean over the fetched rows,
+    alpha blend, top-n — the pre-fusion ``_combine_neighbors`` math."""
+    neighbors = jnp.mean(neighbor_rows, axis=1)
+    pred = alpha * queries + (1.0 - alpha) * neighbors
+    return jax.lax.top_k(pred, topn)[1]
+
+
 def decayed_scatter_ref(ids, weights, n_items: int):
     """Weighted multi-hot scatter: out[i] = Σ_{n,b} w[n]·[ids[n,b] == i].
 

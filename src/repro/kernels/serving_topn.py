@@ -1,0 +1,229 @@
+"""Fused neighbour-blend + top-n Pallas kernels (serving stage B).
+
+The TIFU-kNN prediction a request needs per (query q, item i) is
+
+    p[q, i] = alpha · corpus[uid_q, i]
+            + (1 − alpha)/k · Σ_{j ∈ topk(q)} corpus[j, i]
+
+followed by a top-n over i.  The reference path materializes the
+neighbour gather ``corpus[idx]`` — [Q, k, I] in HBM (80 GB at Q=4096,
+k=300, I=16k) — plus a [Q, I] prediction round-trip.  These kernels
+keep both on chip (DESIGN.md §8):
+
+``blend_topn_onehot`` — the single-corpus fused path.  grid =
+(⌈Q/bq⌉, ⌈I/bi⌉, ⌈M/bm⌉), M innermost: per item tile the neighbour sum
+accumulates as a **one-hot matmul** ``member[bq, bm] @ corpus[bm, bi]``
+on the MXU (membership counts built from the [bq, k] index lists, in
+k-chunks to bound VMEM), the query row is recovered the same way
+(``uid`` one-hot — no [Q, I] query gather at all), and after the last
+corpus tile the blended prediction tile merges into a running [bq, n]
+top-n buffer.  Only [Q, n] leaves the chip; HBM traffic is
+O(Q/bq · M · I) corpus reads + O(Q·k) index reads.
+
+``blend_topn_rows`` — the cross-shard path (DESIGN.md §7.3), where the
+k selected neighbour rows were already fetched from their owner shards
+([Q, k, I] is the unavoidable cross-shard traffic).  grid =
+(⌈Q/bq⌉, ⌈I/bi⌉): mean-over-k + blend + running top-n per item tile —
+the [Q, I] prediction intermediate never exists.
+
+Both merges preserve lax.top_k's lowest-index tie-break: the running
+buffer (earlier = lower item ids) sits first in the concatenated
+top_k input.  Tail blocks in Q, I and M are masked in-kernel, so no
+dimension needs to divide its block size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _merge_topn(top_vals, top_idx, pred, item_ids, n: int):
+    """Merge a [bq, bi] prediction tile into the running [bq, n] buffer."""
+    mv = jnp.concatenate([top_vals[...], pred], axis=1)
+    mi = jnp.concatenate([top_idx[...], item_ids], axis=1)
+    tv, tp = jax.lax.top_k(mv, n)
+    top_vals[...] = tv
+    top_idx[...] = jnp.take_along_axis(mi, tp, axis=1)
+
+
+def _onehot_kernel(uid_ref, idx_ref, c_ref, vals_ref, ids_ref, acc_self,
+                   acc_nbr, top_vals, top_idx, *, k: int, alpha: float,
+                   topn: int, bm: int, bi: int, m: int, n_items: int,
+                   kc: int):
+    ii = pl.program_id(1)
+    mi = pl.program_id(2)
+    ni = pl.num_programs(1)
+    nm = pl.num_programs(2)
+
+    @pl.when((ii == 0) & (mi == 0))
+    def _init_topn():
+        top_vals[...] = jnp.full_like(top_vals, -jnp.inf)
+        top_idx[...] = jnp.zeros_like(top_idx)
+
+    @pl.when(mi == 0)
+    def _init_acc():
+        acc_self[...] = jnp.zeros_like(acc_self)
+        acc_nbr[...] = jnp.zeros_like(acc_nbr)
+
+    rows = mi * bm + jax.lax.broadcasted_iota(jnp.int32, (1, bm), 1)
+    c = c_ref[...]                                    # [bm, bi]
+    # tail corpus rows carry garbage (OOB block read) — zero them so the
+    # contraction below cannot leak NaN into valid accumulator lanes
+    row_col = mi * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bi), 0)
+    c = jnp.where(row_col < m, c, 0.0)
+    uid = uid_ref[...]                                # [bq]
+    # self row via one-hot matmul: exactly corpus[uid] (one 1.0 per row)
+    self_sel = (uid[:, None] == rows).astype(jnp.float32)
+    acc_self[...] += jax.lax.dot_general(
+        self_sel, c, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # neighbour membership counts, built in k-chunks to bound VMEM
+    # ([bq, kc, bm] compare tensors instead of [bq, k, bm])
+    member = jnp.zeros(self_sel.shape, jnp.float32)
+    for lo in range(0, k, kc):
+        chunk = idx_ref[:, lo:min(lo + kc, k)]        # [bq, <=kc]
+        member += jnp.sum(
+            (chunk[:, :, None] == rows[None, :, :]).astype(jnp.float32),
+            axis=1)                                   # PAD (-1) never hits
+    acc_nbr[...] += jax.lax.dot_general(
+        member, c, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(mi == nm - 1)
+    def _merge():
+        pred = (alpha * acc_self[...]
+                + (1.0 - alpha) * acc_nbr[...] / k)   # [bq, bi]
+        item_ids = ii * bi + jax.lax.broadcasted_iota(jnp.int32,
+                                                      pred.shape, 1)
+        pred = jnp.where(item_ids >= n_items, -jnp.inf, pred)
+        _merge_topn(top_vals, top_idx, pred, item_ids, topn)
+
+    @pl.when((ii == ni - 1) & (mi == nm - 1))
+    def _done():
+        vals_ref[...] = top_vals[...]
+        ids_ref[...] = top_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "topn", "bq", "bm",
+                                             "bi", "kc", "interpret"))
+def blend_topn_onehot(corpus, user_ids, nbr_idx, alpha: float, topn: int,
+                      bq: int = 128, bm: int = 512, bi: int = 512,
+                      kc: int = 32, interpret: bool = False):
+    """corpus [M, I] × user_ids i32[Q] × nbr_idx i32[Q, k] →
+    (vals f32[Q, topn], item ids i32[Q, topn]).
+
+    ``nbr_idx`` are local corpus rows (entries of −1 contribute zero but
+    still count toward the mean divisor k, matching the reference mean
+    over a fixed k).  ``user_ids`` select the query rows — the alpha
+    term reads them through the same one-hot contraction, so the [Q, I]
+    query gather never materializes.
+    """
+    q_n = user_ids.shape[0]
+    m, n_items = corpus.shape
+    k = nbr_idx.shape[1]
+    if q_n == 0 or m == 0:
+        return (jnp.full((q_n, topn), -jnp.inf, jnp.float32),
+                jnp.zeros((q_n, topn), jnp.int32))
+    bq = min(bq, q_n)
+    bm = min(bm, m)
+    bi = min(bi, n_items)
+    grid = (pl.cdiv(q_n, bq), pl.cdiv(n_items, bi), pl.cdiv(m, bm))
+    kernel = functools.partial(_onehot_kernel, k=k, alpha=float(alpha),
+                               topn=topn, bm=bm, bi=bi, m=m,
+                               n_items=n_items, kc=kc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda qi, ii, mi: (qi,)),
+            pl.BlockSpec((bq, k), lambda qi, ii, mi: (qi, 0)),
+            pl.BlockSpec((bm, bi), lambda qi, ii, mi: (mi, ii)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, topn), lambda qi, ii, mi: (qi, 0)),
+            pl.BlockSpec((bq, topn), lambda qi, ii, mi: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, topn), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, topn), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, bi), jnp.float32),    # alpha (self) partial
+            pltpu.VMEM((bq, bi), jnp.float32),    # neighbour-sum partial
+            pltpu.VMEM((bq, topn), jnp.float32),  # running top-n vals
+            pltpu.VMEM((bq, topn), jnp.int32),    # running top-n ids
+        ],
+        interpret=interpret,
+    )(user_ids.astype(jnp.int32), nbr_idx, corpus)
+
+
+def _rows_kernel(q_ref, nbr_ref, vals_ref, ids_ref, top_vals, top_idx, *,
+                 alpha: float, topn: int, bi: int, n_items: int):
+    ii = pl.program_id(1)
+    ni = pl.num_programs(1)
+
+    @pl.when(ii == 0)
+    def _init():
+        top_vals[...] = jnp.full_like(top_vals, -jnp.inf)
+        top_idx[...] = jnp.zeros_like(top_idx)
+
+    neighbors = jnp.mean(nbr_ref[...], axis=1)        # [bq, bi]
+    pred = (alpha * q_ref[...] + (1.0 - alpha) * neighbors
+            ).astype(jnp.float32)
+    item_ids = ii * bi + jax.lax.broadcasted_iota(jnp.int32, pred.shape, 1)
+    pred = jnp.where(item_ids >= n_items, -jnp.inf, pred)
+    _merge_topn(top_vals, top_idx, pred, item_ids, topn)
+
+    @pl.when(ii == ni - 1)
+    def _done():
+        vals_ref[...] = top_vals[...]
+        ids_ref[...] = top_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "topn", "bq", "bi",
+                                             "interpret"))
+def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
+                    bq: int = 8, bi: int = 512, interpret: bool = False):
+    """queries [Q, I] × neighbor_rows [Q, k, I] →
+    (vals f32[Q, topn], item ids i32[Q, topn]).
+
+    The cross-shard final stage: the k rows were already fetched, so the
+    fusion win is skipping the [Q, I] prediction intermediate — mean,
+    blend and the top-n merge run per item tile.  ``bq`` defaults low:
+    a [bq, k, bi] neighbour block must fit VMEM.
+    """
+    q_n, n_items = queries.shape
+    k = neighbor_rows.shape[1]
+    if q_n == 0:
+        return (jnp.full((0, topn), -jnp.inf, jnp.float32),
+                jnp.zeros((0, topn), jnp.int32))
+    bq = min(bq, q_n)
+    bi = min(bi, n_items)
+    grid = (pl.cdiv(q_n, bq), pl.cdiv(n_items, bi))
+    kernel = functools.partial(_rows_kernel, alpha=float(alpha), topn=topn,
+                               bi=bi, n_items=n_items)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bi), lambda qi, ii: (qi, ii)),
+            pl.BlockSpec((bq, k, bi), lambda qi, ii: (qi, 0, ii)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, topn), lambda qi, ii: (qi, 0)),
+            pl.BlockSpec((bq, topn), lambda qi, ii: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, topn), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, topn), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, topn), jnp.float32),
+            pltpu.VMEM((bq, topn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, neighbor_rows)

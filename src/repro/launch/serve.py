@@ -1,11 +1,20 @@
 """TIFU-kNN serving driver: batched next-basket recommendation requests
 against a live (stream-maintained) state store.
 
-Serving reads the store's cached materialized corpus
-(``StateStore.corpus()``, DESIGN.md §3.6): between requests the engine
-keeps applying micro-batches and invalidates only the touched rows, so
-each request pays an O(dirty·I) row refresh instead of a full [M, I]
-scale×raw densification.
+Requests go through the ENGINE-SIDE BATCHER (`StreamingEngine.recommend`,
+DESIGN.md §8): the engine reads its cached materialized corpus
+(``StateStore.corpus()`` — between requests the micro-batches invalidate
+only the touched rows, so each request pays an O(dirty·I) row refresh
+instead of a full [M, I] densification), pads the query batch to a pow2
+bucket and serves it through the fused pipeline
+(``kernels.ops.fused_recommend``: the Pallas streaming-top-k + one-hot
+blend/top-n kernels on TPU, the bitwise-identical XLA reference on CPU).
+
+The trickle demo varies the request batch size on purpose: the printed
+compiled-program-cache size must stay at the pow2-bucket count, not the
+distinct-request-size count — if it tracks the latter, the request
+bucketing has regressed (the serving bench gates this, see
+benchmarks/bench_serving.py).
 
     PYTHONPATH=src python -m repro.launch.serve --users 2000 --requests 5
 """
@@ -14,11 +23,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TifuParams, knn
 from repro.data import synthetic
+from repro.kernels import ops
 from repro.streaming import StateStore, StoreConfig, StreamingEngine
 
 
@@ -27,7 +35,9 @@ def main():
     ap.add_argument("--dataset", default="tafeng")
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=256,
+                    help="max request batch size (actual sizes vary per "
+                         "request to exercise the pow2 bucketing)")
     ap.add_argument("--topn", type=int, default=10)
     ap.add_argument("--trickle", type=int, default=64,
                     help="streaming events applied between requests "
@@ -62,19 +72,21 @@ def main():
                 eng.add_basket(int(u), rng.choice(
                     p.n_items, size=int(rng.integers(1, 6)), replace=False))
             eng.run_until_drained()
-        users = rng.choice(n_users, size=min(args.batch, n_users),
-                           replace=False)
+        # deliberately ragged request sizes: they must all land in a
+        # handful of pow2 buckets, not one compile per size
+        size = int(rng.integers(max(1, args.batch // 2), args.batch + 1))
+        users = rng.choice(n_users, size=min(size, n_users), replace=False)
         t0 = time.perf_counter()
-        corpus = store.corpus()
-        recs = knn.recommend_for_users(corpus, jnp.asarray(users),
-                                       k=p.k_neighbors, alpha=p.alpha,
-                                       topn=args.topn)
-        recs.block_until_ready()
+        recs = eng.recommend(users, topn=args.topn)
         dt = time.perf_counter() - t0
         print(f"request batch {r}: {len(users)} users → top-{args.topn} "
               f"in {dt*1e3:.1f} ms ({dt/len(users)*1e6:.0f} us/user)")
     print(f"corpus cache: {store.corpus_full_builds} full build(s), "
           f"{store.corpus_rows_refreshed} row refreshes")
+    print(f"serving compiled-program cache: "
+          f"{eng.metrics.serve_compiled_shapes} shape bucket(s) across "
+          f"{eng.metrics.serve_requests} requests "
+          f"({ops.serving_cache_size()} live compiled programs)")
     print("sample recommendation for user 0:", np.asarray(recs[0]))
     return 0
 

@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import stability
+from repro.core import knn, stability
 from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
                               KIND_DEL_ITEM, PAD_ID, AddBatch,
                               DelBasketBatch, DelItemBatch, StreamState,
@@ -52,6 +52,25 @@ from repro.parallel.sharding import UserShardSpec
 from repro.streaming.state_store import (StateStore, StoreConfig,
                                          atomic_write_json,
                                          load_checkpoint_arrays)
+
+
+def _pad_request(user_ids) -> tuple:
+    """Pad a serving request to its pow2 bucket (DESIGN.md §8.3).
+
+    Returns ``(padded_ids i64[bucket], q_n, bucket)``; padding repeats
+    the first user id (computed and sliced off by the caller).  Shared
+    by the single-engine and sharded request batchers so the bucketing
+    contract cannot drift between them.
+    """
+    ids = np.asarray(user_ids, np.int64).ravel()
+    q_n = ids.size
+    if q_n == 0:
+        return ids, 0, 0
+    bucket = _pow2_pad(q_n)
+    if bucket > q_n:
+        ids = np.concatenate([ids, np.full(bucket - q_n, ids[0],
+                                           ids.dtype)])
+    return ids, q_n, bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +108,13 @@ class EngineMetrics:
     bucket_grows: int = 0
     bucket_shrinks: int = 0
     last_batch_seconds: float = 0.0
+    # serving request batches answered via `recommend`, and the number
+    # of distinct (pow2 query bucket, topn, k, metric) shapes they
+    # compiled — bounded at O(log max_batch) per parameter set by the
+    # request bucketing (DESIGN.md §8); a count tracking the raw
+    # request-size spread means the bucketing regressed
+    serve_requests: int = 0
+    serve_compiled_shapes: int = 0
 
 
 class StreamingEngine:
@@ -166,6 +192,9 @@ class StreamingEngine:
         self._pending_seqnos: set = set()
         self._max_delivered = -1
         self._next_seqno = 0
+        # distinct (bucket, topn, k, metric) serving shapes compiled —
+        # the host-side view of `kernels.ops.serving_cache_size`
+        self._serve_shapes: set = set()
         self.metrics = EngineMetrics()
         if stability_target_rel_err is not None:
             self.err_threshold = stability.refresh_threshold(
@@ -477,6 +506,40 @@ class StreamingEngine:
             total += n
         return total
 
+    # -- serving (DESIGN.md §8) -------------------------------------------------
+
+    def recommend(self, user_ids, topn: int = 10, k: Optional[int] = None,
+                  alpha: Optional[float] = None,
+                  metric: str = "euclidean") -> np.ndarray:
+        """Top-n recommendations for ``user_ids`` — the request batcher.
+
+        Reads the cached serving corpus (``StateStore.corpus()`` —
+        micro-batches between requests invalidated only the touched
+        rows) and serves through the fused pipeline
+        (`core.knn.recommend_for_users` → `kernels.ops`).  The query
+        batch is padded to a pow2 BUCKET (repeating the first user; the
+        padding rows are computed and discarded), so serving compiles
+        O(log max_batch) programs per (topn, k, metric) instead of one
+        per distinct request-batch size — the compiled-shape count is
+        tracked in ``metrics.serve_compiled_shapes``.  Cost: one fused
+        device program per request batch, O(topn) host output per user.
+        """
+        ids, q_n, bucket = _pad_request(user_ids)
+        if q_n == 0:
+            return np.zeros((0, topn), np.int32)
+        k = self.params.k_neighbors if k is None else k
+        alpha = self.params.alpha if alpha is None else alpha
+        recs = knn.recommend_for_users(
+            self.store.corpus(), jnp.asarray(ids.astype(np.int32)),
+            k=k, alpha=alpha, topn=topn, metric=metric)
+        self.metrics.serve_requests += 1
+        # alpha included: it is a static (compile-triggering) arg of
+        # the Pallas serving path, so per-request alphas must show up
+        # in the gated compiled-shape count
+        self._serve_shapes.add((bucket, topn, k, float(alpha), metric))
+        self.metrics.serve_compiled_shapes = len(self._serve_shapes)
+        return np.asarray(recs)[:q_n]
+
     # -- recovery ---------------------------------------------------------------
 
     def checkpoint(self, directory: str, step: int) -> None:
@@ -732,14 +795,21 @@ class ShardedStreamingEngine:
 
         Delegates to ``core.knn.sharded_recommend_for_users`` (per-shard
         candidate top-k, streaming merge of [Q, k] score lists — never a
-        corpus gather; DESIGN.md §7).
+        corpus gather; DESIGN.md §7).  Query batches are padded to pow2
+        buckets exactly like the single-engine batcher
+        (`StreamingEngine.recommend`): every shard's candidate program
+        sees the bucketed Q, so the per-shard compiled-shape count stays
+        O(log max_batch) too.
         """
-        from repro.core import knn
-        return knn.sharded_recommend_for_users(
-            self.corpora(), np.asarray(user_ids, np.int64),
+        ids, q_n, _ = _pad_request(user_ids)
+        if q_n == 0:
+            return np.zeros((0, topn), np.int32)
+        recs = knn.sharded_recommend_for_users(
+            self.corpora(), ids,
             k=self.params.k_neighbors if k is None else k,
             alpha=self.params.alpha if alpha is None else alpha,
             topn=topn, n_shards=self.spec.n_shards, metric=metric)
+        return np.asarray(recs)[:q_n]
 
     # -- recovery ---------------------------------------------------------------
 
