@@ -266,6 +266,133 @@ def bench_sharded(cfg: BenchConfig, shard_counts, backend: str) -> tuple:
     return results, summary
 
 
+def bench_recovery(cfg: BenchConfig, backend: str) -> tuple:
+    """Time-to-recover after an injected crash, vs history size.
+
+    For each seeded history depth: drain a checkpointed engine, apply a
+    delta window (including poison deletes that must quarantine, not
+    wedge), kill the NEXT checkpoint at its commit point with an
+    injected crash (``faults.FaultPlan``), then measure a fresh
+    process's restore + at-least-once full-delta replay back to a
+    drained engine (DESIGN.md §9).  Also exercises the bounded-ingestion
+    path (a 2x-high-water burst against ``max_pending``) and reports the
+    dead-letter and backpressure counters alongside the timings —
+    recovery numbers are informational (bench_trend gates only speedup/
+    compile-count keys).
+    """
+    import shutil
+    import tempfile
+
+    from repro.streaming import StateStore, StoreConfig, StreamingEngine
+    from repro.streaming import Event, faults
+
+    n_items = cfg.n_items_grid[min(1, len(cfg.n_items_grid) - 1)]
+    params = make_params(n_items)
+    hist_grid = [h for h in (4, 8, 16) if h + 4 <= cfg.max_baskets]
+    results = []
+
+    def make_engine():
+        store = StateStore(StoreConfig(
+            n_users=cfg.m_users, n_items=n_items,
+            max_baskets=cfg.max_baskets, max_basket_size=cfg.max_bsize))
+        return StreamingEngine(store, params, batch_size=cfg.batch)
+
+    for h in hist_grid:
+        rng = np.random.default_rng(0)
+        eng = make_engine()
+        seqno = 0
+        for _ in range(h):
+            seed = []
+            for u in range(cfg.m_users):
+                seed.append(Event(
+                    KIND_ADD_BASKET, u, seqno=seqno,
+                    items=rng.choice(n_items, size=cfg.max_bsize // 2,
+                                     replace=False).astype(np.int32)))
+                seqno += 1
+            eng.submit(seed)
+        eng.run_until_drained()
+        ckpt = tempfile.mkdtemp(prefix="bench_recovery_")
+        try:
+            eng.checkpoint(ckpt, 1)
+            # the delta a recovering engine must replay: 2 batches of
+            # adds plus poison deletes (positions beyond every history)
+            # that must land in the dead-letter queue at apply time
+            delta = []
+            for u in range(min(2 * cfg.batch, cfg.m_users)):
+                delta.append(Event(
+                    KIND_ADD_BASKET, u, seqno=seqno,
+                    items=rng.choice(n_items, size=cfg.max_bsize // 2,
+                                     replace=False).astype(np.int32)))
+                seqno += 1
+            for u in range(8):
+                delta.append(Event(KIND_DEL_BASKET, u, seqno=seqno,
+                                   pos=cfg.max_baskets - 1))
+                seqno += 1
+            eng.submit(delta, on_invalid="quarantine")
+            eng.run_until_drained()
+            with faults.inject(
+                    faults.FaultPlan(crash_site="LATEST.pre_replace")):
+                try:
+                    eng.checkpoint(ckpt, 2)
+                except faults.InjectedCrash:
+                    pass            # the process died mid-commit
+            restore_t, replay_t, n_replay = [], [], 0
+            for _ in range(max(2, cfg.iters)):
+                eng2 = make_engine()
+                t0 = time.perf_counter()
+                eng2.restore(ckpt)
+                t1 = time.perf_counter()
+                eng2.submit(delta, on_invalid="quarantine")
+                n_replay = eng2.n_pending
+                eng2.run_until_drained()
+                t2 = time.perf_counter()
+                restore_t.append(t1 - t0)
+                replay_t.append(t2 - t1)
+            # bounded ingestion: a 2x-high-water burst must shed
+            # deterministically while the engine drains the rest
+            eng2.max_pending = cfg.batch
+            burst = [Event(KIND_ADD_BASKET, u % cfg.m_users,
+                           items=np.arange(2, dtype=np.int32))
+                     for u in range(2 * cfg.batch)]
+            shed = eng2.submit(burst, on_overflow="shed")
+            eng2.run_until_drained()
+        finally:
+            shutil.rmtree(ckpt, ignore_errors=True)
+        restore_t, replay_t = np.asarray(restore_t), np.asarray(replay_t)
+        total = restore_t + replay_t
+        r = {"kind": "recovery", "path": "engine_recovery",
+             "backend": backend, "n_items": n_items, "history": h,
+             "events_replayed": n_replay,
+             "iters": len(total),
+             "restore_ms": float(restore_t.mean() * 1e3),
+             "replay_ms": float(replay_t.mean() * 1e3),
+             "recover_ms": float(total.mean() * 1e3),
+             "p50_recover_ms": float(np.median(total) * 1e3),
+             "replay_events_per_s": float(n_replay / replay_t.mean()),
+             "dead_letters": eng2.metrics.dead_letters,
+             "backpressure_rejections": shed.rejected,
+             "crash_site": "LATEST.pre_replace"}
+        results.append(r)
+        print(f"recovery    history={h:3d} n_items={n_items:>6d} "
+              f"recover={r['recover_ms']:8.2f} ms "
+              f"(restore {r['restore_ms']:.2f} + replay "
+              f"{r['replay_ms']:.2f}; {n_replay} events, "
+              f"{r['dead_letters']} dead-lettered, "
+              f"{r['backpressure_rejections']} shed)")
+    last = results[-1]
+    summary = {"history_grid": hist_grid,
+               "recover_ms_by_history": {str(r["history"]): r["recover_ms"]
+                                         for r in results},
+               "recover_ms_at_max_history": last["recover_ms"],
+               "restore_ms_at_max_history": last["restore_ms"],
+               "recovery_replay_events_per_s":
+                   last["replay_events_per_s"],
+               "recovery_dead_letters": last["dead_letters"],
+               "recovery_backpressure_rejections":
+                   last["backpressure_rejections"]}
+    return results, summary
+
+
 def bench(path: str, params, rng, kind: str, iters: int,
           cfg: BenchConfig, backend: str) -> dict:
     apply_fn = PATHS[path]
@@ -390,6 +517,13 @@ def main() -> int:
                          "these user-shard counts (e.g. --shards 1 2 4) "
                          "instead of the kernel-path grid; records one "
                          "arm='sharded' entry (DESIGN.md §7)")
+    ap.add_argument("--recovery", action="store_true",
+                    help="run the crash-recovery sweep (time-to-recover "
+                         "after an injected commit-point crash vs "
+                         "history size, plus dead-letter/backpressure "
+                         "counters) instead of the kernel-path grid; "
+                         "records one arm='recovery' entry (DESIGN.md "
+                         "§9)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_updates.json"))
     args = ap.parse_args()
@@ -403,9 +537,14 @@ def main() -> int:
         ap.error("--backend interpret is interpret-mode Pallas (orders of "
                  "magnitude slower): only allowed with --smoke")
 
+    if args.shards and args.recovery:
+        ap.error("--shards and --recovery are separate arms; run them "
+                 "as two invocations (each records its own entry)")
     with ops.default_impl(BACKEND_IMPL[backend]):
         if args.shards:
             results, summary = bench_sharded(cfg, args.shards, backend)
+        elif args.recovery:
+            results, summary = bench_recovery(cfg, backend)
         else:
             results = run_grid(cfg, backend, args.quick)
             summary = summarize(results, cfg)
@@ -433,6 +572,8 @@ def main() -> int:
     if args.shards:
         entry["arm"] = "sharded"
         entry["shards"] = summary["shards"]
+    elif args.recovery:
+        entry["arm"] = "recovery"
     out = os.path.abspath(args.out)
     payload = merge_runs(out, entry)
     with open(out, "w") as f:

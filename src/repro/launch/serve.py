@@ -25,9 +25,10 @@ import time
 
 import numpy as np
 
+from repro.core.types import KIND_ADD_BASKET
 from repro.data import synthetic
 from repro.kernels import ops
-from repro.streaming import StateStore, StoreConfig, StreamingEngine
+from repro.streaming import Event, StateStore, StoreConfig, StreamingEngine
 
 
 def main():
@@ -42,6 +43,16 @@ def main():
     ap.add_argument("--trickle", type=int, default=64,
                     help="streaming events applied between requests "
                          "(exercises the corpus-cache row invalidation)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bounded ingestion (DESIGN.md §9): high-water "
+                         "mark on the engine's pending queues; trickle "
+                         "events past it are shed (counted, resubmitted "
+                         "next round) instead of growing memory "
+                         "unboundedly")
+    ap.add_argument("--poison", type=int, default=0,
+                    help="malformed events injected per trickle round "
+                         "(out-of-range items): they must land in the "
+                         "dead-letter queue, not wedge serving")
     args = ap.parse_args()
 
     ds = synthetic.generate(args.dataset, scale=args.scale)
@@ -58,6 +69,8 @@ def main():
         for b in h:
             eng.add_basket(u, b)
     n = eng.run_until_drained()
+    # the high-water mark bounds the live trickle, not the bulk load
+    eng.max_pending = args.max_pending
     print(f"loaded {n} baskets for {n_users} users in "
           f"{time.perf_counter()-t0:.1f}s")
 
@@ -66,11 +79,28 @@ def main():
     for r in range(args.requests):
         if r and args.trickle:
             # live updates between requests: only these users' corpus
-            # rows are refreshed by the next store.corpus() call
-            for u in rng.choice(n_users, size=min(args.trickle, n_users),
-                                replace=False):
-                eng.add_basket(int(u), rng.choice(
-                    p.n_items, size=int(rng.integers(1, 6)), replace=False))
+            # rows are refreshed by the next store.corpus() call.  The
+            # whole round goes through one admission-checked submit —
+            # shed events just lower this round's trickle volume (a real
+            # source resends them), poison quarantines, serving answers
+            # regardless.
+            trickle = [Event(KIND_ADD_BASKET, int(u),
+                             items=rng.choice(p.n_items,
+                                              size=int(rng.integers(1, 6)),
+                                              replace=False).astype(
+                                                  np.int32))
+                       for u in rng.choice(n_users,
+                                           size=min(args.trickle, n_users),
+                                           replace=False)]
+            trickle += [Event(KIND_ADD_BASKET, 0,
+                              items=np.asarray([p.n_items + i], np.int32))
+                        for i in range(args.poison)]
+            adm = eng.submit(trickle, on_invalid="quarantine",
+                             on_overflow="shed")
+            if adm.rejected or adm.quarantined:
+                print(f"  admission: {adm.admitted} admitted, "
+                      f"{adm.rejected} shed (backpressure), "
+                      f"{adm.quarantined} dead-lettered")
             eng.run_until_drained()
         # deliberately ragged request sizes: they must all land in a
         # handful of pow2 buckets, not one compile per size
@@ -87,6 +117,9 @@ def main():
           f"{eng.metrics.serve_compiled_shapes} shape bucket(s) across "
           f"{eng.metrics.serve_requests} requests "
           f"({ops.serving_cache_size()} live compiled programs)")
+    print(f"ingestion: {eng.metrics.events_processed} events applied, "
+          f"{eng.metrics.backpressure_rejections} shed by backpressure, "
+          f"{eng.metrics.dead_letters} dead-lettered")
     print("sample recommendation for user 0:", np.asarray(recs[0]))
     return 0
 

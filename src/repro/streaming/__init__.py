@@ -1,12 +1,19 @@
 """Streaming: micro-batch state maintenance (Spark Structured Streaming
 analog — paper §5), exactly-once recovery, stability-triggered refresh,
-and the user-axis sharded deployment (DESIGN.md §7)."""
-from repro.streaming.engine import (Event, ShardedStreamingEngine,
+the user-axis sharded deployment (DESIGN.md §7), and the durable
+ingestion / fault-injection layer (DESIGN.md §9)."""
+from repro.streaming.engine import (AdmissionResult, Backpressure, Event,
+                                    InvalidEventError,
+                                    ShardedStreamingEngine,
                                     StreamingEngine)
-from repro.streaming.state_store import (StateStore, StoreConfig,
+from repro.streaming.state_store import (CorruptCheckpointError, StateStore,
+                                         StoreConfig,
                                          load_checkpoint_arrays,
-                                         state_shardings)
+                                         load_json_checked, state_shardings,
+                                         with_io_retries)
 
 __all__ = ["Event", "StreamingEngine", "ShardedStreamingEngine",
            "StateStore", "StoreConfig", "state_shardings",
-           "load_checkpoint_arrays"]
+           "load_checkpoint_arrays", "AdmissionResult", "Backpressure",
+           "InvalidEventError", "CorruptCheckpointError",
+           "load_json_checked", "with_io_retries"]

@@ -49,9 +49,82 @@ from repro.core.updates import (SCALE_CEIL, SCALE_FLOOR,
                                 apply_del_basket_batch, apply_del_item_batch,
                                 refresh_users, renormalize_users)
 from repro.parallel.sharding import UserShardSpec
-from repro.streaming.state_store import (StateStore, StoreConfig,
-                                         atomic_write_json,
-                                         load_checkpoint_arrays)
+from repro.streaming.state_store import (CorruptCheckpointError, StateStore,
+                                         StoreConfig, atomic_write_json,
+                                         load_checkpoint_arrays,
+                                         load_json_checked)
+
+
+class InvalidEventError(ValueError):
+    """A malformed event was rejected eagerly at submit time.
+
+    Carries the offending event and a human-readable reason — raised
+    instead of failing deep inside ``_apply_events`` with a shape or
+    index error far from the cause (DESIGN.md §9).  ``submit(...,
+    on_invalid="quarantine")`` routes these to the dead-letter queue
+    instead of raising.
+    """
+
+    def __init__(self, event, reason: str):
+        super().__init__(f"invalid event {event!r}: {reason}")
+        self.event = event
+        self.reason = reason
+
+
+class Backpressure(RuntimeError):
+    """Submit crossed the pending-queue high-water mark.
+
+    The engine admitted a PREFIX of the call's events (``admitted``) and
+    rejected the rest (``rejected``); rejected events were never
+    assigned seqnos and count as **not delivered** — a contract-abiding
+    at-least-once source resends from ``first_rejected_seqno`` (or the
+    first rejected payload) once the queues drain.  Admitted events stay
+    admitted.
+    """
+
+    def __init__(self, admitted: int, rejected: int,
+                 first_rejected_seqno: Optional[int] = None,
+                 pending: int = 0):
+        super().__init__(
+            f"pending queues at high-water mark ({pending} buffered): "
+            f"admitted {admitted}, rejected {rejected} event(s)"
+            + (f" from seqno {first_rejected_seqno}"
+               if first_rejected_seqno is not None else ""))
+        self.admitted = admitted
+        self.rejected = rejected
+        self.first_rejected_seqno = first_rejected_seqno
+        self.pending = pending
+
+
+@dataclasses.dataclass
+class AdmissionResult:
+    """What one ``submit`` call did with its events (DESIGN.md §9).
+
+    ``admitted`` entered the pending queues; ``deduped`` were
+    at-least-once redeliveries skipped by the exactly-once log;
+    ``quarantined`` were malformed and moved to the dead-letter queue;
+    ``rejected`` were shed by backpressure (never delivered — resend
+    them).  ``first_rejected_seqno`` is the resume point for an
+    explicit-seqno source.
+    """
+
+    admitted: int = 0
+    deduped: int = 0
+    quarantined: int = 0
+    rejected: int = 0
+    first_rejected_seqno: Optional[int] = None
+
+    def merge(self, other: "AdmissionResult") -> "AdmissionResult":
+        """Fold another result in (sharded router aggregation)."""
+        self.admitted += other.admitted
+        self.deduped += other.deduped
+        self.quarantined += other.quarantined
+        self.rejected += other.rejected
+        if other.first_rejected_seqno is not None and (
+                self.first_rejected_seqno is None
+                or other.first_rejected_seqno < self.first_rejected_seqno):
+            self.first_rejected_seqno = other.first_rejected_seqno
+        return self
 
 
 def _pad_request(user_ids) -> tuple:
@@ -115,6 +188,12 @@ class EngineMetrics:
     # request-size spread means the bucketing regressed
     serve_requests: int = 0
     serve_compiled_shapes: int = 0
+    # malformed/poison events moved to the dead-letter queue (submit-time
+    # validation + apply-time impossible-delete checks, DESIGN.md §9)
+    dead_letters: int = 0
+    # events shed by the pending-queue high-water mark (never delivered;
+    # the source resends them once the queues drain)
+    backpressure_rejections: int = 0
 
 
 class StreamingEngine:
@@ -125,10 +204,25 @@ class StreamingEngine:
                  stability_target_rel_err: Optional[float] = 1e-2,
                  renorm_check_interval: int = 64,
                  bucket_hysteresis: int = 8,
-                 tile_hints: Optional[bool] = None):
+                 tile_hints: Optional[bool] = None,
+                 max_pending: Optional[int] = None,
+                 dead_letter_cap: int = 1024):
         self.store = store
         self.params = params
         self.batch_size = batch_size
+        # Bounded ingestion (DESIGN.md §9): with ``max_pending`` set,
+        # `submit` admits events only while the buffered count is below
+        # the high-water mark and sheds (or raises Backpressure on) the
+        # rest — memory stays bounded under a slow-consumer scenario.
+        self.max_pending = max_pending
+        # Dead-letter queue: (event, reason) pairs for malformed/poison
+        # events, ring-buffered so a poison flood cannot grow unbounded.
+        self.dead_letter: deque = deque(maxlen=max(1, dead_letter_cap))
+        # First-rejected explicit seqno not yet readmitted: while set,
+        # first deliveries ABOVE it keep being shed — admitting them
+        # would open a permanent gap below the watermark and turn the
+        # rejected event's redelivery into a dropped "duplicate".
+        self._shed_from: Optional[int] = None
         # Host-measured touched-tile bounds (T_max) threaded into the
         # jitted appliers as static args (DESIGN.md §3.3): shrinks the
         # tile-planned TPU kernel grids below the static min(W, I/bi)
@@ -218,34 +312,140 @@ class StreamingEngine:
         self._pending_seqnos.add(ev.seqno)
         self._n_pending += 1
 
-    def submit(self, events: Iterable[Event]) -> None:
-        """Enqueue events, deduplicating at-least-once redeliveries.
+    def _invalid_reason(self, ev: Event) -> Optional[str]:
+        """Why ``ev`` is statically malformed, or None if well-formed.
 
-        Events without a seqno are assigned the next one; events WITH a
-        seqno are replays/redeliveries and are skipped when already
-        processed (``<= watermark`` under the subsequence semantics, or
-        in the sparse processed set above it) or still buffered.
-        CONTRACT: first deliveries must arrive in increasing seqno
-        order — a late out-of-order first delivery is indistinguishable
-        from a redelivery and is dropped (counted in
-        ``metrics.dedup_skips``).  Cost: O(1) per event (amortized heap
-        push).
+        Static checks only (shape-config bounds); the position-vs-actual
+        -history check is dynamic and happens at apply time
+        (`_apply_events`), because the history length may legitimately
+        change between submit and apply.
         """
+        cfg = self.store.cfg
+        if ev.kind not in (KIND_ADD_BASKET, KIND_DEL_BASKET,
+                           KIND_DEL_ITEM):
+            return f"unknown event kind {ev.kind}"
+        if not 0 <= ev.user < cfg.n_users:
+            return f"user {ev.user} outside [0, {cfg.n_users})"
+        if ev.kind == KIND_ADD_BASKET:
+            items = np.asarray(
+                [] if ev.items is None else ev.items, np.int64).ravel()
+            if items.size == 0:
+                return "add-basket event with no items"
+            if items.size > cfg.max_basket_size:
+                return (f"basket of {items.size} items exceeds "
+                        f"max_basket_size {cfg.max_basket_size}")
+            bad = items[(items < 0) | (items >= cfg.n_items)]
+            if bad.size:
+                return f"item id {int(bad[0])} outside [0, {cfg.n_items})"
+            return None
+        if not 0 <= ev.pos < cfg.max_baskets:
+            return (f"delete position {ev.pos} outside "
+                    f"[0, {cfg.max_baskets})")
+        if ev.kind == KIND_DEL_ITEM and not 0 <= ev.item < cfg.n_items:
+            return f"item id {ev.item} outside [0, {cfg.n_items})"
+        return None
+
+    def _quarantine(self, ev: Event, reason: str) -> None:
+        """Move a malformed/poison event to the dead-letter queue."""
+        self.dead_letter.append((ev, reason))
+        self.metrics.dead_letters += 1
+
+    def _would_shed(self, seqno: Optional[int] = None) -> bool:
+        """Would an event (with optional explicit seqno) be shed now?
+
+        A rejected explicit seqno is an OPEN GAP: everything above it —
+        including any seqno that would be freshly assigned — must keep
+        shedding until that seqno's own redelivery is readmitted.
+        Otherwise the watermark rolls past the gap (it looks like an
+        other-shard seqno) and the redelivery is dropped as a
+        "duplicate": a lost event.
+        """
+        if self._shed_from is not None and (seqno is None
+                                            or seqno > self._shed_from):
+            return True
+        return (self.max_pending is not None
+                and self._n_pending >= self.max_pending)
+
+    def submit(self, events: Iterable[Event], *,
+               on_invalid: str = "raise",
+               on_overflow: str = "raise") -> AdmissionResult:
+        """Enqueue events: dedup, validate, admit under backpressure.
+
+        Per event, in order: (1) explicit-seqno redeliveries already
+        processed (``<= watermark`` under the subsequence semantics, or
+        in the sparse processed set above it) or still buffered are
+        skipped — at-least-once becomes exactly-once.  CONTRACT: first
+        deliveries arrive in increasing seqno order; a late out-of-order
+        first delivery is indistinguishable from a redelivery and is
+        dropped (counted in ``metrics.dedup_skips``).  (2) Statically
+        malformed events raise :class:`InvalidEventError`
+        (``on_invalid="raise"``) or move to the dead-letter queue
+        (``"quarantine"``); a quarantined event CONSUMES its seqno and
+        is marked processed, so replays skip it instead of
+        re-quarantining forever.  (3) With ``max_pending`` set, events
+        past the high-water mark are shed: never assigned a seqno, no
+        log state touched — the source resends them.  Once an explicit
+        seqno is shed, everything above it keeps shedding until its
+        redelivery is admitted (`_would_shed`).  ``on_overflow="raise"``
+        raises :class:`Backpressure` AFTER the admitted prefix is safely
+        enqueued; ``"shed"`` only counts.  Cost: O(1) per event
+        (amortized heap push).
+        """
+        if on_invalid not in ("raise", "quarantine"):
+            raise ValueError(f"on_invalid={on_invalid!r}")
+        if on_overflow not in ("raise", "shed"):
+            raise ValueError(f"on_overflow={on_overflow!r}")
+        res = AdmissionResult()
         for ev in events:
-            if ev.seqno < 0:
-                ev = dataclasses.replace(ev, seqno=self._next_seqno)
-                self._next_seqno += 1
-            elif ev.seqno <= self.watermark \
-                    or ev.seqno in self._processed_above \
-                    or ev.seqno in self._pending_seqnos:
+            explicit = ev.seqno >= 0
+            if explicit and (ev.seqno <= self.watermark
+                             or ev.seqno in self._processed_above
+                             or ev.seqno in self._pending_seqnos):
                 # replay of an event that was already processed OR is
                 # still buffered: skip (at-least-once -> exactly-once)
                 self.metrics.dedup_skips += 1
+                res.deduped += 1
                 continue
+            reason = self._invalid_reason(ev)
+            if reason is not None:
+                if on_invalid == "raise":
+                    raise InvalidEventError(ev, reason)
+                if not explicit:
+                    ev = dataclasses.replace(ev, seqno=self._next_seqno)
+                    self._next_seqno += 1
+                else:
+                    self._next_seqno = max(self._next_seqno, ev.seqno + 1)
+                self._max_delivered = max(self._max_delivered, ev.seqno)
+                self._processed_above.add(ev.seqno)
+                self._advance_watermark()
+                self._quarantine(ev, reason)
+                res.quarantined += 1
+                continue
+            if self._would_shed(ev.seqno if explicit else None):
+                self.metrics.backpressure_rejections += 1
+                res.rejected += 1
+                if explicit:
+                    if (res.first_rejected_seqno is None
+                            or ev.seqno < res.first_rejected_seqno):
+                        res.first_rejected_seqno = ev.seqno
+                    if (self._shed_from is None
+                            or ev.seqno < self._shed_from):
+                        self._shed_from = ev.seqno
+                continue
+            if not explicit:
+                ev = dataclasses.replace(ev, seqno=self._next_seqno)
+                self._next_seqno += 1
             else:
                 self._next_seqno = max(self._next_seqno, ev.seqno + 1)
+                if ev.seqno == self._shed_from:
+                    self._shed_from = None    # gap closed: admissions resume
             self._max_delivered = max(self._max_delivered, ev.seqno)
             self._enqueue(ev)
+            res.admitted += 1
+        if res.rejected and on_overflow == "raise":
+            raise Backpressure(res.admitted, res.rejected,
+                               res.first_rejected_seqno, self._n_pending)
+        return res
 
     def add_basket(self, user: int, items: Sequence[int]) -> None:
         """Enqueue one basket addition (Eq. 7–9) for ``user``."""
@@ -388,6 +588,32 @@ class StreamingEngine:
         adds = [ev for ev in events if ev.kind == KIND_ADD_BASKET]
         delb = [ev for ev in events if ev.kind == KIND_DEL_BASKET]
         deli = [ev for ev in events if ev.kind == KIND_DEL_ITEM]
+        # Dynamic poison check (DESIGN.md §9): a delete position at or
+        # beyond the user's CURRENT history length would be clipped by
+        # the applier's safe_pos guard and silently delete the WRONG
+        # basket — quarantine it instead.  The event still counts as
+        # processed (its seqno advances the log via `_finish_step`), so
+        # a replay skips it rather than re-poisoning.  Costs one small
+        # host fetch of the touched users' basket counts; the delete
+        # paths already pay O(batch·N·B), so this does not change the
+        # step's asymptotics.
+        if delb or deli:
+            dels = delb + deli
+            idx = jnp.asarray(np.asarray([ev.user for ev in dels],
+                                         np.int32))
+            nb = np.asarray(jax.device_get(self.store.state.n_baskets[idx]))
+            keep_b: List[Event] = []
+            keep_i: List[Event] = []
+            for ev, n in zip(dels, nb):
+                if ev.pos >= int(n):
+                    self._quarantine(
+                        ev, f"delete position {ev.pos} beyond user "
+                            f"{ev.user}'s history of {int(n)} basket(s)")
+                elif ev.kind == KIND_DEL_BASKET:
+                    keep_b.append(ev)
+                else:
+                    keep_i.append(ev)
+            delb, deli = keep_b, keep_i
         self._decay_absent_buckets({kind for kind, evs in
                                     ((KIND_ADD_BASKET, adds),
                                      (KIND_DEL_BASKET, delb),
@@ -419,8 +645,10 @@ class StreamingEngine:
             self.store.state = apply_del_item_batch(
                 self.store.state, batch, self.params,
                 t_max_cap=hints.get(KIND_DEL_ITEM, 0))
-        # serving-corpus cache: only these rows changed (DESIGN.md §3.6)
-        self.store.invalidate_users([ev.user for ev in events])
+        # serving-corpus cache: only the APPLIED rows changed (§3.6) —
+        # quarantined events touched nothing
+        self.store.invalidate_users(
+            [ev.user for ev in adds + delb + deli])
 
     def _maintain(self) -> None:
         """Stability refreshes + scale renormalization after a batch."""
@@ -473,20 +701,26 @@ class StreamingEngine:
         self._maintain()
         for ev in events:
             self._processed_above.add(ev.seqno)
-        # Advance the frontier under the subsequence semantics: a seqno
-        # can be passed when it was processed here, OR when it was never
-        # delivered here (another shard owns it — in-order first delivery
-        # guarantees it never will be).  Pending seqnos (delivered,
-        # unprocessed) and anything beyond _max_delivered block.
+        self._advance_watermark()
+        self.metrics.events_processed += len(events)
+        self.metrics.batches += 1
+        self.metrics.last_batch_seconds = time.perf_counter() - t0
+        return len(events)
+
+    def _advance_watermark(self) -> None:
+        """Advance the frontier under the subsequence semantics.
+
+        A seqno can be passed when it was processed here, OR when it was
+        never delivered here (another shard owns it — in-order first
+        delivery guarantees it never will be).  Pending seqnos
+        (delivered, unprocessed) and anything beyond ``_max_delivered``
+        block.
+        """
         nxt = self.watermark + 1
         while nxt <= self._max_delivered and nxt not in self._pending_seqnos:
             self._processed_above.discard(nxt)
             self.watermark = nxt
             nxt += 1
-        self.metrics.events_processed += len(events)
-        self.metrics.batches += 1
-        self.metrics.last_batch_seconds = time.perf_counter() - t0
-        return len(events)
 
     def step(self) -> int:
         """Process one micro-batch. Returns number of events applied."""
@@ -540,6 +774,24 @@ class StreamingEngine:
         self.metrics.serve_compiled_shapes = len(self._serve_shapes)
         return np.asarray(recs)[:q_n]
 
+    def freeze_serving(self) -> None:
+        """Enter degraded serving: pin the current corpus snapshot.
+
+        ``recommend`` keeps answering from the pinned snapshot while the
+        live state is being rebuilt/restored (DESIGN.md §9); answers are
+        stale but well-formed.  Idempotent.
+        """
+        self.store.freeze_serving()
+
+    def thaw_serving(self) -> None:
+        """Leave degraded serving; `recommend` reads live state again."""
+        self.store.thaw_serving()
+
+    @property
+    def serving_degraded(self) -> bool:
+        """True while `recommend` answers from a pinned stale snapshot."""
+        return self.store.serving_degraded
+
     # -- recovery ---------------------------------------------------------------
 
     def checkpoint(self, directory: str, step: int) -> None:
@@ -581,6 +833,9 @@ class StreamingEngine:
         self._heap.clear()
         self._pending_seqnos.clear()
         self._n_pending = 0
+        # dropped queues also drop any open backpressure gap: the source
+        # replays from the restored log, so there is no seqno to readmit
+        self._shed_from = None
 
     def _load_log(self, meta: dict) -> None:
         """Install a persisted exactly-once log (see `checkpoint`)."""
@@ -602,6 +857,7 @@ class StreamingEngine:
         self._queues.clear()
         self._heap.clear()
         self._n_pending = 0
+        self._shed_from = None
 
 
 # ---------------------------------------------------------------------------
@@ -663,6 +919,10 @@ class ShardedStreamingEngine:
         # Legacy exactly-once logs from resharding restores:
         # [{"n_shards": N_old, "logs": [{"watermark", "processed_above"}]}]
         self._legacy: List[dict] = []
+        # Router-level dead letters: events with no owner shard (global
+        # user id out of range) — per-shard queues hold the rest.
+        self.dead_letter: deque = deque(maxlen=1024)
+        self.router_dead_letters = 0
 
     @classmethod
     def create(cls, spec: UserShardSpec, params: TifuParams,
@@ -698,6 +958,18 @@ class ShardedStreamingEngine:
         """Total events applied across all shards."""
         return sum(sh.metrics.events_processed for sh in self.shards)
 
+    @property
+    def dead_letters(self) -> int:
+        """Total quarantined events (router-level plus every shard)."""
+        return (self.router_dead_letters
+                + sum(sh.metrics.dead_letters for sh in self.shards))
+
+    @property
+    def backpressure_rejections(self) -> int:
+        """Total backpressure-shed events across all shards."""
+        return sum(sh.metrics.backpressure_rejections
+                   for sh in self.shards)
+
     def _legacy_processed(self, user: int, seqno: int) -> bool:
         """True when a pre-reshard deployment already processed seqno.
 
@@ -712,26 +984,63 @@ class ShardedStreamingEngine:
                 return True
         return False
 
-    def submit(self, events: Iterable[Event]) -> None:
+    def submit(self, events: Iterable[Event], *,
+               on_invalid: str = "raise",
+               on_overflow: str = "raise") -> AdmissionResult:
         """Assign global seqnos and route events to their owner shards.
 
         Explicit-seqno events (at-least-once redelivery) are first
         checked against the legacy logs of any previous shard layout,
         then against the owner shard's live log (inside the shard's own
-        ``submit``).  Cost: O(1) per event plus O(#reshards) dedup.
+        ``submit``).  Events whose GLOBAL user id has no owner shard
+        raise/quarantine at the router (``self.dead_letter``); all other
+        validation/backpressure happens in the owner shard and is
+        aggregated into one :class:`AdmissionResult` (or one
+        :class:`Backpressure`, raised after the call's admissible events
+        are enqueued).  A seqno-less event probes the owner shard
+        BEFORE a global seqno is assigned: a shed event must stay
+        seqno-less (it was never delivered), or its burned seqno becomes
+        a permanent gap in the shard's log.  Cost: O(1) per event plus
+        O(#reshards) dedup.
         """
+        if on_invalid not in ("raise", "quarantine"):
+            raise ValueError(f"on_invalid={on_invalid!r}")
+        if on_overflow not in ("raise", "shed"):
+            raise ValueError(f"on_overflow={on_overflow!r}")
+        res = AdmissionResult()
         for ev in events:
-            if ev.seqno < 0:
-                ev = dataclasses.replace(ev, seqno=self._next_seqno)
-                self._next_seqno += 1
-            else:
+            explicit = ev.seqno >= 0
+            if explicit:
                 self._next_seqno = max(self._next_seqno, ev.seqno + 1)
                 if self._legacy and self._legacy_processed(ev.user,
                                                            ev.seqno):
+                    res.deduped += 1
                     continue
-            shard = self.spec.shard_of(ev.user)
-            self.shards[shard].submit([dataclasses.replace(
-                ev, user=int(self.spec.local_row(ev.user)))])
+            if not 0 <= ev.user < self.spec.n_users:
+                reason = (f"user {ev.user} outside the deployment's "
+                          f"[0, {self.spec.n_users}) global range")
+                if on_invalid == "raise":
+                    raise InvalidEventError(ev, reason)
+                self.dead_letter.append((ev, reason))
+                self.router_dead_letters += 1
+                res.quarantined += 1
+                continue
+            sh = self.shards[self.spec.shard_of(ev.user)]
+            if not explicit:
+                if sh._would_shed(None):
+                    sh.metrics.backpressure_rejections += 1
+                    res.rejected += 1
+                    continue
+                ev = dataclasses.replace(ev, seqno=self._next_seqno)
+                self._next_seqno += 1
+            res.merge(sh.submit(
+                [dataclasses.replace(
+                    ev, user=int(self.spec.local_row(ev.user)))],
+                on_invalid=on_invalid, on_overflow="shed"))
+        if res.rejected and on_overflow == "raise":
+            raise Backpressure(res.admitted, res.rejected,
+                               res.first_rejected_seqno, self.n_pending)
+        return res
 
     def add_basket(self, user: int, items: Sequence[int]) -> None:
         """Enqueue one basket addition (Eq. 7–9) for global ``user``."""
@@ -845,8 +1154,14 @@ class ShardedStreamingEngine:
         os.makedirs(directory, exist_ok=True)
         man_path = os.path.join(directory, _SHARD_MANIFEST)
         if os.path.exists(man_path):
-            with open(man_path) as f:
-                man = json.load(f)
+            try:
+                man = load_json_checked(man_path)
+            except CorruptCheckpointError as e:
+                raise CorruptCheckpointError(
+                    f"existing manifest {man_path} is torn/corrupt "
+                    f"({e}); refusing to commit over a directory whose "
+                    "layout cannot be verified — use a fresh directory "
+                    "or restore first") from e
             if man["n_shards"] != self.spec.n_shards \
                     or man["n_users"] != self.spec.n_users:
                 raise ValueError(
@@ -879,8 +1194,14 @@ class ShardedStreamingEngine:
         man_path = os.path.join(directory, _SHARD_MANIFEST)
         man = None
         if os.path.exists(man_path):
-            with open(man_path) as f:
-                man = json.load(f)
+            try:
+                man = load_json_checked(man_path)
+            except CorruptCheckpointError as e:
+                raise CorruptCheckpointError(
+                    f"sharded checkpoint manifest {man_path} is "
+                    f"torn/corrupt ({e}); the per-shard commits may "
+                    "still be intact — restore shard directories "
+                    "individually or rebuild the manifest") from e
             n_old = man["n_shards"]
             if man["n_users"] != self.spec.n_users:
                 raise ValueError(
@@ -892,6 +1213,20 @@ class ShardedStreamingEngine:
         else:
             raise FileNotFoundError(
                 f"no {_SHARD_MANIFEST} manifest or LATEST in {directory}")
+        # every shard directory must hold a restorable commit before ANY
+        # shard is touched: failing fast with the offending path beats a
+        # bare traceback after half the fleet was already overwritten
+        missing = [d for d in dirs
+                   if not (os.path.exists(os.path.join(d, "LATEST"))
+                           or os.path.exists(os.path.join(d,
+                                                          "LATEST.prev")))]
+        if missing:
+            raise FileNotFoundError(
+                f"sharded checkpoint {directory} declares {n_old} "
+                f"shard(s) but is missing commit(s) in: "
+                f"{', '.join(missing)} — expected shard_000 … "
+                f"shard_{n_old - 1:03d}, each holding a LATEST (or "
+                "LATEST.prev) commit")
         self._legacy = self._parse_legacy(man.get("legacy_logs", [])
                                           if man else [])
         if n_old == self.spec.n_shards:
@@ -902,6 +1237,27 @@ class ShardedStreamingEngine:
                 + ([man["next_seqno"]] if man else []))
         else:
             self._restore_resharded(dirs, n_old)
+
+    def recover_shard(self, shard: int, directory: str) -> dict:
+        """Re-restore ONE shard's commit with its serving kept degraded.
+
+        Freezes the shard's serving corpus first, so cross-shard
+        ``recommend`` keeps answering from the pinned snapshot (stale
+        but well-formed) while the shard's state store restores from its
+        last good commit — the other shards are untouched.  On success
+        serving thaws to the recovered state and the shard's recovery
+        info (``{"source", "skipped"}``, see
+        ``state_store.load_checkpoint_arrays``) is returned; on failure
+        the shard STAYS frozen, still answering from the snapshot, and
+        the error propagates.
+        """
+        sh = self.shards[shard]
+        sh.freeze_serving()
+        sh.restore(self._shard_dir(directory, shard))
+        info = dict(sh.store.last_restored_meta.get(
+            "_recovery", {"source": "LATEST", "skipped": []}))
+        sh.thaw_serving()
+        return info
 
     def _restore_resharded(self, dirs: List[str], n_old: int) -> None:
         """N→M restore: re-partition states, demote old logs to legacy."""

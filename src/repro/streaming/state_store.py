@@ -13,7 +13,14 @@ rows dirty (``invalidate_users``) and ``corpus()`` refreshes only them —
 high-QPS serving no longer pays a full scale×raw recompute per query.
 
 Checkpointing + the idempotent update log give exactly-once semantics
-across preemptions (DESIGN.md §5).
+across preemptions (DESIGN.md §5).  Every commit is checksummed (CRC32
+of the state npz recorded in ``LATEST``, plus a self-CRC of the
+metadata itself), the previous commit survives as ``LATEST.prev``, and
+restore falls back to the last commit that verifies — so torn or
+bit-flipped checkpoint files are *detected*, never silently installed
+(DESIGN.md §9).  Store I/O retries transient failures with exponential
+backoff under a bounded budget; the fault sites exercised by
+``streaming.faults`` sit exactly on the commit/read path.
 """
 from __future__ import annotations
 
@@ -21,7 +28,10 @@ import dataclasses
 import functools
 import json
 import os
-from typing import Optional, Set
+import time
+import zipfile
+import zlib
+from typing import Callable, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +39,16 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.types import StreamState, _pow2_pad
+from repro.streaming import faults
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint file failed its integrity check (torn or bit-flipped).
+
+    Raised only when NO commit in the directory verifies — a corrupt
+    newest commit with an intact ``LATEST.prev`` falls back silently
+    (counted in :attr:`StateStore.restore_fallbacks`).
+    """
 
 
 @dataclasses.dataclass
@@ -52,6 +72,10 @@ class StoreConfig:
     # one full materialize beats a huge scattered row refresh (ROADMAP:
     # very high delete rates)
     corpus_rebuild_frac: float = 0.25
+    # bounded I/O retry budget for checkpoint/restore file operations:
+    # transient errors back off base·2^i and then surface (DESIGN.md §9)
+    io_retries: int = 4
+    io_retry_base_s: float = 0.005
 
 
 def _fsync_dir(path: str) -> None:
@@ -67,45 +91,197 @@ def _fsync_dir(path: str) -> None:
         os.close(fd)
 
 
-def atomic_write_json(path: str, payload: dict) -> None:
+def with_io_retries(fn: Callable, what: str, retries: int = 4,
+                    base_delay_s: float = 0.005,
+                    on_retry: Optional[Callable] = None):
+    """Run ``fn`` retrying transient OSErrors with exponential backoff.
+
+    Bounded budget: ``retries`` re-attempts (delays ``base_delay_s · 2^i``)
+    and then the last error propagates — a dead disk must surface, not
+    spin.  ``FileNotFoundError`` is never retried (it is a *state*, not a
+    transient), and injected crashes (``faults.InjectedCrash`` is a
+    BaseException) pass straight through, exactly like a real SIGKILL.
+    ``on_retry`` is called once per re-attempt (metrics hook).
+    """
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except FileNotFoundError:
+            raise
+        except OSError as e:
+            if attempt == retries:
+                raise OSError(
+                    f"{what}: I/O retry budget exhausted "
+                    f"({retries} retries): {e}") from e
+            if on_retry is not None:
+                on_retry()
+            time.sleep(base_delay_s * (2 ** attempt))
+
+
+def _meta_crc(payload: dict) -> int:
+    """Self-CRC of a metadata payload (over canonical json, crc excluded)."""
+    probe = {k: v for k, v in payload.items() if k != "meta_crc32"}
+    return zlib.crc32(json.dumps(probe, sort_keys=True).encode())
+
+
+def _file_crc(path: str) -> tuple:
+    """``(crc32, n_bytes)`` of a file, read in chunks."""
+    crc, n = 0, 0
+    with open(path, "rb") as f:
+        while True:
+            chunk = f.read(1 << 20)
+            if not chunk:
+                return crc, n
+            crc = zlib.crc32(chunk, crc)
+            n += len(chunk)
+
+
+def atomic_write_json(path: str, payload: dict, retries: int = 4,
+                      base_delay_s: float = 0.005,
+                      on_retry: Optional[Callable] = None) -> None:
     """Write json atomically and durably (the commit-point primitive).
 
     Tmp-file + fsync + ``os.replace`` + directory fsync, so a crash —
     process OR system — leaves either the previous intact file or
     nothing, never a truncated one (the same contract as the state npz
-    writes).
+    writes).  A self-CRC (``meta_crc32``) is stamped into the payload so
+    *silent* corruption of the committed file (bit rot — a fault the
+    rename protocol cannot prevent) is detected on read
+    (:func:`load_json_checked`).  Transient I/O errors are retried under
+    a bounded budget.
     """
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(payload, f)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
-    _fsync_dir(os.path.dirname(path) or ".")
+    payload = dict(payload)
+    payload["meta_crc32"] = _meta_crc(payload)
+    base = os.path.basename(path)
+
+    def write():
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+            f.flush()
+            os.fsync(f.fileno())
+        faults.trip(f"{base}.pre_replace")
+        os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(path) or ".")
+        faults.trip(f"{base}.post_replace")
+
+    with_io_retries(write, f"write {path}", retries, base_delay_s,
+                    on_retry)
 
 
-def load_checkpoint_arrays(directory: str):
-    """Read one checkpoint commit as host arrays: ``(meta, leaves)``.
+def load_json_checked(path: str, retries: int = 4,
+                      base_delay_s: float = 0.005,
+                      on_retry: Optional[Callable] = None) -> dict:
+    """Read a json commit file, verifying its self-CRC when present.
 
-    Reads the ``LATEST`` metadata (the atomic commit point) and the state
-    npz it names, migrating pre-scaled-representation checkpoints (no
-    ``uv_scale``/``lgv_scale`` leaves) to scales of 1.  Shared by
-    :meth:`StateStore.restore` and the resharding restore path
-    (``streaming.engine.ShardedStreamingEngine.restore``, DESIGN.md §7),
-    which reassembles N shard checkpoints without installing them into a
-    same-shape store first.  Cost: one O(state) read, no device work.
+    Raises :class:`CorruptCheckpointError` on undecodable json or a
+    CRC mismatch (torn pre-atomic writers, bit flips); propagates
+    ``FileNotFoundError`` untouched (absence is layout information, not
+    corruption — the restore paths branch on it).  Legacy files without
+    ``meta_crc32`` are accepted unverified.
     """
-    with open(os.path.join(directory, "LATEST")) as f:
-        meta = json.load(f)
+    base = os.path.basename(path)
+
+    def read():
+        faults.trip(f"{base}.read")
+        # bytes, decoded below: a bit flip can produce invalid UTF-8,
+        # which is corruption, not an I/O error to retry
+        with open(path, "rb") as f:
+            return f.read()
+
+    raw = with_io_retries(read, f"read {path}", retries, base_delay_s,
+                          on_retry)
+    try:
+        meta = json.loads(raw.decode("utf-8"))
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"{path} is not valid json (torn write or bit flip?): "
+            f"{e}") from e
+    if not isinstance(meta, dict):
+        raise CorruptCheckpointError(f"{path}: expected a json object")
+    want = meta.get("meta_crc32")
+    if want is not None and _meta_crc(meta) != want:
+        raise CorruptCheckpointError(
+            f"{path} failed its integrity check "
+            f"(meta_crc32={want}, computed={_meta_crc(meta)}): "
+            "bit-flipped or hand-edited")
+    return meta
+
+
+def _load_commit(directory: str, meta: dict):
+    """Load + verify the state npz a commit's metadata names.
+
+    Raises :class:`CorruptCheckpointError` when the npz misses the CRC
+    recorded at commit time or cannot be parsed; legacy commits without
+    ``npz_crc32`` skip the CRC check (their zip structure still has to
+    parse).
+    """
     step = meta["step"]
     path = os.path.join(directory, f"state_{step:010d}.npz")
-    data = np.load(path)
-    leaves = {k: np.asarray(data[k]) for k in data.files}
+    want = meta.get("npz_crc32")
+    if want is not None:
+        crc, n = with_io_retries(lambda: _file_crc(path), f"crc {path}")
+        if crc != want:
+            raise CorruptCheckpointError(
+                f"{path} failed its CRC check (recorded {want}, computed "
+                f"{crc} over {n} bytes): torn or bit-flipped")
+
+    def read():
+        faults.trip("npz.read")
+        with np.load(path) as data:
+            return {k: np.asarray(data[k]) for k in data.files}
+
+    try:
+        leaves = with_io_retries(read, f"read {path}")
+    except FileNotFoundError:
+        raise
+    except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+        raise CorruptCheckpointError(f"{path} unreadable: {e}") from e
     for scale in ("uv_scale", "lgv_scale"):
         if scale not in leaves:
             leaves[scale] = np.ones(leaves["err_mult"].shape,
                                     leaves["err_mult"].dtype)
-    return meta, leaves
+    return leaves
+
+
+def load_checkpoint_arrays(directory: str):
+    """Read the newest VERIFIED commit as host arrays: ``(meta, leaves)``.
+
+    Reads the ``LATEST`` metadata (the atomic commit point), verifies
+    its self-CRC and the recorded CRC of the state npz it names, and
+    falls back to the previous commit (``LATEST.prev``, kept by
+    :meth:`StateStore.checkpoint`) when the newest one is corrupt — the
+    state and its exactly-once log always fall back *together*, so a
+    replay re-applies exactly what the surviving commit has not seen
+    (never a double-apply).  Pre-scaled-representation checkpoints (no
+    ``uv_scale``/``lgv_scale`` leaves) migrate to scales of 1.  Shared
+    by :meth:`StateStore.restore` and the resharding restore path
+    (``streaming.engine.ShardedStreamingEngine.restore``, DESIGN.md §7).
+    The chosen commit and any corruption skipped on the way are recorded
+    under ``meta["_recovery"]``.  Cost: one O(state) read, no device
+    work.
+    """
+    errors = []
+    tried = False
+    for name in ("LATEST", "LATEST.prev"):
+        path = os.path.join(directory, name)
+        if not os.path.exists(path):
+            continue
+        tried = True
+        try:
+            meta = load_json_checked(path)
+            leaves = _load_commit(directory, meta)
+        except (CorruptCheckpointError, OSError) as e:
+            errors.append(f"{name}: {e}")
+            continue
+        meta["_recovery"] = {"source": name, "skipped": list(errors)}
+        return meta, leaves
+    if not tried:
+        raise FileNotFoundError(
+            f"no LATEST (or LATEST.prev) commit in {directory}")
+    raise CorruptCheckpointError(
+        f"no commit in {directory} passes its integrity checks: "
+        + "; ".join(errors))
 
 
 def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
@@ -154,10 +330,20 @@ class StateStore:
                                       sh, is_leaf=lambda x: x is None)
         self._corpus: Optional[jax.Array] = None
         self._dirty: Set[int] = set()
+        # degraded-serving freeze (DESIGN.md §9): while frozen, corpus()
+        # keeps answering from this snapshot and performs no refreshes
+        self._frozen_corpus: Optional[jax.Array] = None
         self.corpus_full_builds = 0
         self.corpus_rows_refreshed = 0
         self.corpus_threshold_rebuilds = 0
+        # robustness counters (observability only)
+        self.io_retries = 0
+        self.restore_fallbacks = 0
+        self.corruption_detected = 0
         self.last_restored_meta: dict = {}
+
+    def _on_io_retry(self) -> None:
+        self.io_retries += 1
 
     # -- serving corpus cache (DESIGN.md §3.6) --------------------------------
 
@@ -176,6 +362,31 @@ class StateStore:
         self._corpus = None
         self._dirty.clear()
 
+    def freeze_serving(self) -> None:
+        """Enter degraded serving: pin the current corpus snapshot.
+
+        While frozen, :meth:`corpus` answers from the pinned snapshot
+        and performs NO refreshes or rebuilds — so ``recommend`` keeps
+        working (on admittedly stale values) while this store's state is
+        being recovered underneath it (restore, resharding).  If no
+        corpus is cached yet, one is materialized first.  Idempotent.
+        """
+        if self._frozen_corpus is None:
+            self._frozen_corpus = self.corpus()
+
+    def thaw_serving(self) -> None:
+        """Leave degraded serving: un-pin the snapshot.
+
+        The next :meth:`corpus` call serves the live state again
+        (restore paths invalidate the cache, so it rebuilds fresh).
+        """
+        self._frozen_corpus = None
+
+    @property
+    def serving_degraded(self) -> bool:
+        """True while :meth:`freeze_serving` is in effect."""
+        return self._frozen_corpus is not None
+
     def corpus(self) -> jax.Array:
         """The materialized true-value corpus f32[n_users, n_items].
 
@@ -190,7 +401,13 @@ class StateStore:
         invalidation.  Finish (or copy) a request batch before applying
         the next micro-batch's refresh — the serving loop here is
         synchronous, matching launch/serve.py.
+
+        DEGRADED MODE: while :meth:`freeze_serving` is in effect the
+        pinned snapshot is returned as-is (no refresh, no rebuild) —
+        dirty rows keep accumulating and are reconciled at thaw.
         """
+        if self._frozen_corpus is not None:
+            return self._frozen_corpus
         if self._corpus is None:
             self._corpus = self.state.materialized_user_vecs()
             self._dirty.clear()
@@ -224,9 +441,13 @@ class StateStore:
 
         The state npz is made durable FIRST; the ``LATEST`` metadata
         write (which carries ``extra_meta``, e.g. the engine's
-        exactly-once log) is the single atomic commit point — see the
-        comment at the write below.  Cost: one O(state) device fetch +
-        compressed write.
+        exactly-once log, plus the npz's CRC32) is the single atomic
+        commit point — see the comment at the write below.  The previous
+        ``LATEST`` survives as ``LATEST.prev`` (byte-for-byte, its
+        self-CRC stays valid), giving restore a verified fallback commit
+        when the newest one is later found corrupted (DESIGN.md §9).
+        Transient I/O errors retry under the config's bounded budget.
+        Cost: one O(state) device fetch + compressed write.
         """
         os.makedirs(directory, exist_ok=True)
         path = os.path.join(directory, f"state_{step:010d}.npz")
@@ -242,15 +463,32 @@ class StateStore:
             "uv_scale": np.asarray(self.state.uv_scale),
             "lgv_scale": np.asarray(self.state.lgv_scale),
         }
-        with open(tmp, "wb") as f:
-            np.savez_compressed(f, **leaves)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-        _fsync_dir(directory)
+
+        def write_npz():
+            faults.trip("npz.pre_write")
+            with open(tmp, "wb") as f:
+                np.savez_compressed(f, **leaves)
+                f.flush()
+                os.fsync(f.fileno())
+            # CRC over the durable tmp bytes: recorded in LATEST, checked
+            # on every restore — a tear or bit flip between now and then
+            # cannot be installed silently
+            crc, n = _file_crc(tmp)
+            faults.trip("npz.pre_replace")
+            os.replace(tmp, path)
+            _fsync_dir(directory)
+            faults.trip("npz.post_replace")
+            return crc, n
+
+        crc, n_bytes = with_io_retries(
+            write_npz, f"write {path}", self.cfg.io_retries,
+            self.cfg.io_retry_base_s, self._on_io_retry)
+        self._retain_previous_commit(directory)
         meta = dict(step=step, **dataclasses.asdict(self.cfg))
         meta["user_axes"] = list(meta["user_axes"])
         meta["item_axes"] = list(meta["item_axes"])
+        meta["npz_crc32"] = crc
+        meta["npz_bytes"] = n_bytes
         if extra_meta:
             meta.update(extra_meta)
         # LATEST is the single commit point: the npz above is durable
@@ -258,8 +496,37 @@ class StateStore:
         # (the engine's exactly-once log) rides in the SAME atomic write
         # — a crash anywhere leaves the previous checkpoint fully
         # consistent, never a new state with an old log.
-        atomic_write_json(os.path.join(directory, "LATEST"), meta)
+        atomic_write_json(os.path.join(directory, "LATEST"), meta,
+                          self.cfg.io_retries, self.cfg.io_retry_base_s,
+                          self._on_io_retry)
         return path
+
+    def _retain_previous_commit(self, directory: str) -> None:
+        """Copy the current ``LATEST`` to ``LATEST.prev`` (atomically).
+
+        Byte-for-byte, so the copied file's self-CRC stays valid; a
+        crash between the copy and the new ``LATEST`` replace leaves
+        ``LATEST == LATEST.prev`` — consistent.  The fallback depth is
+        deliberately one: state and exactly-once log always travel
+        together, and a two-commits-old state converges by replay.
+        """
+        cur = os.path.join(directory, "LATEST")
+        if not os.path.exists(cur):
+            return
+
+        def copy():
+            with open(cur, "rb") as f:
+                raw = f.read()
+            tmp = cur + ".prev.tmp"
+            with open(tmp, "wb") as f:
+                f.write(raw)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, cur + ".prev")
+            _fsync_dir(directory)
+
+        with_io_retries(copy, f"retain {cur}.prev", self.cfg.io_retries,
+                        self.cfg.io_retry_base_s, self._on_io_retry)
 
     def _validate_meta(self, meta: dict) -> None:
         """Reject checkpoints written under different shape dimensions.
@@ -311,6 +578,10 @@ class StateStore:
         """
         meta, leaves = load_checkpoint_arrays(directory)
         self._validate_meta(meta)
+        rec = meta.get("_recovery", {})
+        if rec.get("source") not in (None, "LATEST"):
+            self.restore_fallbacks += 1
+        self.corruption_detected += len(rec.get("skipped", ()))
         self.last_restored_meta = meta
         step = meta["step"]
         self.install_state(StreamState(

@@ -1,0 +1,265 @@
+"""Chaos soak (DESIGN.md §9, the PR's headline gate): the 520-event
+mixed stream driven under ~150 seeded fault schedules — a process crash
+at every commit site (killing a chosen shard's commit), torn and
+bit-flipped checkpoint files of every class, transient I/O errors, and
+seeded at-least-once redelivery — at 1, 2, and 4 shards.
+
+Every schedule must end with the recovered engine BITWISE identical to
+the fault-free run: per-user materialized state equal to the fault-free
+single-shard engine, recommendations equal to its fused serving path,
+and state allclose (1e-4) to the paper-faithful float32 RefEngine.  No
+event may be lost, double-applied, or resurrected.
+
+A handful of unmarked quick schedules run in tier-1; the full sweep is
+``pytest -m chaos`` (deselected by default via pyproject addopts).
+``CHAOS_SCHEDULES=<k>`` caps the per-shard-level schedule count for CI
+smoke budgets (deterministic stride subsample)."""
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import RefEngine, TifuParams, knn
+from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
+from repro.parallel.sharding import UserShardSpec
+from repro.streaming import (Event, ShardedStreamingEngine, StateStore,
+                             StoreConfig, StreamingEngine, faults)
+
+P = TifuParams(n_items=41, group_size=3, r_b=0.9, r_g=0.7)
+M, N, B = 8, 48, 6
+TOPN, K_NN = 5, 4
+SEG1, SEG2 = 200, 380          # checkpoint boundaries in the 520 stream
+
+
+def build(n_shards):
+    """A fresh engine: the flat single engine at 1, sharded above."""
+    if n_shards == 1:
+        store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                       max_baskets=N, max_basket_size=B))
+        return StreamingEngine(store, P, batch_size=16)
+    return ShardedStreamingEngine.create(
+        UserShardSpec(M, n_shards), P, max_baskets=N, max_basket_size=B,
+        batch_size=16)
+
+
+def state_rows(eng):
+    """Global [M, n_items] materialized user vectors."""
+    if isinstance(eng, StreamingEngine):
+        return np.asarray(eng.store.state.materialized_user_vecs())
+    out = np.empty((M, P.n_items), np.float32)
+    for u in range(M):
+        s, r = eng.spec.shard_of(u), eng.spec.local_row(u)
+        out[u] = np.asarray(
+            eng.shards[s].store.state.materialized_user_vecs()[r])
+    return out
+
+
+def random_mixed_events(rng, ref, n_events):
+    """Valid mixed add/del-basket/del-item stream with explicit seqnos,
+    applied to ``ref`` as drawn (same construction as the sharded
+    acceptance stream)."""
+    events = []
+    for seqno in range(n_events):
+        u = int(rng.integers(0, M))
+        st = ref.state(u)
+        nb = st.n_baskets
+        if nb == 0 or (rng.random() < 0.6 and nb < N - 2):
+            items = rng.choice(P.n_items, size=int(rng.integers(1, B)),
+                               replace=False).astype(np.int32)
+            ref.add_basket(u, items)
+            events.append(Event(KIND_ADD_BASKET, u, items=items,
+                                seqno=seqno))
+        elif rng.random() < 0.5:
+            pos = int(rng.integers(0, nb))
+            ref.delete_basket(u, pos)
+            events.append(Event(KIND_DEL_BASKET, u, pos=pos, seqno=seqno))
+        else:
+            pos = int(rng.integers(0, nb))
+            item = int(rng.choice(st.history[pos]))
+            ref.delete_item(u, pos, item)
+            events.append(Event(KIND_DEL_ITEM, u, pos=pos, item=item,
+                                seqno=seqno))
+    return events
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    """Fault-free ground truth: one 520-event stream, drained through a
+    single engine (existing acceptance tests pin that 2/4-shard runs
+    match it bitwise), plus the RefEngine oracle."""
+    rng = np.random.default_rng(7)
+    ref = RefEngine(P, dtype=np.float32)
+    events = random_mixed_events(rng, ref, 520)
+    eng = build(1)
+    eng.submit(events)
+    assert eng.run_until_drained() == len(events)
+    return {"events": events,
+            "state": state_rows(eng),
+            "recs": eng.recommend(np.arange(M), topn=TOPN, k=K_NN),
+            "ref_vecs": np.stack([ref.state(u).user_vec.astype(np.float32)
+                                  for u in range(M)])}
+
+
+# ---------------------------------------------------------------------------
+# The schedule driver
+# ---------------------------------------------------------------------------
+
+def run_schedule(n_shards, sched, baseline, tmp_path):
+    """Drive the stream with one injected fault, 'restart the process',
+    recover, replay at-least-once, and assert bitwise equality."""
+    kind, a, b, redeliver_seed = sched
+    events = baseline["events"]
+    ck = str(tmp_path / "ck")
+
+    eng = build(n_shards)
+    eng.submit(events[:SEG1])
+    eng.run_until_drained()
+    eng.checkpoint(ck, 1)
+    eng.submit(events[SEG1:SEG2])
+    eng.run_until_drained()
+
+    if kind == "crash":
+        plan = faults.FaultPlan(crash_site=a, crash_on_hit=b)
+        with faults.inject(plan):
+            try:
+                eng.checkpoint(ck, 2)
+                crashed = False
+            except faults.InjectedCrash:
+                crashed = True
+        assert crashed, f"schedule never reached fault site {a!r}"
+    elif kind == "io" and not a.endswith(".read"):
+        plan = faults.FaultPlan(io_errors={a: b})
+        with faults.inject(plan):
+            eng.checkpoint(ck, 2)        # transient errors absorbed
+        assert plan.io_errors[a] == 0
+    else:
+        # .read-site io errors fire during the restore below
+        eng.checkpoint(ck, 2)
+
+    if kind == "corrupt":
+        d = ck if n_shards == 1 else os.path.join(ck, f"shard_{b:03d}")
+        if a == "latest_flip":
+            faults.bitflip_file(os.path.join(d, "LATEST"),
+                                seed=redeliver_seed, n_bits=8)
+        elif a == "latest_tear":
+            faults.tear_file(os.path.join(d, "LATEST"), keep_frac=0.5)
+        elif a == "latest_tear0":
+            faults.tear_file(os.path.join(d, "LATEST"), keep_frac=0.0)
+        elif a == "npz_flip":
+            faults.bitflip_file(os.path.join(d, "state_0000000002.npz"),
+                                seed=redeliver_seed, n_bits=8)
+        else:
+            faults.tear_file(os.path.join(d, "state_0000000002.npz"),
+                             keep_frac=0.5)
+
+    # "process restart": fresh engine, restore, at-least-once replay.
+    # FIRST deliveries replay in seqno order (the delivery contract,
+    # DESIGN.md §7.2); the shuffled seeded duplicates — now all copies
+    # of delivered events — arrive after, in any order, half-way
+    # through processing and again at the end.
+    eng2 = build(n_shards)
+    if kind == "io" and a.endswith(".read"):
+        plan = faults.FaultPlan(io_errors={a: b})
+        with faults.inject(plan):
+            eng2.restore(ck)
+        assert plan.io_errors[a] == 0    # retries absorbed them all
+    else:
+        eng2.restore(ck)
+    eng2.submit(events)
+    dups = faults.redelivered(events, seed=redeliver_seed)
+    eng2.submit(dups)
+    eng2.step()
+    eng2.submit(dups)
+    eng2.run_until_drained()
+    eng2.submit(dups)                    # late duplicates after drain
+    assert eng2.run_until_drained() == 0
+
+    got = state_rows(eng2)
+    np.testing.assert_array_equal(got, baseline["state"],
+                                  err_msg=f"state diverged: {sched}")
+    np.testing.assert_allclose(got, baseline["ref_vecs"], atol=1e-4,
+                               err_msg=f"ref oracle diverged: {sched}")
+    recs = eng2.recommend(np.arange(M), topn=TOPN, k=K_NN)
+    np.testing.assert_array_equal(recs, baseline["recs"],
+                                  err_msg=f"recs diverged: {sched}")
+    # a valid stream must never shed or quarantine anything
+    if isinstance(eng2, StreamingEngine):
+        assert eng2.metrics.dead_letters == 0
+        assert eng2.metrics.backpressure_rejections == 0
+    else:
+        assert eng2.dead_letters == 0
+        assert eng2.backpressure_rejections == 0
+
+
+# ---------------------------------------------------------------------------
+# Schedule enumeration (deterministic)
+# ---------------------------------------------------------------------------
+
+CORRUPT_CLASSES = ("latest_flip", "latest_tear", "latest_tear0",
+                   "npz_flip", "npz_tear")
+IO_SITES = ("npz.pre_write", "npz.pre_replace", "LATEST.pre_replace",
+            "LATEST.read", "npz.read")
+
+
+def all_schedules(n_shards):
+    """(kind, a, b, redelivery_seed) tuples: crash site x victim shard,
+    corruption class x shard, transient I/O site, redelivery seeds."""
+    scheds = []
+    sites = (faults.SHARD_CRASH_SITES if n_shards > 1
+             else faults.CRASH_SITES)
+    for site in sites:
+        one_hit = site.startswith("SHARDS") or n_shards == 1
+        for hit in ((1,) if one_hit else (1, n_shards)):
+            for rs in (0, 1):
+                scheds.append(("crash", site, hit, rs))
+    for cls in CORRUPT_CLASSES:
+        for shard in range(n_shards):
+            for rs in (0, 1):
+                scheds.append(("corrupt", cls, shard, rs))
+    for site in IO_SITES:
+        scheds.append(("io", site, 2, 0))
+    for rs in range(4):
+        scheds.append(("redeliver", None, None, rs))
+    cap = int(os.environ.get("CHAOS_SCHEDULES", "0"))
+    if cap and cap < len(scheds):
+        idx = np.linspace(0, len(scheds) - 1, cap).astype(int)
+        scheds = [scheds[i] for i in idx]
+    return scheds
+
+
+def _sched_id(s):
+    return "-".join(str(x) for x in s if x is not None)
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 quick subset (unmarked): one schedule of each fault family
+# ---------------------------------------------------------------------------
+
+QUICK = [
+    (1, ("crash", "LATEST.pre_replace", 1, 0)),
+    (2, ("crash", "npz.post_replace", 2, 1)),
+    (2, ("corrupt", "npz_tear", 0, 0)),
+    (4, ("redeliver", None, None, 3)),
+]
+
+
+@pytest.mark.parametrize("n_shards,sched", QUICK,
+                         ids=[f"S{n}-{_sched_id(s)}" for n, s in QUICK])
+def test_chaos_quick(n_shards, sched, baseline, tmp_path):
+    run_schedule(n_shards, sched, baseline, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Full soak (pytest -m chaos)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("n_shards,sched",
+                         [(n, s) for n in (1, 2, 4)
+                          for s in all_schedules(n)],
+                         ids=[f"S{n}-{_sched_id(s)}" for n in (1, 2, 4)
+                              for s in all_schedules(n)])
+def test_chaos_soak(n_shards, sched, baseline, tmp_path):
+    run_schedule(n_shards, sched, baseline, tmp_path)

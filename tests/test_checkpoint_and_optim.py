@@ -1,4 +1,5 @@
 """Checkpointing (incl. elastic re-mesh restore) and optimizers."""
+import json
 import os
 import subprocess
 import sys
@@ -145,6 +146,16 @@ def test_stream_state_restore_across_representations(tmp_path, rng):
         leaves.pop(key)
     with open(npz, "wb") as f:
         np.savez_compressed(f, **leaves)
+    # a genuinely pre-scale-era checkpoint also predates the commit
+    # CRCs (DESIGN.md §9.1) — strip them so the simulation restores via
+    # the legacy-accept path instead of (correctly) failing integrity
+    latest = os.path.join(d_pre, "LATEST")
+    with open(latest) as f:
+        meta = json.load(f)
+    for key in ("meta_crc32", "npz_crc32", "npz_bytes"):
+        meta.pop(key, None)
+    with open(latest, "w") as f:
+        json.dump(meta, f)
 
     for directory in (d_scaled, d_pre):
         restored = make_store()

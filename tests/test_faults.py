@@ -1,0 +1,603 @@
+"""Durable ingestion + recovery hardening (DESIGN.md §9): eager event
+validation, dead-letter quarantine, backpressure shedding without event
+loss, checksum-verified commits with fallback to the last good pair,
+bounded I/O retries, degraded serving, and the sharded restore
+diagnostics.  The systematic crash/corruption sweep lives in
+test_chaos_soak.py."""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import RefEngine, TifuParams
+from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
+                              KIND_DEL_ITEM)
+from repro.parallel.sharding import UserShardSpec
+from repro.streaming import (AdmissionResult, Backpressure,
+                             CorruptCheckpointError, Event,
+                             InvalidEventError, ShardedStreamingEngine,
+                             StateStore, StoreConfig, StreamingEngine,
+                             with_io_retries)
+from repro.streaming import faults
+
+P = TifuParams(n_items=29, group_size=3)
+M = 8           # users
+NB, BS = 24, 6  # max_baskets, max_basket_size
+
+
+def make_engine(n_users=M, batch_size=16, **kw):
+    store = StateStore(StoreConfig(n_users=n_users, n_items=P.n_items,
+                                   max_baskets=NB, max_basket_size=BS))
+    return StreamingEngine(store, P, batch_size=batch_size, **kw), store
+
+
+def make_sharded(n_shards, **kw):
+    return ShardedStreamingEngine.create(
+        UserShardSpec(M, n_shards), P, max_baskets=NB, max_basket_size=BS,
+        batch_size=16, **kw)
+
+
+def add_events(rng, n, n_users=M, start_seqno=0):
+    """n valid add-basket events with explicit consecutive seqnos."""
+    return [Event(KIND_ADD_BASKET, int(rng.integers(0, n_users)),
+                  items=rng.choice(P.n_items, size=3,
+                                   replace=False).astype(np.int32),
+                  seqno=start_seqno + i)
+            for i in range(n)]
+
+
+def vecs(store):
+    return np.asarray(store.state.materialized_user_vecs())
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: eager submit validation
+# ---------------------------------------------------------------------------
+
+BAD_EVENTS = [
+    (Event(99, 0, items=np.array([1], np.int32)), "unknown event kind"),
+    (Event(KIND_ADD_BASKET, -1, items=np.array([1], np.int32)), "user -1"),
+    (Event(KIND_ADD_BASKET, M, items=np.array([1], np.int32)), f"user {M}"),
+    (Event(KIND_ADD_BASKET, 0, items=np.array([], np.int32)), "no items"),
+    (Event(KIND_ADD_BASKET, 0, items=np.array([P.n_items], np.int32)),
+     f"item id {P.n_items}"),
+    (Event(KIND_ADD_BASKET, 0, items=np.array([-2], np.int32)),
+     "item id -2"),
+    (Event(KIND_ADD_BASKET, 0, items=np.zeros(BS + 1, np.int32)),
+     "exceeds max_basket_size"),
+    (Event(KIND_DEL_BASKET, 0, pos=-1), "position -1"),
+    (Event(KIND_DEL_BASKET, 0, pos=NB), f"position {NB}"),
+    (Event(KIND_DEL_ITEM, 0, pos=0, item=P.n_items),
+     f"item id {P.n_items}"),
+]
+
+
+@pytest.mark.parametrize("ev,match", BAD_EVENTS,
+                         ids=[m for _, m in BAD_EVENTS])
+def test_submit_rejects_malformed_events_eagerly(ev, match):
+    eng, _ = make_engine()
+    with pytest.raises(InvalidEventError, match=match):
+        eng.submit([ev])
+    assert eng.n_pending == 0           # nothing was half-admitted
+    assert eng.metrics.dead_letters == 0
+
+
+def test_poison_events_quarantine_while_valid_ones_drain(rng):
+    """on_invalid='quarantine': poison lands in the dead-letter queue
+    (with its reason), the engine drains the rest, and the quarantined
+    seqno is consumed — a replay dedups it instead of re-poisoning."""
+    eng, store = make_engine()
+    ref = RefEngine(P, dtype=np.float32)
+    events = add_events(rng, 12)
+    for ev in events:
+        ref.add_basket(ev.user, ev.items)
+    poison = [Event(KIND_ADD_BASKET, M + 5,
+                    items=np.array([1], np.int32), seqno=12),
+              Event(KIND_DEL_ITEM, 0, pos=0, item=-3, seqno=13)]
+    res = eng.submit(events + poison, on_invalid="quarantine")
+    assert (res.admitted, res.quarantined, res.rejected) == (12, 2, 0)
+    assert eng.metrics.dead_letters == 2
+    reasons = [r for _, r in eng.dead_letter]
+    assert "user 13 outside" in reasons[0]
+    assert "item id -3" in reasons[1]
+    assert eng.run_until_drained() == 12
+    np.testing.assert_allclose(
+        vecs(store), np.stack([ref.state(u).user_vec.astype(np.float32)
+                               for u in range(M)]), atol=1e-4)
+    # the whole stream (poison included) is behind the watermark now
+    assert eng.watermark == 13
+    replay = eng.submit(events + poison, on_invalid="quarantine")
+    assert replay.deduped == 14 and replay.quarantined == 0
+    assert eng.metrics.dead_letters == 2    # not re-quarantined
+
+
+def test_apply_time_delete_quarantine_instead_of_wrong_basket(rng):
+    """A delete position beyond the user's CURRENT history passes the
+    static check but would be clipped onto the WRONG basket by the
+    applier — it must quarantine at apply time, leaving state exactly as
+    if the event never existed, while its seqno still advances the log."""
+    eng, store = make_engine()
+    ref = RefEngine(P, dtype=np.float32)
+    baskets = [rng.choice(P.n_items, size=3, replace=False) for _ in range(3)]
+    for b in baskets:
+        eng.add_basket(2, b)
+        ref.add_basket(2, b)
+    eng.run_until_drained()
+    # pos=7 < max_baskets (static-valid) but user 2 has only 3 baskets
+    eng.submit([Event(KIND_DEL_BASKET, 2, pos=7, seqno=3),
+                Event(KIND_ADD_BASKET, 4, seqno=4,
+                      items=np.asarray(baskets[0], np.int32))])
+    eng.run_until_drained()
+    assert eng.metrics.dead_letters == 1
+    _, reason = eng.dead_letter[0]
+    assert "beyond user 2's history of 3 basket(s)" in reason
+    assert int(store.state.n_baskets[2]) == 3      # nothing deleted
+    ref.add_basket(4, baskets[0])
+    np.testing.assert_allclose(vecs(store)[2],
+                               ref.state(2).user_vec.astype(np.float32),
+                               atol=1e-4)
+    assert eng.watermark == 4                      # poison seqno consumed
+    res = eng.submit([Event(KIND_DEL_BASKET, 2, pos=7, seqno=3)])
+    assert res.deduped == 1                        # replay skips it
+
+
+# ---------------------------------------------------------------------------
+# Backpressure: bounded queues, deterministic shedding, no event loss
+# ---------------------------------------------------------------------------
+
+def test_backpressure_raises_after_admitting_prefix(rng):
+    eng, _ = make_engine(max_pending=4)
+    events = add_events(rng, 10)
+    with pytest.raises(Backpressure) as ei:
+        eng.submit(events)
+    assert ei.value.admitted == 4
+    assert ei.value.rejected == 6
+    assert ei.value.first_rejected_seqno == 4
+    assert eng.n_pending == 4                      # prefix stays admitted
+    assert eng.metrics.backpressure_rejections == 6
+
+
+def test_shed_suffix_until_first_rejected_seqno_readmitted(rng):
+    """Once seqno s is shed, seqnos above s keep shedding EVEN AFTER the
+    queues drain: admitting them would open a permanent gap at s, roll
+    the watermark past it, and turn s's redelivery into a dropped
+    'duplicate' (a lost event).  Readmitting s reopens admission, and
+    the replayed suffix converges to the no-fault state."""
+    eng, store = make_engine(max_pending=4)
+    ref = RefEngine(P, dtype=np.float32)
+    events = add_events(rng, 10)
+    for ev in events:
+        ref.add_basket(ev.user, ev.items)
+    res = eng.submit(events, on_overflow="shed")
+    assert (res.admitted, res.rejected) == (4, 6)
+    eng.run_until_drained()
+    # queues empty, but seqno 5 alone must still shed (4 is the gap)
+    res = eng.submit([events[5]], on_overflow="shed")
+    assert res.rejected == 1 and eng.n_pending == 0
+    # contract-abiding source resends from first_rejected_seqno
+    res = eng.submit(events[4:], on_overflow="shed")
+    assert res.admitted == 4 and res.rejected == 2     # hit the mark again
+    eng.run_until_drained()
+    res = eng.submit(events[8:])
+    assert res.admitted == 2
+    eng.run_until_drained()
+    assert eng.watermark == 9
+    np.testing.assert_allclose(
+        vecs(store), np.stack([ref.state(u).user_vec.astype(np.float32)
+                               for u in range(M)]), atol=1e-4)
+
+
+def test_backpressure_sheds_seqnoless_events_without_burning_seqnos(rng):
+    """Auto-seqno sources: shed events never consume a sequence number,
+    so resubmitting the same payloads later just works."""
+    eng, store = make_engine(max_pending=4)
+    ref = RefEngine(P, dtype=np.float32)
+    payloads = [rng.choice(P.n_items, size=3, replace=False) for _ in range(9)]
+    for b in payloads:
+        ref.add_basket(1, b)
+    events = [Event(KIND_ADD_BASKET, 1, items=np.asarray(b, np.int32))
+              for b in payloads]
+    res = eng.submit(events, on_overflow="shed")
+    assert (res.admitted, res.rejected) == (4, 5)
+    assert res.first_rejected_seqno is None
+    assert eng._next_seqno == 4                    # no seqno burned
+    eng.run_until_drained()
+    res = eng.submit(events[4:][:4], on_overflow="shed")
+    assert res.admitted == 4
+    eng.run_until_drained()
+    assert eng.submit(events[8:]).admitted == 1
+    eng.run_until_drained()
+    np.testing.assert_allclose(vecs(store)[1],
+                               ref.state(1).user_vec.astype(np.float32),
+                               atol=1e-4)
+
+
+def test_sharded_backpressure_aggregates_across_shards(rng):
+    """The router probes the owner shard before burning a global seqno;
+    rejected events stay seqno-less and a later resubmit drains fine."""
+    eng = make_sharded(2, max_pending=2)
+    events = [Event(KIND_ADD_BASKET, u % M,
+                    items=rng.choice(P.n_items, size=3,
+                                     replace=False).astype(np.int32))
+              for u in range(12)]
+    res = eng.submit(events, on_overflow="shed")
+    # 2 shards x max_pending=2 admitted, the rest shed, no seqno burned
+    assert (res.admitted, res.rejected) == (4, 8)
+    assert eng._next_seqno == 4
+    eng.run_until_drained()
+    with pytest.raises(Backpressure):
+        eng.submit(events)       # default on_overflow="raise"
+    eng.run_until_drained()
+    res = eng.submit(events[-4:], on_overflow="shed")
+    assert res.admitted == 4
+    assert eng.backpressure_rejections > 0
+
+
+def test_sharded_router_quarantines_unroutable_users():
+    eng = make_sharded(2)
+    bad = Event(KIND_ADD_BASKET, M + 7, items=np.array([1], np.int32))
+    with pytest.raises(InvalidEventError, match="global range"):
+        eng.submit([bad])
+    res = eng.submit([bad], on_invalid="quarantine")
+    assert res.quarantined == 1
+    assert eng.router_dead_letters == 1 and eng.dead_letters == 1
+
+
+# ---------------------------------------------------------------------------
+# Corruption detection + fallback to the last good commit pair
+# ---------------------------------------------------------------------------
+
+def two_commit_dir(rng, tmp_path, n_events=16):
+    """Engine with two checkpoints in one dir; returns (events, dir)."""
+    eng, _ = make_engine()
+    events = add_events(rng, n_events)
+    eng.submit(events[:n_events // 2])
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 1)
+    eng.submit(events[n_events // 2:])
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 2)
+    return events, eng
+
+
+@pytest.mark.parametrize("corrupt", ["bitflip_latest", "tear_latest",
+                                     "bitflip_npz", "tear_npz"])
+def test_corrupt_newest_commit_falls_back_to_prev_pair(rng, tmp_path,
+                                                       corrupt):
+    """Any corruption of the newest commit (metadata or state payload)
+    is caught by its recorded CRC and restore falls back to the previous
+    commit PAIR — state and exactly-once log together — after which a
+    full replay converges to the no-fault state."""
+    events, eng1 = two_commit_dir(rng, tmp_path)
+    d = str(tmp_path)
+    if corrupt == "bitflip_latest":
+        faults.bitflip_file(os.path.join(d, "LATEST"), seed=3)
+    elif corrupt == "tear_latest":
+        faults.tear_file(os.path.join(d, "LATEST"), keep_frac=0.4)
+    elif corrupt == "bitflip_npz":
+        faults.bitflip_file(os.path.join(d, "state_0000000002.npz"),
+                            seed=3, n_bits=4)
+    else:
+        faults.tear_file(os.path.join(d, "state_0000000002.npz"),
+                         keep_frac=0.5)
+    eng2, store2 = make_engine()
+    eng2.restore(d)
+    assert store2.restore_fallbacks == 1
+    assert store2.corruption_detected >= 1
+    assert store2.last_restored_meta["_recovery"]["source"] == "LATEST.prev"
+    assert eng2.watermark == len(events) // 2 - 1     # commit 1's log
+    eng2.submit(events)                               # full replay
+    eng2.run_until_drained()
+    np.testing.assert_array_equal(vecs(store2), vecs(eng1.store))
+
+
+def test_both_commits_corrupt_raises_with_all_errors(rng, tmp_path):
+    two_commit_dir(rng, tmp_path)
+    faults.bitflip_file(os.path.join(str(tmp_path), "LATEST"), seed=1)
+    faults.tear_file(os.path.join(str(tmp_path), "LATEST.prev"),
+                     keep_frac=0.3)
+    eng, _ = make_engine()
+    with pytest.raises(CorruptCheckpointError, match="LATEST.prev"):
+        eng.restore(str(tmp_path))
+
+
+def test_legacy_checkpoint_without_crc_fields_still_restores(rng,
+                                                             tmp_path):
+    """Checkpoints written before the integrity fields existed carry no
+    CRCs: they restore unverified rather than being rejected."""
+    events, eng1 = two_commit_dir(rng, tmp_path)
+    latest = os.path.join(str(tmp_path), "LATEST")
+    with open(latest) as f:
+        meta = json.load(f)
+    for k in ("meta_crc32", "npz_crc32", "npz_bytes"):
+        meta.pop(k)
+    with open(latest, "w") as f:
+        json.dump(meta, f)
+    eng2, store2 = make_engine()
+    eng2.restore(str(tmp_path))
+    assert store2.restore_fallbacks == 0
+    np.testing.assert_array_equal(vecs(store2), vecs(eng1.store))
+
+
+# ---------------------------------------------------------------------------
+# Transient I/O errors: bounded retry-with-backoff
+# ---------------------------------------------------------------------------
+
+def test_transient_write_errors_absorbed_by_retry_budget(rng, tmp_path):
+    eng, store = make_engine()
+    eng.submit(add_events(rng, 6))
+    eng.run_until_drained()
+    plan = faults.FaultPlan(io_errors={"npz.pre_write": 2,
+                                       "LATEST.pre_replace": 1})
+    with faults.inject(plan):
+        eng.checkpoint(str(tmp_path), 1)
+    assert store.io_retries == 3
+    assert plan.io_errors == {"npz.pre_write": 0, "LATEST.pre_replace": 0}
+    eng2, store2 = make_engine()
+    eng2.restore(str(tmp_path))                 # commit is fully intact
+    np.testing.assert_array_equal(vecs(store2), vecs(store))
+
+
+def test_retry_budget_exhaustion_surfaces_an_oserror(rng, tmp_path):
+    eng, store = make_engine()
+    eng.submit(add_events(rng, 4))
+    eng.run_until_drained()
+    plan = faults.FaultPlan(io_errors={"npz.pre_write": 99})
+    with faults.inject(plan):
+        with pytest.raises(OSError, match="retry budget exhausted"):
+            eng.checkpoint(str(tmp_path), 1)
+    assert store.io_retries == store.cfg.io_retries
+
+
+def test_transient_read_errors_absorbed_on_restore(rng, tmp_path):
+    eng, store = make_engine()
+    eng.submit(add_events(rng, 6))
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 1)
+    eng2, store2 = make_engine()
+    with faults.inject(faults.FaultPlan(io_errors={"LATEST.read": 2})):
+        eng2.restore(str(tmp_path))
+    np.testing.assert_array_equal(vecs(store2), vecs(store))
+
+
+def test_with_io_retries_never_retries_file_not_found(tmp_path):
+    calls = []
+
+    def missing():
+        calls.append(1)
+        raise FileNotFoundError("nope")
+
+    with pytest.raises(FileNotFoundError):
+        with_io_retries(missing, "probe")
+    assert len(calls) == 1      # deterministic miss, not transient
+
+
+# ---------------------------------------------------------------------------
+# Degraded serving: recommend keeps answering during recovery
+# ---------------------------------------------------------------------------
+
+def test_frozen_corpus_serves_stale_answers_until_thaw(rng):
+    eng, _ = make_engine()
+    eng.submit(add_events(rng, 12))
+    eng.run_until_drained()
+    users = list(range(M))
+    before = eng.recommend(users, topn=4, k=3)
+    eng.freeze_serving()
+    assert eng.serving_degraded
+    eng.submit(add_events(rng, 12, start_seqno=12))
+    eng.run_until_drained()
+    np.testing.assert_array_equal(eng.recommend(users, topn=4, k=3),
+                                  before)       # stale but well-formed
+    eng.thaw_serving()
+    assert not eng.serving_degraded
+    # after thaw: identical to an engine that saw everything live
+    ctl, _ = make_engine()
+    rng2 = np.random.default_rng(0)
+    ctl.submit(add_events(rng2, 12))
+    ctl.submit(add_events(rng2, 12, start_seqno=12))
+    ctl.run_until_drained()
+    np.testing.assert_array_equal(eng.recommend(users, topn=4, k=3),
+                                  ctl.recommend(users, topn=4, k=3))
+
+
+def test_recover_shard_serves_through_recovery_and_failure(rng, tmp_path):
+    """recover_shard: success thaws onto the recovered state; a FAILED
+    recovery leaves the shard frozen, still answering from the pinned
+    snapshot, with the error surfaced to the caller."""
+    eng = make_sharded(2)
+    events = add_events(rng, 16)
+    eng.submit(events[:8])
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 1)
+    eng.submit(events[8:])
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 2)
+    users = list(range(M))
+    healthy = eng.recommend(users, topn=4, k=3)
+    # newest commit of shard 0 corrupted -> recover from the prev pair
+    shard_dir = os.path.join(str(tmp_path), "shard_000")
+    faults.bitflip_file(os.path.join(shard_dir, "LATEST"), seed=5)
+    info = eng.recover_shard(0, str(tmp_path))
+    assert info["source"] == "LATEST.prev"
+    assert not eng.shards[0].serving_degraded
+    eng.submit(events)                     # replay re-applies the delta
+    eng.run_until_drained()
+    np.testing.assert_array_equal(eng.recommend(users, topn=4, k=3),
+                                  healthy)
+    # now the whole shard directory is unrecoverable: the shard must
+    # stay frozen and cross-shard serving keeps answering
+    faults.bitflip_file(os.path.join(shard_dir, "LATEST"), seed=6)
+    faults.tear_file(os.path.join(shard_dir, "LATEST.prev"), keep_frac=0.2)
+    with pytest.raises(CorruptCheckpointError):
+        eng.recover_shard(0, str(tmp_path))
+    assert eng.shards[0].serving_degraded
+    np.testing.assert_array_equal(eng.recommend(users, topn=4, k=3),
+                                  healthy)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: sharded restore diagnostics
+# ---------------------------------------------------------------------------
+
+def sharded_checkpoint(rng, tmp_path, n_shards=2):
+    eng = make_sharded(n_shards)
+    eng.submit(add_events(rng, 12))
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 1)
+    return eng
+
+
+def test_restore_names_the_missing_shard_directory(rng, tmp_path):
+    sharded_checkpoint(rng, tmp_path)
+    import shutil
+    shutil.rmtree(os.path.join(str(tmp_path), "shard_001"))
+    eng = make_sharded(2)
+    with pytest.raises(FileNotFoundError,
+                       match=r"missing commit\(s\) in: .*shard_001"):
+        eng.restore(str(tmp_path))
+
+
+def test_restore_names_a_partial_shard_directory(rng, tmp_path):
+    """A shard dir that exists but lost its commit files is 'partial';
+    the diagnostic must name it and the expected layout."""
+    sharded_checkpoint(rng, tmp_path)
+    d = os.path.join(str(tmp_path), "shard_000")
+    os.remove(os.path.join(d, "LATEST"))
+    eng = make_sharded(2)
+    with pytest.raises(FileNotFoundError, match="shard_000 … shard_001"):
+        eng.restore(str(tmp_path))
+
+
+def test_restore_reports_torn_manifest(rng, tmp_path):
+    sharded_checkpoint(rng, tmp_path)
+    faults.tear_file(os.path.join(str(tmp_path), "SHARDS"), keep_frac=0.5)
+    eng = make_sharded(2)
+    with pytest.raises(CorruptCheckpointError, match="manifest"):
+        eng.restore(str(tmp_path))
+
+
+def test_checkpoint_refuses_directory_with_corrupt_manifest(rng,
+                                                            tmp_path):
+    eng = sharded_checkpoint(rng, tmp_path)
+    faults.tear_file(os.path.join(str(tmp_path), "SHARDS"), keep_frac=0.6)
+    with pytest.raises(CorruptCheckpointError, match="refusing to commit"):
+        eng.checkpoint(str(tmp_path), 2)
+
+
+def test_bitflip_to_invalid_utf8_reads_as_corruption(rng, tmp_path):
+    """A bit flip that breaks the file's UTF-8 encoding must surface as
+    CorruptCheckpointError, not a raw UnicodeDecodeError (regression).
+    Note the one blind spot, accepted by design: a flip that knocks out
+    the ``meta_crc32`` KEY itself makes the file look legacy (no CRC to
+    verify) — only dropping legacy support would close it."""
+    sharded_checkpoint(rng, tmp_path)
+    path = os.path.join(str(tmp_path), "SHARDS")
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    data[data.index(b'"n_users"') + 2] |= 0x80    # invalid continuation
+    with open(path, "wb") as f:
+        f.write(bytes(data))
+    eng = make_sharded(2)
+    with pytest.raises(CorruptCheckpointError, match="not valid json"):
+        eng.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: legacy ENGINE-file checkpoints through the sharded engine
+# ---------------------------------------------------------------------------
+
+def legacy_flat_checkpoint(rng, tmp_path):
+    """A pre-fold flat checkpoint: separate ENGINE file, no CRC fields."""
+    eng, store = make_engine()
+    events = add_events(rng, 14)
+    eng.submit(events)
+    eng.run_until_drained()
+    eng.checkpoint(str(tmp_path), 1)
+    latest = os.path.join(str(tmp_path), "LATEST")
+    with open(latest) as f:
+        meta = json.load(f)
+    legacy_log = meta.pop("engine")
+    for k in ("meta_crc32", "npz_crc32", "npz_bytes"):
+        meta.pop(k)
+    with open(latest, "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(str(tmp_path), "ENGINE"), "w") as f:
+        json.dump(legacy_log, f)
+    prev = os.path.join(str(tmp_path), "LATEST.prev")
+    if os.path.exists(prev):     # first commit has no retained pair
+        os.remove(prev)
+    return events, eng
+
+
+def test_legacy_engine_file_restores_through_one_shard_router(rng,
+                                                              tmp_path):
+    events, eng1 = legacy_flat_checkpoint(rng, tmp_path)
+    eng = make_sharded(1)
+    eng.restore(str(tmp_path))
+    assert eng.shards[0].watermark == len(events) - 1
+    res = eng.submit(events)               # full replay: all duplicates
+    assert res.deduped == len(events) and res.admitted == 0
+    np.testing.assert_array_equal(
+        np.asarray(eng.shards[0].store.state.materialized_user_vecs()),
+        vecs(eng1.store))
+
+
+def test_legacy_engine_file_reshards_into_two_shards(rng, tmp_path):
+    """The 1→2 reshard path must pick up the legacy ENGINE log as a
+    legacy log — a replay is fully deduped, never double-applied."""
+    events, eng1 = legacy_flat_checkpoint(rng, tmp_path)
+    eng = make_sharded(2)
+    eng.restore(str(tmp_path))
+    res = eng.submit(events)
+    assert res.deduped == len(events) and res.admitted == 0
+    got = np.empty((M, P.n_items), np.float32)
+    for u in range(M):
+        s, r = eng.spec.shard_of(u), eng.spec.local_row(u)
+        got[u] = np.asarray(
+            eng.shards[s].store.state.materialized_user_vecs()[r])
+    np.testing.assert_array_equal(got, vecs(eng1.store))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_plans_do_not_nest():
+    with faults.inject(faults.FaultPlan()):
+        with pytest.raises(RuntimeError, match="do not nest"):
+            with faults.inject(faults.FaultPlan()):
+                pass
+    assert faults.active_plan() is None
+
+
+def test_injected_crash_escapes_except_exception():
+    plan = faults.FaultPlan(crash_site="LATEST.pre_replace")
+    with faults.inject(plan):
+        with pytest.raises(faults.InjectedCrash):
+            try:
+                faults.trip("LATEST.pre_replace")
+            except Exception:      # a retry loop must NOT swallow this
+                pytest.fail("InjectedCrash was caught by except Exception")
+    assert plan.fired == ["LATEST.pre_replace"]
+
+
+def test_crash_on_nth_hit_selects_the_shard():
+    plan = faults.FaultPlan(crash_site="npz.post_replace", crash_on_hit=2)
+    with faults.inject(plan):
+        faults.trip("npz.post_replace")        # shard 0: survives
+        with pytest.raises(faults.InjectedCrash):
+            faults.trip("npz.post_replace")    # shard 1: dies
+    assert plan.fired == ["npz.post_replace"] * 2
+
+
+def test_redelivered_keeps_original_seqnos(rng):
+    events = add_events(rng, 20)
+    dups = faults.redelivered(events, seed=4, dup_frac=0.5)
+    assert 0 < len(dups) < len(events)
+    orig = {ev.seqno: ev for ev in events}
+    for ev in dups:
+        assert dataclasses.asdict(orig[ev.seqno]).keys() == \
+            dataclasses.asdict(ev).keys()
+        assert orig[ev.seqno].user == ev.user

@@ -158,6 +158,11 @@ def test_interrupted_engine_checkpoint_write_is_not_picked_up(rng, tmp_path):
     with open(latest) as f:
         meta = json.load(f)
     legacy_engine = meta.pop("engine")
+    # legacy files predate the integrity fields: drop them too (keeping
+    # a stale meta_crc32 would — correctly — read as corruption)
+    meta.pop("meta_crc32", None)
+    meta.pop("npz_crc32", None)
+    meta.pop("npz_bytes", None)
     with open(latest, "w") as f:
         json.dump(meta, f)
     with open(os.path.join(str(tmp_path), "ENGINE"), "w") as f:

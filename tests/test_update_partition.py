@@ -214,6 +214,16 @@ def test_restore_migrates_prescale_checkpoints(rng, tmp_path):
         old.pop(key)
     with open(path, "wb") as f:
         np.savez_compressed(f, **old)
+    # pre-scale-era checkpoints also predate the commit CRCs (DESIGN.md
+    # §9.1): strip them so the simulation takes the legacy-accept path
+    import json
+    latest = os.path.join(str(tmp_path), "LATEST")
+    with open(latest) as f:
+        meta = json.load(f)
+    for key in ("meta_crc32", "npz_crc32", "npz_bytes"):
+        meta.pop(key, None)
+    with open(latest, "w") as f:
+        json.dump(meta, f)
     store2 = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
                                     max_baskets=N, max_basket_size=B,
                                     max_groups=K))
