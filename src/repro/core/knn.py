@@ -302,6 +302,80 @@ def sharded_recommend_for_users(corpora, user_ids, k: int, alpha: float,
                                           alpha, topn))
 
 
+def recommend_for_users_quant(corpus_q, c_scale, user_ids, k: int,
+                              alpha: float, topn: int, bd: int = 512):
+    """Int8 fused serving (DESIGN.md §8.4): quantized corpus → top-n ids.
+
+    The million-item twin of :func:`recommend_for_users`: ``corpus_q``
+    int8[M, I] with per-row power-of-two ``c_scale`` f32[M]
+    (``StateStore.quantized_corpus()``).  Stage A streams the corpus in
+    D-tiles of width ``bd`` (VMEM flat in I), stage B fetches only the
+    selected k rows — int8 on the wire.  Bitwise-deterministic across
+    cpu/interpret/tpu dispatch (exact int32 partials + exact
+    power-of-two scale application).  Euclidean only.  Returns
+    i32[Q, topn] item ids.
+    """
+    return ops.fused_recommend_quant(corpus_q, c_scale, user_ids, k=k,
+                                     alpha=alpha, topn=topn, bd=bd)
+
+
+def sharded_recommend_for_users_quant(quant_corpora, user_ids, k: int,
+                                      alpha: float, topn: int,
+                                      n_shards: int,
+                                      bd: int = 512) -> np.ndarray:
+    """Distributed int8 serving over per-shard quantized corpora (§8.4).
+
+    Same four-stage pipeline as :func:`sharded_recommend_for_users`,
+    int8 end to end: ``quant_corpora`` is a list of per-shard
+    ``(corpus_q int8[M_s, I], scale f32[M_s])`` pairs
+    (``StateStore.quantized_corpus()``).  Because row quantization is
+    corpus-partition invariant (per-row scales — a row's (q, scale)
+    does not depend on which shard holds it), every per-pair candidate
+    score equals the single-corpus int8 score bitwise, so the merge
+    (score desc, global id asc) selects the same neighbour set and the
+    result is bitwise ``recommend_for_users_quant`` on the equivalent
+    single corpus (tests/test_quantized_serving.py pins this).
+    Cross-shard traffic: [Q, k] candidates + the selected rows — int8,
+    ¼ the fp32 path's row-fetch bytes.
+    """
+    user_ids = np.asarray(user_ids, np.int64)
+    corpora_np = [np.asarray(q) for q, _ in quant_corpora]
+    scales_np = [np.asarray(s) for _, s in quant_corpora]
+    q_n = user_ids.shape[0]
+    n_items = corpora_np[0].shape[1]
+    queries_q = np.empty((q_n, n_items), np.int8)
+    q_scale = np.empty((q_n,), np.float32)
+    for s in range(n_shards):
+        m = user_ids % n_shards == s
+        if m.any():
+            queries_q[m] = corpora_np[s][user_ids[m] // n_shards]
+            q_scale[m] = scales_np[s][user_ids[m] // n_shards]
+    qs_j = jnp.asarray(queries_q)
+    qscale_j = jnp.asarray(q_scale)
+    qids = jnp.asarray(user_ids.astype(np.int32))
+    vals, gids = [], []
+    for s, (cq, cs) in enumerate(quant_corpora):
+        v, g = ops.shard_topk_quant(qs_j, qscale_j, cq, cs, k, shard=s,
+                                    n_shards=n_shards, query_gids=qids,
+                                    bd=bd)
+        vals.append(np.asarray(v))
+        gids.append(np.asarray(g))
+    all_vals = np.concatenate(vals, axis=1)
+    all_gids = np.concatenate(gids, axis=1)
+    order = np.lexsort((all_gids, -all_vals), axis=-1)
+    sel = np.take_along_axis(all_gids, order, axis=1)[:, :k]
+    neighbor_q = np.empty((q_n, sel.shape[1], n_items), np.int8)
+    n_scale = np.empty((q_n, sel.shape[1]), np.float32)
+    for s in range(n_shards):
+        m = sel % n_shards == s
+        if m.any():
+            neighbor_q[m] = corpora_np[s][sel[m] // n_shards]
+            n_scale[m] = scales_np[s][sel[m] // n_shards]
+    return np.asarray(ops.blend_topn_rows_quant(
+        qs_j, qscale_j, jnp.asarray(neighbor_q), jnp.asarray(n_scale),
+        alpha, topn))
+
+
 # ---------------------------------------------------------------------------
 # Ranking metrics (numpy; evaluation only)
 # ---------------------------------------------------------------------------

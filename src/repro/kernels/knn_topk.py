@@ -30,6 +30,22 @@ Design (DESIGN.md §3.4 / §8):
   buffer holds candidates from earlier (lower-id) tiles and sits first
   in the concat, so an equal-score later column never displaces an
   earlier one (pinned by tests/test_serving_pipeline.py).
+
+D-tiled variant (DESIGN.md §8.4): ``knn_topk`` holds full [bq, D] /
+[bm, D] blocks in VMEM — an O(bq·D) residency that walls out at
+D ≈ 64k items.  ``knn_topk_dtiled`` adds a third (innermost) grid axis
+over D-tiles: per (qi, mi) the q·cᵀ contraction accumulates into a
+running [bq, bm] f32 block accumulator over ⌈D/bd⌉ steps, and only at
+the LAST D-tile are the scores finished (norm terms, tail mask, fused
+self-exclusion — the same contracts as the monolithic kernel) and
+merged into the running [bq, k] top-k.  VMEM residency is O(bq·bd +
+bm·bd + bq·bm), flat in D.  The same kernel serves an int8 per-row
+quantized corpus (DESIGN.md §8.4): each D-tile's partial dot runs on
+the MXU in int8→int32 (exact for bd ≤ 1024: |Σ| ≤ bd·127² < 2²⁴, so
+the per-tile partial converts to f32 exactly), the cross-tile f32
+accumulation is order-fixed, and the per-row scales are applied once
+at score-finish time — which makes the int8 scores bit-for-bit
+reproducible against the XLA oracle (``kernels.ref.dtiled_topk_ref``).
 """
 from __future__ import annotations
 
@@ -144,3 +160,184 @@ def knn_topk(queries, corpus, k: int, bq: int = 128, bm: int = 512,
         ],
         interpret=interpret,
     )(query_gids.astype(jnp.int32), queries, corpus, cnorm)
+
+
+# ---------------------------------------------------------------------------
+# D-tiled stage A (DESIGN.md §8.4): O(bq·bd) VMEM residency, int8 corpus
+# ---------------------------------------------------------------------------
+
+def tiled_sqnorm(x, bd: int):
+    """Per-row squared norm Σᵢ x[r, i]², accumulated in D-tile order.
+
+    Returns f32[M].  int8 rows sum each bd-wide tile exactly in int32
+    (bd ≤ 1024 keeps the per-tile partial below 2²⁴, so the f32 convert
+    is exact); f32 rows sum per tile in f32.  The cross-tile f32
+    accumulation order is fixed (tile 0 first), matching the kernel's
+    block accumulator — ``kernels.ref`` duplicates this function
+    verbatim so the oracle stays import-free (parity pinned by
+    tests/test_quantized_serving.py).
+    """
+    m, d = x.shape
+    bd = max(1, min(bd, d))
+    nt = pl.cdiv(d, bd)
+    pad = nt * bd - d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    xt = x.reshape(m, nt, bd)
+    if x.dtype == jnp.int8:
+        per_tile = jnp.sum(xt.astype(jnp.int32) ** 2,
+                           axis=-1).astype(jnp.float32)
+    else:
+        xf = xt.astype(jnp.float32)
+        per_tile = jnp.sum(xf * xf, axis=-1)
+    return jnp.cumsum(per_tile, axis=1)[:, -1]
+
+
+def _dtiled_kernel(qid_ref, q_ref, c_ref, cn_ref, qn_ref, qs_ref, cs_ref,
+                   vals_ref, idx_ref, acc, acc_vals, acc_idx, *, k: int,
+                   bm: int, bd: int, m: int, d: int, col_offset: int,
+                   col_stride: int, sub_qnorm: bool, quantized: bool):
+    mi = pl.program_id(1)
+    di = pl.program_id(2)
+    nm = pl.num_programs(1)
+    nd = pl.num_programs(2)
+
+    @pl.when((mi == 0) & (di == 0))
+    def _init_topk():
+        acc_vals[...] = jnp.full_like(acc_vals, -jnp.inf)
+        acc_idx[...] = jnp.zeros_like(acc_idx)
+
+    @pl.when(di == 0)
+    def _init_acc():
+        acc[...] = jnp.zeros_like(acc)
+
+    q = q_ref[...]                                   # [bq, bd]
+    c = c_ref[...]                                   # [bm, bd]
+    # tail D-lanes carry garbage (OOB block read): zero BOTH operands so
+    # the contraction contributes exactly 0 (0·NaN would poison f32)
+    lane = di * bd + jax.lax.broadcasted_iota(jnp.int32, (1, bd), 1)
+    q = jnp.where(lane < d, q, jnp.zeros_like(q))
+    c = jnp.where(lane < d, c, jnp.zeros_like(c))
+    if quantized:
+        # exact int32 partial per tile; f32 convert exact for bd <= 1024
+        part = jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc[...] += part.astype(jnp.float32)
+    else:
+        acc[...] += jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _merge():
+        qs = qs_ref[...]                             # [bq]
+        cs = cs_ref[...]                             # [bm]
+        scores = (2.0 * (qs[:, None] * cs[None, :]) * acc[...]
+                  - (cs * cs)[None, :] * cn_ref[...][None, :])
+        if sub_qnorm:
+            scores = scores - (qs * qs * qn_ref[...])[:, None]
+        tile_idx = mi * bm + jax.lax.broadcasted_iota(jnp.int32,
+                                                      scores.shape, 1)
+        scores = jnp.where(tile_idx >= m, -jnp.inf, scores)
+        col_gid = tile_idx * col_stride + col_offset
+        scores = jnp.where(col_gid == qid_ref[...][:, None], -jnp.inf,
+                           scores)
+        merged_vals = jnp.concatenate([acc_vals[...], scores], axis=1)
+        merged_idx = jnp.concatenate([acc_idx[...], tile_idx], axis=1)
+        top_vals, top_pos = jax.lax.top_k(merged_vals, k)
+        acc_vals[...] = top_vals
+        acc_idx[...] = jnp.take_along_axis(merged_idx, top_pos, axis=1)
+
+    @pl.when((mi == nm - 1) & (di == nd - 1))
+    def _done():
+        vals_ref[...] = acc_vals[...]
+        idx_ref[...] = acc_idx[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bq", "bm", "bd", "interpret",
+                                    "col_offset", "col_stride",
+                                    "sub_qnorm"))
+def knn_topk_dtiled(queries, corpus, k: int, bq: int = 128, bm: int = 512,
+                    bd: int = 512, interpret: bool = False,
+                    query_gids=None, col_offset: int = 0,
+                    col_stride: int = 1, sub_qnorm: bool = False,
+                    q_scale=None, c_scale=None):
+    """D-tiled streaming top-k for million-item corpora (§8.4).
+
+    queries [Q, D] × corpus [M, D] →
+    (vals f32[Q, k], local idx i32[Q, k]).  The D axis is the third (innermost) grid dimension: VMEM residency
+    is O(bq·bd + bm·bd + bq·bm) instead of the monolithic kernel's
+    O(bq·D) — flat in D (DESIGN.md §8.4).  Scoring, tail-mask,
+    self-exclusion (``query_gids``/``col_offset``/``col_stride``),
+    ``sub_qnorm`` and the lowest-index tie-break follow :func:`knn_topk`
+    exactly.  When ``queries``/``corpus`` are int8 (per-row symmetric
+    quantization), ``q_scale`` f32[Q] / ``c_scale`` f32[M] are required:
+    each D-tile's partial dot accumulates exactly in int32 on the MXU
+    and the scales are applied once at score-finish, so the euclidean
+    surrogate is ``2·s_q·s_c·(q₈·c₈) − s_c²·|c₈|²`` — bit-for-bit the
+    XLA oracle's value (``ref.dtiled_topk_ref``; the scales must be the
+    power-of-two ones of ``optim.compression.quantize_int8_rows``,
+    which make every scale application an exact exponent shift and the
+    score FMA-contraction-invariant).  Euclidean only; k >
+    M leaves trailing −inf entries with unspecified indices (callers
+    clamp, as in :func:`knn_topk`).  ``bd`` must stay ≤ 1024 on the
+    int8 path (exact f32 convert of the per-tile int32 partial).
+    """
+    qn_, d = queries.shape
+    m = corpus.shape[0]
+    quantized = corpus.dtype == jnp.int8
+    if quantized and (q_scale is None or c_scale is None):
+        raise ValueError("int8 corpus requires q_scale and c_scale")
+    if quantized and bd > 1024:
+        raise ValueError(f"bd={bd} > 1024 breaks the exact int8 "
+                         "per-tile f32 convert (DESIGN.md §8.4)")
+    if qn_ == 0 or m == 0:
+        return (jnp.full((qn_, k), -jnp.inf, jnp.float32),
+                jnp.zeros((qn_, k), jnp.int32))
+    bq = min(bq, qn_)
+    bm = min(bm, m)
+    bd = min(bd, d)
+    if query_gids is None:
+        query_gids = jnp.full((qn_,), -1, jnp.int32)
+    cnorm = tiled_sqnorm(corpus, bd)
+    qnorm = (tiled_sqnorm(queries, bd) if sub_qnorm
+             else jnp.zeros((qn_,), jnp.float32))
+    if q_scale is None:
+        q_scale = jnp.ones((qn_,), jnp.float32)
+        c_scale = jnp.ones((m,), jnp.float32)
+    grid = (pl.cdiv(qn_, bq), pl.cdiv(m, bm), pl.cdiv(d, bd))
+    kernel = functools.partial(_dtiled_kernel, k=k, bm=bm, bd=bd, m=m,
+                               d=d, col_offset=col_offset,
+                               col_stride=col_stride, sub_qnorm=sub_qnorm,
+                               quantized=quantized)
+    acc_dtype = jnp.float32
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq,), lambda qi, mi, di: (qi,)),
+            pl.BlockSpec((bq, bd), lambda qi, mi, di: (qi, di)),
+            pl.BlockSpec((bm, bd), lambda qi, mi, di: (mi, di)),
+            pl.BlockSpec((bm,), lambda qi, mi, di: (mi,)),
+            pl.BlockSpec((bq,), lambda qi, mi, di: (qi,)),
+            pl.BlockSpec((bq,), lambda qi, mi, di: (qi,)),
+            pl.BlockSpec((bm,), lambda qi, mi, di: (mi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda qi, mi, di: (qi, 0)),
+            pl.BlockSpec((bq, k), lambda qi, mi, di: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn_, k), jnp.float32),
+            jax.ShapeDtypeStruct((qn_, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, bm), acc_dtype),    # running q·cᵀ partial
+            pltpu.VMEM((bq, k), jnp.float32),   # running top-k vals
+            pltpu.VMEM((bq, k), jnp.int32),     # running top-k idx
+        ],
+        interpret=interpret,
+    )(query_gids.astype(jnp.int32), queries, corpus, cnorm, qnorm,
+      q_scale, c_scale)

@@ -24,8 +24,11 @@ from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.knn_topk import knn_topk as _knn_pallas
+from repro.kernels.knn_topk import knn_topk_dtiled as _knn_dtiled_pallas
 from repro.kernels.serving_topn import (blend_topn_onehot as _blend_onehot,
                                         blend_topn_rows as _blend_rows)
+from repro.kernels.serving_topn import \
+    blend_topn_rows_quant as _blend_rows_quant_pallas
 from repro.kernels.sparse_row_gather import \
     sparse_row_gather as _sparse_gather_pallas
 from repro.kernels.sparse_row_scatter import \
@@ -77,6 +80,24 @@ def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
                        **kw)
 
 
+def knn_topk_dtiled(queries, corpus, k: int, bd: int = 512,
+                    impl: str | None = None, **kw):
+    """D-tiled streaming top-k (DESIGN.md §8.4): VMEM flat in D.
+
+    Same contract as :func:`knn_topk` (euclidean only) with the item
+    axis tiled at width ``bd``; int8 ``queries``/``corpus`` take
+    ``q_scale``/``c_scale`` (per-row, `optim.compression
+    .quantize_int8_rows`) and are bitwise the `ref.dtiled_topk_ref`
+    oracle on every impl.  impl: auto | pallas | interpret | ref.
+    """
+    impl = _resolve(impl)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.dtiled_topk_ref(queries, corpus, k, bd=bd, **kw)
+    return _knn_dtiled_pallas(queries, corpus, k, bd=bd,
+                              interpret=(impl == "interpret"
+                                         or not _on_tpu()), **kw)
+
+
 # ---------------------------------------------------------------------------
 # Fused serving pipeline (DESIGN.md §8)
 # ---------------------------------------------------------------------------
@@ -99,8 +120,55 @@ def _fused_recommend_pallas(corpus, user_ids, k, alpha, topn, metric,
     return ids
 
 
+@functools.partial(jax.jit, static_argnames=("k", "topn", "bd"))
+def _fused_recommend_dtiled_ref(corpus, user_ids, alpha, k, topn, bd):
+    queries = corpus[user_ids]
+    _, idx = ref.dtiled_topk_ref(queries, corpus, k, bd=bd,
+                                 query_gids=user_ids)
+    return ref.blend_topn_rows_ref(queries, corpus[idx], alpha, topn)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "alpha", "topn", "bd",
+                                    "interpret"))
+def _fused_recommend_dtiled_pallas(corpus, user_ids, k, alpha, topn, bd,
+                                   interpret):
+    queries = corpus[user_ids]
+    _, idx = _knn_dtiled_pallas(queries, corpus, k, bd=bd,
+                                query_gids=user_ids, interpret=interpret)
+    _, ids = _blend_onehot(corpus, user_ids, idx, alpha=alpha, topn=topn,
+                           interpret=interpret)
+    return ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "topn", "bd"))
+def _fused_recommend_quant_ref(corpus_q, c_scale, user_ids, alpha, k,
+                               topn, bd):
+    return ref.fused_recommend_quant_ref(corpus_q, c_scale, user_ids, k,
+                                         alpha, topn, bd)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "alpha", "topn", "bd",
+                                    "interpret"))
+def _fused_recommend_quant_pallas(corpus_q, c_scale, user_ids, k, alpha,
+                                  topn, bd, interpret):
+    queries_q = corpus_q[user_ids]
+    q_scale = c_scale[user_ids]
+    _, idx = _knn_dtiled_pallas(queries_q, corpus_q, k, bd=bd,
+                                query_gids=user_ids, q_scale=q_scale,
+                                c_scale=c_scale, interpret=interpret)
+    # stage B fetches only the selected k rows — and fetches them int8:
+    # ¼ the HBM bytes of the fp32 gather (DESIGN.md §8.4)
+    _, ids = _blend_rows_quant_pallas(queries_q, q_scale, corpus_q[idx],
+                                      c_scale[idx], alpha=alpha,
+                                      topn=topn, interpret=interpret)
+    return ids
+
+
 def fused_recommend(corpus, user_ids, k: int, alpha: float, topn: int,
-                    metric: str = "euclidean", impl: str | None = None):
+                    metric: str = "euclidean", impl: str | None = None,
+                    bd: int | None = None):
     """Fused serving path: corpus rows → top-n item ids, one program.
 
     ``corpus`` f32[M, I] (the cached serving corpus), ``user_ids``
@@ -111,6 +179,9 @@ def fused_recommend(corpus, user_ids, k: int, alpha: float, topn: int,
     historical `recommend_for_users` output.  ``k`` is clamped to M−1
     (see the comment at the clamp); cosine falls back to the reference
     (the kernels fuse the euclidean surrogate / dot only).
+    ``bd`` (optional, euclidean only) routes stage A through the
+    D-tiled kernel of DESIGN.md §8.4 — same results, VMEM flat in the
+    item count; required beyond the monolithic kernel's ~64k-item wall.
     impl: auto | pallas | interpret | ref.
     """
     impl = _resolve(impl)
@@ -126,11 +197,49 @@ def fused_recommend(corpus, user_ids, k: int, alpha: float, topn: int,
     k = max(1, min(k, m - 1))
     if impl == "ref" or metric == "cosine" \
             or (impl == "auto" and not _on_tpu()):
+        if bd is not None and metric != "cosine":
+            return _fused_recommend_dtiled_ref(corpus, user_ids, alpha,
+                                               k=k, topn=topn, bd=bd)
         return _fused_recommend_ref(corpus, user_ids, alpha, k=k,
                                     topn=topn, metric=metric)
+    if bd is not None:
+        return _fused_recommend_dtiled_pallas(
+            corpus, user_ids, k=k, alpha=float(alpha), topn=topn, bd=bd,
+            interpret=(impl == "interpret" or not _on_tpu()))
     return _fused_recommend_pallas(
         corpus, user_ids, k=k, alpha=float(alpha), topn=topn,
         metric=metric, interpret=(impl == "interpret" or not _on_tpu()))
+
+
+def fused_recommend_quant(corpus_q, c_scale, user_ids, k: int,
+                          alpha: float, topn: int, bd: int = 512,
+                          impl: str | None = None):
+    """Int8 fused serving (DESIGN.md §8.4): quantized corpus → top-n ids.
+
+    ``corpus_q`` int8[M, I] with per-row ``c_scale`` f32[M]
+    (`optim.compression.quantize_int8_rows`; cached by
+    `streaming.state_store.StateStore.quantized_corpus`).  Stage A runs
+    the D-tiled int8 top-k (exact int32 MXU partials, scales applied at
+    score-finish — bitwise `ref.fused_recommend_quant_ref` on every
+    impl); stage B gathers only the selected k rows, int8 on the wire,
+    and dequantizes in VMEM.  HBM traffic per query batch is
+    O(Q/bq · M·I) int8 reads + O(Q·k·I) int8 + O(Q·n) out — ¼ the
+    fp32 path's bytes.  Euclidean only.  impl: auto | pallas |
+    interpret | ref.
+    """
+    impl = _resolve(impl)
+    q_n, m = user_ids.shape[0], corpus_q.shape[0]
+    if topn > corpus_q.shape[1]:
+        raise ValueError(f"topn={topn} > n_items={corpus_q.shape[1]}")
+    if q_n == 0 or m == 0:
+        return jnp.zeros((q_n, topn), jnp.int32)
+    k = max(1, min(k, m - 1))   # same −inf-slot reasoning as above
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _fused_recommend_quant_ref(corpus_q, c_scale, user_ids,
+                                          alpha, k=k, topn=topn, bd=bd)
+    return _fused_recommend_quant_pallas(
+        corpus_q, c_scale, user_ids, k=k, alpha=float(alpha), topn=topn,
+        bd=bd, interpret=(impl == "interpret" or not _on_tpu()))
 
 
 @functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
@@ -189,6 +298,66 @@ def shard_topk(queries, corpus, k: int, shard: int, n_shards: int,
         interpret=(impl == "interpret" or not _on_tpu()))
 
 
+@functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
+                                             "bd"))
+def _shard_topk_quant_ref(queries_q, q_scale, corpus_q, c_scale,
+                          query_gids, k, shard, n_shards, bd):
+    vals, idx = ref.dtiled_topk_ref(queries_q, corpus_q, k, bd=bd,
+                                    query_gids=query_gids,
+                                    col_offset=shard, col_stride=n_shards,
+                                    sub_qnorm=True, q_scale=q_scale,
+                                    c_scale=c_scale)
+    gids = idx * n_shards + shard
+    return vals, jnp.where(jnp.isneginf(vals), query_gids[:, None], gids)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
+                                             "bd", "interpret"))
+def _shard_topk_quant_pallas(queries_q, q_scale, corpus_q, c_scale,
+                             query_gids, k, shard, n_shards, bd,
+                             interpret):
+    vals, idx = _knn_dtiled_pallas(queries_q, corpus_q, k, bd=bd,
+                                   query_gids=query_gids,
+                                   col_offset=shard, col_stride=n_shards,
+                                   sub_qnorm=True, q_scale=q_scale,
+                                   c_scale=c_scale, interpret=interpret)
+    gids = idx * n_shards + shard
+    # same −inf → self-gid pin as _shard_topk_pallas
+    return vals, jnp.where(jnp.isneginf(vals), query_gids[:, None], gids)
+
+
+def shard_topk_quant(queries_q, q_scale, corpus_q, c_scale, k: int,
+                     shard: int, n_shards: int, query_gids=None,
+                     bd: int = 512, impl: str | None = None):
+    """Per-shard int8 neighbour candidates ``([Q, k'] scores, gids)``.
+
+    The quantized twin of :func:`shard_topk` — D-tiled stage A over one
+    shard's int8 corpus, ``sub_qnorm`` on so the emitted scores are the
+    full −|q̂−ĉ|² on DEQUANTIZED values: per-row quantization is
+    corpus-partition invariant (a row's (q, scale) is the same on any
+    shard), so per-pair scores across shards are exactly the
+    single-corpus int8 scores and the cross-shard merge stays
+    bitwise-consistent (DESIGN.md §7.3/§8.4).  Bitwise the oracle on
+    every impl.  impl: auto | pallas | interpret | ref.
+    """
+    impl = _resolve(impl)
+    m_s = corpus_q.shape[0]
+    q_n = queries_q.shape[0]
+    if m_s == 0 or q_n == 0:
+        kk = min(k, m_s)
+        return (jnp.full((q_n, kk), -jnp.inf, jnp.float32),
+                jnp.zeros((q_n, kk), jnp.int32))
+    if query_gids is None:
+        query_gids = jnp.full((q_n,), -1, jnp.int32)
+    fn = (_shard_topk_quant_ref
+          if impl == "ref" or (impl == "auto" and not _on_tpu())
+          else functools.partial(
+              _shard_topk_quant_pallas,
+              interpret=(impl == "interpret" or not _on_tpu())))
+    return fn(queries_q, q_scale, corpus_q, c_scale, query_gids,
+              k=min(k, m_s), shard=shard, n_shards=n_shards, bd=bd)
+
+
 @functools.partial(jax.jit, static_argnames=("topn",))
 def _blend_rows_ref(queries, neighbor_rows, alpha, topn):
     return ref.blend_topn_rows_ref(queries, neighbor_rows, alpha, topn)
@@ -216,6 +385,40 @@ def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
         interpret=(impl == "interpret" or not _on_tpu()))
 
 
+@functools.partial(jax.jit, static_argnames=("topn",))
+def _blend_rows_quant_ref(queries_q, q_scale, neighbor_rows_q, n_scale,
+                          alpha, topn):
+    return ref.blend_topn_rows_quant_ref(queries_q, q_scale,
+                                         neighbor_rows_q, n_scale, alpha,
+                                         topn)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "topn", "interpret"))
+def _blend_rows_quant_pallas_ids(queries_q, q_scale, neighbor_rows_q,
+                                 n_scale, alpha, topn, interpret):
+    return _blend_rows_quant_pallas(queries_q, q_scale, neighbor_rows_q,
+                                    n_scale, alpha=alpha, topn=topn,
+                                    interpret=interpret)[1]
+
+
+def blend_topn_rows_quant(queries_q, q_scale, neighbor_rows_q, n_scale,
+                          alpha: float, topn: int,
+                          impl: str | None = None):
+    """Quantized cross-shard final stage: int8 rows [Q, k, I] → top-n.
+
+    The int8 twin of :func:`blend_topn_rows`: the k fetched rows cross
+    the wire quantized (¼ the fp32 bytes) with per-row scales and are
+    dequantized on-chip.  impl: auto | pallas | interpret | ref.
+    """
+    impl = _resolve(impl)
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return _blend_rows_quant_ref(queries_q, q_scale, neighbor_rows_q,
+                                     n_scale, alpha, topn=topn)
+    return _blend_rows_quant_pallas_ids(
+        queries_q, q_scale, neighbor_rows_q, n_scale, alpha=float(alpha),
+        topn=topn, interpret=(impl == "interpret" or not _on_tpu()))
+
+
 def serving_cache_size() -> int:
     """Number of live compiled programs behind the serving entry points.
 
@@ -227,8 +430,34 @@ def serving_cache_size() -> int:
     """
     return sum(f._cache_size() for f in (
         _fused_recommend_ref, _fused_recommend_pallas,
+        _fused_recommend_dtiled_ref, _fused_recommend_dtiled_pallas,
+        _fused_recommend_quant_ref, _fused_recommend_quant_pallas,
         _shard_topk_ref, _shard_topk_pallas,
-        _blend_rows_ref, _blend_rows_pallas))
+        _shard_topk_quant_ref, _shard_topk_quant_pallas,
+        _blend_rows_ref, _blend_rows_pallas,
+        _blend_rows_quant_ref, _blend_rows_quant_pallas_ids))
+
+
+def stage_a_vmem_bytes(d: int, k: int, bq: int = 128, bm: int = 512,
+                       bd: int | None = None,
+                       itemsize: int = 4) -> int:
+    """Analytic peak VMEM residency (bytes) of one stage-A grid step.
+
+    Monolithic (``bd=None``): the [bq, D] query and [bm, D] corpus
+    blocks dominate — linear in the item count D, the ~64k-item wall
+    (16 MiB VMEM / (bq+bm)·4 B).  D-tiled: [bq, bd] + [bm, bd] operand
+    blocks (``itemsize`` bytes: 4 fp32, 1 int8) + the f32 [bq, bm]
+    accumulator — flat in D.  Both include the f32+i32 [bq, k] running
+    top-k.  This is the model `benchmarks/bench_serving.py --scale`
+    records per sweep point (DESIGN.md §8.2's table is generated from
+    it); it counts double-buffered operand blocks once, so real
+    residency is ≤ 2× for the streamed inputs.
+    """
+    topk = bq * k * (4 + 4)
+    if bd is None:
+        return (bq * d + bm * d) * itemsize + bq * bm * 4 + topk
+    bd = min(bd, d)
+    return (bq * bd + bm * bd) * itemsize + bq * bm * 4 + topk
 
 
 def multihot_scatter(ids, weights, n_items: int, impl: str | None = None):

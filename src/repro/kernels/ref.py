@@ -91,6 +91,124 @@ def blend_topn_rows_ref(queries, neighbor_rows, alpha, topn: int):
     return jax.lax.top_k(pred, topn)[1]
 
 
+def tiled_sqnorm_ref(x, bd: int):
+    """Per-row squared norm in D-tile accumulation order (f32[M]).
+
+    Duplicate of ``kernels.knn_topk.tiled_sqnorm`` (the oracle must not
+    import kernel modules); both call sites see the same shapes, so the
+    two are bitwise identical — pinned by tests/test_quantized_serving.py.
+    int8 rows: exact int32 per-tile sums, f32 cross-tile accumulation.
+    """
+    m, d = x.shape
+    bd = max(1, min(bd, d))
+    nt = -(-d // bd)
+    pad = nt * bd - d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    xt = x.reshape(m, nt, bd)
+    if x.dtype == jnp.int8:
+        per_tile = jnp.sum(xt.astype(jnp.int32) ** 2,
+                           axis=-1).astype(jnp.float32)
+    else:
+        xf = xt.astype(jnp.float32)
+        per_tile = jnp.sum(xf * xf, axis=-1)
+    return jnp.cumsum(per_tile, axis=1)[:, -1]
+
+
+def dtiled_topk_ref(queries, corpus, k: int, bd: int = 512,
+                    query_gids=None, col_offset: int = 0,
+                    col_stride: int = 1, sub_qnorm: bool = False,
+                    q_scale=None, c_scale=None):
+    """Oracle for the D-tiled stage A (DESIGN.md §8.4).
+
+    Mirrors ``knn_topk_dtiled``'s accumulation schedule exactly: the
+    q·cᵀ contraction is a ``lax.scan`` over ⌈D/bd⌉ D-tiles (a scan, not
+    a Python loop — at I = 10⁶ an unrolled jaxpr would have ~2000 dot
+    ops), each tile's partial computed in int32 (int8 inputs, exact) or
+    f32, accumulated cross-tile in f32 in tile order.  On the int8 path
+    this makes the oracle BITWISE the kernel's output for any (bq, bm)
+    blocking — the acceptance contract of ISSUE 7.  Scores, masks and
+    scale application use the identical expression tree as the kernel.
+    Requires k ≤ M (callers clamp, as for ``knn_topk_ref``).
+    """
+    qn, d = queries.shape
+    m = corpus.shape[0]
+    quantized = corpus.dtype == jnp.int8
+    bd = max(1, min(bd, d))
+    nt = -(-d // bd)
+    cn = tiled_sqnorm_ref(corpus, bd)
+    qnorm = (tiled_sqnorm_ref(queries, bd) if sub_qnorm
+             else jnp.zeros((qn,), jnp.float32))
+    pad = nt * bd - d
+    qp, cp = queries, corpus
+    if pad:
+        qp = jnp.pad(qp, ((0, 0), (0, pad)))
+        cp = jnp.pad(cp, ((0, 0), (0, pad)))
+    qt = jnp.moveaxis(qp.reshape(qn, nt, bd), 1, 0)   # [nt, Q, bd]
+    ct = jnp.moveaxis(cp.reshape(m, nt, bd), 1, 0)    # [nt, M, bd]
+
+    def step(acc, qc):
+        q, c = qc
+        if quantized:
+            part = jax.lax.dot_general(
+                q, c, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            return acc + part.astype(jnp.float32), None
+        return acc + jax.lax.dot_general(
+            q, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32), None
+
+    acc, _ = jax.lax.scan(step, jnp.zeros((qn, m), jnp.float32), (qt, ct))
+    if q_scale is None:
+        q_scale = jnp.ones((qn,), jnp.float32)
+        c_scale = jnp.ones((m,), jnp.float32)
+    scores = (2.0 * (q_scale[:, None] * c_scale[None, :]) * acc
+              - (c_scale * c_scale)[None, :] * cn[None, :])
+    if sub_qnorm:
+        scores = scores - (q_scale * q_scale * qnorm)[:, None]
+    if query_gids is not None:
+        col_gid = (jnp.arange(m, dtype=jnp.int32) * col_stride
+                   + col_offset)
+        scores = jnp.where(col_gid[None, :] == query_gids[:, None],
+                           -jnp.inf, scores)
+    return jax.lax.top_k(scores, k)
+
+
+def blend_topn_rows_quant_ref(queries_q, q_scale, neighbor_rows_q,
+                              n_scale, alpha, topn: int):
+    """Oracle for the quantized cross-shard blend (stage B, §8.4).
+
+    queries_q int8[Q, I] / q_scale f32[Q]; neighbor_rows_q
+    int8[Q, k, I] / n_scale f32[Q, k].  Dequantizes (exact elementwise
+    f32 multiplies, the kernel's in-VMEM operands bitwise), then the
+    same mean + alpha blend + top-n as ``blend_topn_rows_ref``.
+    """
+    queries = queries_q.astype(jnp.float32) * q_scale[:, None]
+    nbr = neighbor_rows_q.astype(jnp.float32) * n_scale[:, :, None]
+    neighbors = jnp.mean(nbr, axis=1)
+    pred = alpha * queries + (1.0 - alpha) * neighbors
+    return jax.lax.top_k(pred, topn)[1]
+
+
+def fused_recommend_quant_ref(corpus_q, c_scale, user_ids, k: int, alpha,
+                              topn: int, bd: int = 512):
+    """Oracle for the int8 fused serving pipeline (DESIGN.md §8.4).
+
+    The query IS the user's quantized corpus row (q_scale =
+    c_scale[user]); stage A is the D-tiled int8 top-k with fused
+    self-exclusion, stage B gathers only the selected k int8 rows
+    (the 4×-smaller HBM fetch that motivates the path) and blends
+    dequantized.  Requires k ≤ M − 1 (dispatcher clamps).
+    """
+    queries_q = corpus_q[user_ids]
+    q_scale = c_scale[user_ids]
+    _, idx = dtiled_topk_ref(queries_q, corpus_q, k, bd=bd,
+                             query_gids=user_ids, q_scale=q_scale,
+                             c_scale=c_scale)
+    return blend_topn_rows_quant_ref(queries_q, q_scale, corpus_q[idx],
+                                     c_scale[idx], alpha, topn)
+
+
 def decayed_scatter_ref(ids, weights, n_items: int):
     """Weighted multi-hot scatter: out[i] = Σ_{n,b} w[n]·[ids[n,b] == i].
 

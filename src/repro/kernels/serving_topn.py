@@ -113,10 +113,10 @@ def _onehot_kernel(uid_ref, idx_ref, c_ref, vals_ref, ids_ref, acc_self,
 def blend_topn_onehot(corpus, user_ids, nbr_idx, alpha: float, topn: int,
                       bq: int = 128, bm: int = 512, bi: int = 512,
                       kc: int = 32, interpret: bool = False):
-    """corpus [M, I] × user_ids i32[Q] × nbr_idx i32[Q, k] →
-    (vals f32[Q, topn], item ids i32[Q, topn]).
+    """Fused one-hot blend + top-n over the corpus (stage B, §8.1).
 
-    ``nbr_idx`` are local corpus rows (entries of −1 contribute zero but
+    corpus [M, I] × user_ids i32[Q] × nbr_idx i32[Q, k] →
+    (vals f32[Q, topn], item ids i32[Q, topn]).  ``nbr_idx`` are local corpus rows (entries of −1 contribute zero but
     still count toward the mean divisor k, matching the reference mean
     over a fixed k).  ``user_ids`` select the query rows — the alpha
     term reads them through the same one-hot contraction, so the [Q, I]
@@ -188,9 +188,10 @@ def _rows_kernel(q_ref, nbr_ref, vals_ref, ids_ref, top_vals, top_idx, *,
                                              "interpret"))
 def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
                     bq: int = 8, bi: int = 512, interpret: bool = False):
-    """queries [Q, I] × neighbor_rows [Q, k, I] →
-    (vals f32[Q, topn], item ids i32[Q, topn]).
+    """Blend pre-fetched neighbour rows and emit top-n (stage B, §7.3).
 
+    queries [Q, I] × neighbor_rows [Q, k, I] →
+    (vals f32[Q, topn], item ids i32[Q, topn]).
     The cross-shard final stage: the k rows were already fetched, so the
     fusion win is skipping the [Q, I] prediction intermediate — mean,
     blend and the top-n merge run per item tile.  ``bq`` defaults low:
@@ -227,3 +228,81 @@ def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
         ],
         interpret=interpret,
     )(queries, neighbor_rows)
+
+
+def _rows_quant_kernel(q_ref, qs_ref, nbr_ref, ns_ref, vals_ref, ids_ref,
+                       top_vals, top_idx, *, alpha: float, topn: int,
+                       bi: int, n_items: int):
+    ii = pl.program_id(1)
+    ni = pl.num_programs(1)
+
+    @pl.when(ii == 0)
+    def _init():
+        top_vals[...] = jnp.full_like(top_vals, -jnp.inf)
+        top_idx[...] = jnp.zeros_like(top_idx)
+
+    # dequantize in VMEM: only int8 rows crossed HBM (4× less traffic)
+    nbr = nbr_ref[...].astype(jnp.float32) * ns_ref[...][:, :, None]
+    neighbors = jnp.mean(nbr, axis=1)                 # [bq, bi]
+    q = q_ref[...].astype(jnp.float32) * qs_ref[...][:, None]
+    pred = (alpha * q + (1.0 - alpha) * neighbors).astype(jnp.float32)
+    item_ids = ii * bi + jax.lax.broadcasted_iota(jnp.int32, pred.shape, 1)
+    pred = jnp.where(item_ids >= n_items, -jnp.inf, pred)
+    _merge_topn(top_vals, top_idx, pred, item_ids, topn)
+
+    @pl.when(ii == ni - 1)
+    def _done():
+        vals_ref[...] = top_vals[...]
+        ids_ref[...] = top_idx[...]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "topn", "bq", "bi",
+                                             "interpret"))
+def blend_topn_rows_quant(queries_q, q_scale, neighbor_rows_q, n_scale,
+                          alpha: float, topn: int, bq: int = 8,
+                          bi: int = 512, interpret: bool = False):
+    """Quantized stage-B blend (DESIGN.md §8.4), int8 rows in VMEM.
+
+    queries_q int8[Q, I] × neighbor_rows_q int8[Q, k, I] →
+    (vals f32[Q, topn], ids i32[Q, topn]).  The int8 twin of :func:`blend_topn_rows`: the k selected rows cross
+    HBM quantized (¼ the bytes of the fp32 fetch) with their per-row
+    scales (``q_scale`` f32[Q], ``n_scale`` f32[Q, k]), and are
+    dequantized in VMEM — exact elementwise multiplies, so the blended
+    prediction matches ``ref.blend_topn_rows_quant_ref`` on the same
+    operands.  Mean divisor, tail-mask and the lowest-index tie-break
+    follow :func:`blend_topn_rows`.  VMEM per step is O(bq·k·bi) int8 +
+    f32 dequant scratch; ``bq`` defaults low accordingly.
+    """
+    q_n, n_items = queries_q.shape
+    k = neighbor_rows_q.shape[1]
+    if q_n == 0:
+        return (jnp.full((0, topn), -jnp.inf, jnp.float32),
+                jnp.zeros((0, topn), jnp.int32))
+    bq = min(bq, q_n)
+    bi = min(bi, n_items)
+    grid = (pl.cdiv(q_n, bq), pl.cdiv(n_items, bi))
+    kernel = functools.partial(_rows_quant_kernel, alpha=float(alpha),
+                               topn=topn, bi=bi, n_items=n_items)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bi), lambda qi, ii: (qi, ii)),
+            pl.BlockSpec((bq,), lambda qi, ii: (qi,)),
+            pl.BlockSpec((bq, k, bi), lambda qi, ii: (qi, 0, ii)),
+            pl.BlockSpec((bq, k), lambda qi, ii: (qi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, topn), lambda qi, ii: (qi, 0)),
+            pl.BlockSpec((bq, topn), lambda qi, ii: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q_n, topn), jnp.float32),
+            jax.ShapeDtypeStruct((q_n, topn), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, topn), jnp.float32),
+            pltpu.VMEM((bq, topn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries_q, q_scale, neighbor_rows_q, n_scale)

@@ -35,7 +35,62 @@ def quantize_int8(x):
 
 
 def dequantize_int8(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize_int8`: q·scale, cast to ``dtype``.
+
+    Round-trip error is ≤ scale/2 per element (symmetric rounding).
+    """
     return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_int8_rows(x):
+    """Per-ROW symmetric int8 for the quantized serving corpus (§8.4).
+
+    x: f32[M, I] → (q: int8[M, I], scale: f32[M])
+    with ``scale[r]`` the POWER OF TWO ≥ ``max(|x[r]|, 1e-30)/127``
+    (next-above, or equal when already a power of two) and
+    ``q[r] = round(x[r]/scale[r])`` clipped to ±127.
+
+    Power-of-two scales are the load-bearing choice: every scale
+    application in the serving kernels (s_q·s_c, s_c², ×acc) is then an
+    exact f32 exponent shift, so each blended score involves exactly
+    one rounding — which makes the int8 scores invariant to FMA
+    contraction (``a·b − c`` fuses to ``fma(a, b, −c)`` or not,
+    depending on how XLA/Mosaic lowers each program; with a·b exact
+    both round identically).  That is what upgrades the D-tiled int8
+    path's kernel-vs-oracle agreement from allclose to bitwise.  The
+    cost is ≤ 1 bit of the 8: per-element round-trip error is ≤
+    scale[r]/2 ≤ max|x[r]|/127 (vs /254 for a free scale) — pinned by
+    tests/test_quantized_serving.py.
+
+    Row-wise scaling also makes the representation corpus-partition
+    invariant: a row quantizes to the same (q, scale) on any shard or
+    slice, so sharded int8 serving scores are bitwise the single-corpus
+    ones, and a streaming-update row refresh re-quantizes exactly the
+    touched rows (`streaming.state_store.StateStore.quantized_corpus`).
+    """
+    xf = x.astype(jnp.float32)
+    raw = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-30) / 127.0
+    # next power of two ≥ raw: frexp gives raw = m·2^e with m ∈ [0.5, 1);
+    # m == 0.5 means raw IS 2^(e−1), else round up to 2^e.  The pow2 is
+    # assembled from its IEEE-754 exponent bits — XLA's exp2() is an
+    # APPROXIMATION (exp2(15) → 32767.984 on CPU) and would silently
+    # void the exactness invariant above.
+    mant, exp = jnp.frexp(raw)
+    e = jnp.where(mant == 0.5, exp - 1, exp).astype(jnp.int32)
+    scale = jax.lax.bitcast_convert_type((e + 127) << 23, jnp.float32)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_rows(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize_int8_rows`: ``q · scale[:, None]``.
+
+    q: int8[..., M, I] with a matching ``scale`` broadcast over the last
+    axis (scale: f32[..., M]).  Exact elementwise f32 multiply — the
+    serving kernels apply the same product in VMEM, so host-side
+    dequantization reproduces the kernel's operand values bitwise.
+    """
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
 
 def init_error_feedback(grads):
@@ -44,9 +99,9 @@ def init_error_feedback(grads):
 
 
 def compress_with_feedback(grads, err):
-    """Quantize (grad + residual); the rounding error becomes the new
-    residual — over steps the transmitted sum is exact (error feedback).
+    """Quantize (grad + residual); the rounding error is the new residual.
 
+    Over steps the transmitted sum is exact (error feedback).
     Returns (q_tree int8, scale_tree f32 scalars, new_err_tree).
     """
     def one(g, e):
@@ -66,6 +121,7 @@ def compress_with_feedback(grads, err):
 
 
 def decompress(q, scales, dtype=jnp.float32):
+    """Dequantize a compressed gradient pytree leaf-by-leaf."""
     return jax.tree.map(lambda a, s: dequantize_int8(a, s, dtype), q,
                         scales)
 

@@ -744,7 +744,8 @@ class StreamingEngine:
 
     def recommend(self, user_ids, topn: int = 10, k: Optional[int] = None,
                   alpha: Optional[float] = None,
-                  metric: str = "euclidean") -> np.ndarray:
+                  metric: str = "euclidean",
+                  quantized: bool = False) -> np.ndarray:
         """Top-n recommendations for ``user_ids`` — the request batcher.
 
         Reads the cached serving corpus (``StateStore.corpus()`` —
@@ -757,20 +758,35 @@ class StreamingEngine:
         per distinct request-batch size — the compiled-shape count is
         tracked in ``metrics.serve_compiled_shapes``.  Cost: one fused
         device program per request batch, O(topn) host output per user.
+
+        ``quantized=True`` serves the D-tiled int8 path instead
+        (DESIGN.md §8.4): the ``StateStore.quantized_corpus()`` cache
+        (row-invalidated alongside the fp32 one) through
+        `core.knn.recommend_for_users_quant` — VMEM flat in n_items,
+        ¼ the HBM bytes, euclidean only.
         """
         ids, q_n, bucket = _pad_request(user_ids)
         if q_n == 0:
             return np.zeros((0, topn), np.int32)
         k = self.params.k_neighbors if k is None else k
         alpha = self.params.alpha if alpha is None else alpha
-        recs = knn.recommend_for_users(
-            self.store.corpus(), jnp.asarray(ids.astype(np.int32)),
-            k=k, alpha=alpha, topn=topn, metric=metric)
+        if quantized:
+            if metric != "euclidean":
+                raise ValueError("quantized serving is euclidean-only")
+            corpus_q, c_scale = self.store.quantized_corpus()
+            recs = knn.recommend_for_users_quant(
+                corpus_q, c_scale, jnp.asarray(ids.astype(np.int32)),
+                k=k, alpha=alpha, topn=topn)
+        else:
+            recs = knn.recommend_for_users(
+                self.store.corpus(), jnp.asarray(ids.astype(np.int32)),
+                k=k, alpha=alpha, topn=topn, metric=metric)
         self.metrics.serve_requests += 1
         # alpha included: it is a static (compile-triggering) arg of
         # the Pallas serving path, so per-request alphas must show up
         # in the gated compiled-shape count
-        self._serve_shapes.add((bucket, topn, k, float(alpha), metric))
+        self._serve_shapes.add((bucket, topn, k, float(alpha), metric,
+                                quantized))
         self.metrics.serve_compiled_shapes = len(self._serve_shapes)
         return np.asarray(recs)[:q_n]
 
@@ -1097,9 +1113,14 @@ class ShardedStreamingEngine:
         """Per-shard cached serving corpora (each shard-local, §3.6)."""
         return [sh.store.corpus() for sh in self.shards]
 
+    def quantized_corpora(self) -> List[tuple]:
+        """Per-shard int8 corpora ``[(q, scale), ...]`` (§8.4 cache)."""
+        return [sh.store.quantized_corpus() for sh in self.shards]
+
     def recommend(self, user_ids, topn: int = 10, k: Optional[int] = None,
                   alpha: Optional[float] = None,
-                  metric: str = "euclidean") -> np.ndarray:
+                  metric: str = "euclidean",
+                  quantized: bool = False) -> np.ndarray:
         """Cross-shard top-n recommendations for global ``user_ids``.
 
         Delegates to ``core.knn.sharded_recommend_for_users`` (per-shard
@@ -1108,16 +1129,27 @@ class ShardedStreamingEngine:
         buckets exactly like the single-engine batcher
         (`StreamingEngine.recommend`): every shard's candidate program
         sees the bucketed Q, so the per-shard compiled-shape count stays
-        O(log max_batch) too.
+        O(log max_batch) too.  ``quantized=True`` runs the int8 D-tiled
+        pipeline over the per-shard quantized caches instead
+        (`core.knn.sharded_recommend_for_users_quant`, DESIGN.md §8.4;
+        euclidean only) — row-wise quantization makes the cross-shard
+        merge bitwise the single-engine quantized path.
         """
         ids, q_n, _ = _pad_request(user_ids)
         if q_n == 0:
             return np.zeros((0, topn), np.int32)
-        recs = knn.sharded_recommend_for_users(
-            self.corpora(), ids,
-            k=self.params.k_neighbors if k is None else k,
-            alpha=self.params.alpha if alpha is None else alpha,
-            topn=topn, n_shards=self.spec.n_shards, metric=metric)
+        k = self.params.k_neighbors if k is None else k
+        alpha = self.params.alpha if alpha is None else alpha
+        if quantized:
+            if metric != "euclidean":
+                raise ValueError("quantized serving is euclidean-only")
+            recs = knn.sharded_recommend_for_users_quant(
+                self.quantized_corpora(), ids, k=k, alpha=alpha,
+                topn=topn, n_shards=self.spec.n_shards)
+        else:
+            recs = knn.sharded_recommend_for_users(
+                self.corpora(), ids, k=k, alpha=alpha,
+                topn=topn, n_shards=self.spec.n_shards, metric=metric)
         return np.asarray(recs)[:q_n]
 
     # -- recovery ---------------------------------------------------------------

@@ -39,6 +39,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.types import StreamState, _pow2_pad
+from repro.optim.compression import quantize_int8_rows
 from repro.streaming import faults
 
 
@@ -311,6 +312,20 @@ def _refresh_corpus_rows(corpus, user_vecs, uv_scale, rows):
     return corpus.at[rows].set(user_vecs[rows] * uv_scale[rows, None])
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _requantize_rows(corpus_q, scales, corpus, rows):
+    """Re-quantize exactly the touched rows of the int8 serving corpus.
+
+    ``corpus_q`` int8[M, I] / ``scales`` f32[M] are updated in place
+    (donation — the refresh is O(dirty·I), not O(M·I)); per-row scaling
+    means a row's quantization depends only on its own values, so
+    touched rows re-quantize independently of the rest of the corpus.
+    ``rows`` may contain pow2-padding duplicates (identical writes).
+    """
+    sub_q, sub_s = quantize_int8_rows(corpus[rows])
+    return corpus_q.at[rows].set(sub_q), scales.at[rows].set(sub_s)
+
+
 class StateStore:
     """Owns the StreamState, the serving corpus cache and persistence.
 
@@ -330,12 +345,22 @@ class StateStore:
                                       sh, is_leaf=lambda x: x is None)
         self._corpus: Optional[jax.Array] = None
         self._dirty: Set[int] = set()
+        # int8 serving corpus cache (DESIGN.md §8.4): derived from the
+        # fp32 cache, with its OWN dirty set — the two caches refresh on
+        # independent schedules (a deployment may serve only one)
+        self._corpus_q: Optional[jax.Array] = None
+        self._corpus_qscale: Optional[jax.Array] = None
+        self._q_dirty: Set[int] = set()
         # degraded-serving freeze (DESIGN.md §9): while frozen, corpus()
         # keeps answering from this snapshot and performs no refreshes
         self._frozen_corpus: Optional[jax.Array] = None
+        self._frozen_quant: Optional[tuple] = None
         self.corpus_full_builds = 0
         self.corpus_rows_refreshed = 0
         self.corpus_threshold_rebuilds = 0
+        self.quant_full_builds = 0
+        self.quant_rows_refreshed = 0
+        self.quant_threshold_rebuilds = 0
         # robustness counters (observability only)
         self.io_retries = 0
         self.restore_fallbacks = 0
@@ -353,14 +378,21 @@ class StateStore:
         The engine calls this after every micro-batch / stability
         refresh with the touched users; O(|users|) set inserts.
         """
-        if self._corpus is None:
+        if self._corpus is None and self._corpus_q is None:
             return            # no cache yet: the first corpus() builds it
-        self._dirty.update(int(x) for x in np.asarray(users).ravel())
+        rows = [int(x) for x in np.asarray(users).ravel()]
+        if self._corpus is not None:
+            self._dirty.update(rows)
+        if self._corpus_q is not None:
+            self._q_dirty.update(rows)
 
     def invalidate_all(self) -> None:
-        """Drop the cache entirely (restore, out-of-band state edits)."""
+        """Drop the caches entirely (restore, out-of-band state edits)."""
         self._corpus = None
         self._dirty.clear()
+        self._corpus_q = None
+        self._corpus_qscale = None
+        self._q_dirty.clear()
 
     def freeze_serving(self) -> None:
         """Enter degraded serving: pin the current corpus snapshot.
@@ -375,12 +407,14 @@ class StateStore:
             self._frozen_corpus = self.corpus()
 
     def thaw_serving(self) -> None:
-        """Leave degraded serving: un-pin the snapshot.
+        """Leave degraded serving: un-pin the snapshots.
 
-        The next :meth:`corpus` call serves the live state again
-        (restore paths invalidate the cache, so it rebuilds fresh).
+        The next :meth:`corpus` / :meth:`quantized_corpus` call serves
+        the live state again (restore paths invalidate the caches, so
+        they rebuild fresh).
         """
         self._frozen_corpus = None
+        self._frozen_quant = None
 
     @property
     def serving_degraded(self) -> bool:
@@ -432,6 +466,54 @@ class StateStore:
                 jnp.asarray(rows))
             self._dirty.clear()
         return self._corpus
+
+    def quantized_corpus(self) -> tuple:
+        """The int8 serving corpus: ``(q int8[M, I], scale f32[M])``.
+
+        The cache entry behind `core.knn.recommend_for_users_quant`
+        (DESIGN.md §8.4): per-row power-of-two-scale quantization
+        (`optim.compression.quantize_int8_rows`) of the fp32 serving
+        corpus.  Derived from :meth:`corpus` — the call refreshes the
+        fp32 cache first, then re-quantizes ONLY the rows dirtied since
+        the last ``quantized_corpus()`` call (its own dirty set: the
+        two caches refresh on independent schedules).  Row-wise scaling
+        is what makes this O(dirty·I): a touched row re-quantizes
+        without looking at any other row.  Past
+        ``corpus_rebuild_frac·n_users`` dirty rows one full re-quantize
+        is cheaper (and compiles once), mirroring the fp32 policy.
+
+        Same LIFETIME contract as :meth:`corpus` (in-place donated
+        refresh), and the same DEGRADED MODE: while frozen, a pinned
+        snapshot is served (quantized from the pinned fp32 snapshot on
+        first use).
+        """
+        if self._frozen_corpus is not None:
+            if self._frozen_quant is None:
+                self._frozen_quant = quantize_int8_rows(self._frozen_corpus)
+            return self._frozen_quant
+        corpus = self.corpus()
+        if self._corpus_q is None:
+            self._corpus_q, self._corpus_qscale = quantize_int8_rows(corpus)
+            self._q_dirty.clear()
+            self.quant_full_builds += 1
+        elif len(self._q_dirty) > self.cfg.corpus_rebuild_frac \
+                * self.cfg.n_users:
+            self._corpus_q, self._corpus_qscale = quantize_int8_rows(corpus)
+            self._q_dirty.clear()
+            self.quant_full_builds += 1
+            self.quant_threshold_rebuilds += 1
+        elif self._q_dirty:
+            rows = np.fromiter(self._q_dirty, np.int32, len(self._q_dirty))
+            self.quant_rows_refreshed += rows.size
+            pad = _pow2_pad(rows.size, self.cfg.n_users) - rows.size
+            if pad:
+                rows = np.concatenate([rows, np.full(pad, rows[0],
+                                                     np.int32)])
+            self._corpus_q, self._corpus_qscale = _requantize_rows(
+                self._corpus_q, self._corpus_qscale, corpus,
+                jnp.asarray(rows))
+            self._q_dirty.clear()
+        return self._corpus_q, self._corpus_qscale
 
     # -- persistence (exactly-once recovery substrate) -----------------------
 
