@@ -20,7 +20,12 @@ Rules:
   * ``interpret``-backend runs are never enforced (interpret-mode Pallas
     timings are equivalence/plumbing numbers, not perf);
   * runs present in only one file are skipped with a note (a TPU entry
-    in the committed file does not fail a CPU-only CI run).
+    in the committed file does not fail a CPU-only CI run);
+  * every summary key (in BOTH files) must classify under the
+    gated/parity naming convention (repro.analysis.bench_schema, lint
+    rule EN03) — an unknown key is a hard failure, because a silently
+    unclassifiable key is how a renamed speedup metric escapes this
+    gate.
 
     PYTHONPATH=src python benchmarks/bench_trend.py \
         --new bench-smoke.json --baseline BENCH_updates.json
@@ -30,6 +35,13 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+from pathlib import Path
+
+try:
+    from repro.analysis.bench_schema import classify_summary_key
+except ImportError:  # run as a plain script without PYTHONPATH=src
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    from repro.analysis.bench_schema import classify_summary_key
 
 
 def _runs(path: str) -> dict:
@@ -60,6 +72,21 @@ def main(argv=None) -> int:
 
     new_runs = _runs(args.new)
     base_runs = _runs(args.baseline)
+
+    unknown = []
+    for src_name, runs in (("--new", new_runs),
+                           ("--baseline", base_runs)):
+        for key, run in runs.items():
+            for metric in run.get("summary", {}):
+                if classify_summary_key(metric) == "unknown":
+                    unknown.append((src_name, _key_name(key), metric))
+    if unknown:
+        print("summary key(s) outside the gated/parity naming "
+              "convention (rule EN03, repro.analysis.bench_schema):")
+        for src_name, run_name, metric in unknown:
+            print(f"  {src_name} [{run_name}] {metric}")
+        return 1
+
     regressions = []
     compared = 0
     for key, new in sorted(new_runs.items(), key=lambda kv: _key_name(
@@ -74,12 +101,13 @@ def main(argv=None) -> int:
             if not isinstance(nv, (int, float)) \
                     or not isinstance(bv, (int, float)):
                 continue
+            cls = classify_summary_key(metric)
             # interpret-mode runs are equivalence/plumbing numbers (the
             # bench refuses them outside --smoke); never gate on them
-            enforced = "speedup" in metric and bv >= args.floor \
+            enforced = cls == "gated-ratio" and bv >= args.floor \
                 and key[0] != "interpret"
             status = "ok"
-            if "compiled" in metric and key[0] != "interpret":
+            if cls == "gated-bound" and key[0] != "interpret":
                 # shape-bucketing counts: hard upper bound, no tolerance
                 if nv > bv:
                     status = f"INCREASED {bv:.0f} -> {nv:.0f}"
@@ -94,7 +122,7 @@ def main(argv=None) -> int:
                     regressions.append((key, metric, bv, nv,
                                         f"-{drop:.0%}"))
                 compared += 1
-            elif "speedup" in metric:
+            elif cls == "gated-ratio":
                 status = "below floor, not enforced"
             else:
                 status = "informational"

@@ -1,0 +1,32 @@
+"""Static analysis for kernel contracts and engine invariants.
+
+An AST-driven lint pass (DESIGN.md §10) that checks the repo's declared
+contracts against its code, in three rule families:
+
+* ``KC*`` — kernel contracts: every ``pl.pallas_call`` site carries a
+  registered :class:`~repro.analysis.contracts.KernelContract` whose
+  grid rank, BlockSpec index-map arities, tail masks, dtype rules and
+  analytic VMEM model (``repro.analysis.vmem``) match the code.
+* ``OR*`` — oracle pairing: every dispatcher in ``kernels/ops.py``
+  reaches a ``kernels/ref.py`` oracle, some test imports both, and the
+  intentionally duplicated function pairs stay AST-identical.
+* ``EN*`` — engine invariants: ``state_store`` write paths reach the
+  atomic commit primitive, fault sites form a closed registry with
+  ``streaming/faults.py``, and BENCH summary keys follow the
+  gated/parity naming convention (``repro.analysis.bench_schema``).
+
+Everything here is stdlib-only (``ast`` + ``json``): importing this
+package never pulls in jax, so kernel modules can register contracts at
+import time without cost.  The repo-level driver is
+``repro.analysis.linter`` (CLI: ``tools/lint_kernels.py``).
+"""
+from repro.analysis import bench_schema, contracts, report, vmem
+from repro.analysis.contracts import KernelContract, register
+from repro.analysis.report import Finding, Report
+from repro.analysis.vmem import VMEM_BUDGET_BYTES, stage_a_vmem_bytes
+
+__all__ = [
+    "bench_schema", "contracts", "report", "vmem",
+    "KernelContract", "register", "Finding", "Report",
+    "VMEM_BUDGET_BYTES", "stage_a_vmem_bytes",
+]

@@ -1,0 +1,42 @@
+"""The BENCH summary-key naming convention (rule EN03, DESIGN.md §10.4).
+
+Every ``summary`` key a benchmark records in ``BENCH_updates.json``
+must classify as one of:
+
+* ``gated-ratio`` — contains ``speedup``: a relative-performance claim
+  the trend gate (benchmarks/bench_trend.py) enforces with a tolerance
+  ratio above its floor (interpret-backend runs never enforced).
+* ``gated-bound`` — contains ``compiled``: a compiled-program count the
+  trend gate enforces as a hard upper bound (bucketing regressions).
+* ``parity`` — an informational fact the trend report prints but does
+  not gate: latency/recovery percentiles and means (``_ms``), growth
+  ratios, throughput (``qps``/``per_s``), capacity/extent markers
+  (``max_``, ``vmem``, ``hbm``), agreement metrics (``parity``,
+  ``overlap``), sweep descriptors (``swept``, ``grid``, ``shards``)
+  and robustness counters (``dead_letters``, ``rejections``).
+
+Anything else is ``unknown`` — EN03 in the linter, and a hard failure
+in ``bench_trend.py`` (a silently-ignored key is how a renamed speedup
+metric escapes the regression gate).
+"""
+from __future__ import annotations
+
+# Substrings that mark a key as an ungated informational (parity) fact.
+PARITY_MARKERS = (
+    "parity", "growth", "qps", "per_s", "overlap", "hbm", "vmem",
+    "swept", "grid", "dead_letters", "rejections", "max_", "_ms",
+)
+
+# Keys that are parity facts by exact name (no marker substring).
+PARITY_EXACT = frozenset({"shards"})
+
+
+def classify_summary_key(key: str) -> str:
+    """'gated-ratio' | 'gated-bound' | 'parity' | 'unknown' for ``key``."""
+    if "speedup" in key:
+        return "gated-ratio"
+    if "compiled" in key:
+        return "gated-bound"
+    if key in PARITY_EXACT or any(m in key for m in PARITY_MARKERS):
+        return "parity"
+    return "unknown"

@@ -1,0 +1,95 @@
+"""Kernel contracts: the declared side of the KC lint rules (§10.1).
+
+Every ``pl.pallas_call`` entry point registers a :class:`KernelContract`
+at import time (a sidecar ``register(...)`` block at the bottom of its
+module — a decorator would have to thread through the ``functools
+.partial(jax.jit, ...)`` wrappers).  The contract states what the kernel
+*promises* — grid rank, scalar-prefetch count, tail-mask coverage,
+divisibility preconditions, accumulator dtypes, exact-parity status and
+an analytic VMEM model with declared max shapes — and the AST rules in
+``repro.analysis.kernel_rules`` verify the code keeps each promise.
+
+The registry key is ``(module, entry)``; ``repro.analysis.linter``
+imports :data:`KERNEL_MODULES` to populate it before scanning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+# Marker for a grid axis whose tail is handled by Pallas' out-of-range
+# write masking (output-block rows past the array end are dropped).
+OOB_WRITE = "oob-write"
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """Declared invariants of one ``pl.pallas_call`` entry point.
+
+    ``module``/``entry`` key the registry; ``body`` names the kernel
+    body function the dtype rules (KC05/KC07) inspect.  ``tail`` maps
+    each non-divisible (``pl.cdiv``) grid axis to how its tail block is
+    handled: :data:`OOB_WRITE`, or a source snippet (whitespace-
+    insensitive) that must appear in the body — e.g. the mask predicate
+    ``"tile_idx >= m"``.  ``divisible=True`` declares that every
+    exact-division grid axis is guarded by an entry-side divisibility
+    ``assert`` (KC04).  ``accumulators`` are the VMEM scratch dtypes in
+    declaration order (KC08).  ``exact_parity=False`` opts the body out
+    of the no-approximate-transcendentals rule (KC07) — the only such
+    kernel is flash_attention, whose oracle is allclose, not bitwise.
+    ``vmem_model(**max_shapes)`` must stay under the 16 MiB budget
+    (KC03) and is pinned to real block allocations by
+    tests/test_vmem_model.py.
+    """
+
+    module: str
+    entry: str
+    body: str
+    grid_rank: int
+    scalar_prefetch: int = 0
+    tail: Mapping[int, str] = dataclasses.field(default_factory=dict)
+    divisible: bool = False
+    exact_parity: bool = True
+    accumulators: Tuple[str, ...] = ()
+    vmem_model: Optional[Callable[..., int]] = None
+    max_shapes: Optional[Mapping[str, int]] = None
+
+    def max_vmem_bytes(self) -> int:
+        """The model evaluated at the declared max shapes."""
+        if self.vmem_model is None or self.max_shapes is None:
+            raise ValueError(
+                f"{self.module}.{self.entry}: no vmem model declared")
+        return self.vmem_model(**dict(self.max_shapes))
+
+
+REGISTRY: Dict[Tuple[str, str], KernelContract] = {}
+
+
+def register(contract: KernelContract) -> KernelContract:
+    """Register ``contract`` under ``(module, entry)`` (idempotent)."""
+    REGISTRY[(contract.module, contract.entry)] = contract
+    return contract
+
+
+# Modules the linter imports to populate the registry (and the only
+# modules allowed to contain pallas_call sites — KC01 scans the whole
+# kernels/ directory).
+KERNEL_MODULES = (
+    "repro.kernels.knn_topk",
+    "repro.kernels.serving_topn",
+    "repro.kernels.sparse_row_scatter",
+    "repro.kernels.sparse_row_gather",
+    "repro.kernels.decayed_scatter",
+    "repro.kernels.flash_attention",
+)
+
+# Intentionally duplicated function pairs that must stay AST-identical
+# (OR03).  Both exist because kernels/ref.py must not import the module
+# that owns the original; the lint rule normalizes ``pl.cdiv(a, b)`` to
+# ``-(-a // b)`` and strips docstrings before comparing.
+DUPLICATE_PAIRS = (
+    (("repro.kernels.knn_topk", "tiled_sqnorm"),
+     ("repro.kernels.ref", "tiled_sqnorm_ref")),
+    (("repro.core.knn", "pairwise_scores"),
+     ("repro.kernels.ref", "_pairwise_scores")),
+)

@@ -1,0 +1,118 @@
+"""Seeded-violation corpus runner (DESIGN.md §10.5).
+
+Each file under ``tests/analysis_corpus/`` is a known-bad snippet —
+parsed, never imported — and ``manifest.json`` maps it to the checker
+that must flag it plus the rule ids expected.  A case passes when the
+expected rules are a subset of what the checker reports; the corpus is
+the analyzer's own regression suite (``lint_kernels.py --selftest``),
+so a rule that silently stops firing fails CI the same way a kernel
+regression would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from repro.analysis import astutil, engine_rules, kernel_rules, \
+    oracle_rules
+from repro.analysis.contracts import OOB_WRITE, KernelContract
+
+# Closed fault-site registry the corpus `faults` checker validates
+# against (a fixed stand-in for the real faults.py registries).
+CORPUS_FAULT_SITES = frozenset({"npz.pre_write", "LATEST.pre_replace"})
+
+
+def _small_model(bq: int = 128, bm: int = 256) -> int:
+    return 3 * bq * bm * 4
+
+
+def _blowup_model(d: int, bq: int = 128) -> int:
+    return bq * d * 4
+
+
+def _contract(**kw) -> KernelContract:
+    base: Dict[str, object] = dict(
+        module="corpus", entry="thing", body="_kernel", grid_rank=2,
+        tail={0: OOB_WRITE, 1: "tile >= m"}, accumulators=("float32",),
+        vmem_model=_small_model, max_shapes={"bq": 128, "bm": 256})
+    base.update(kw)
+    return KernelContract(**base)  # type: ignore[arg-type]
+
+
+# Contracts the `kernel` checker pairs with each corpus file — written
+# so only the seeded defect (plus its knock-ons) fires.
+CORPUS_CONTRACTS: Dict[str, Dict[str, KernelContract]] = {
+    "kc01_unregistered.py": {},
+    "kc02_grid_arity.py": {"thing": _contract()},
+    "kc02_prefetch_arity.py": {"thing": _contract()},
+    "kc03_vmem_blowup.py": {"thing": _contract(
+        vmem_model=_blowup_model, max_shapes={"d": 1 << 20, "bq": 128})},
+    "kc04_missing_tailmask.py": {"thing": _contract(
+        tail={0: OOB_WRITE})},
+    "kc04_undeclared_cdiv.py": {"thing": _contract(tail={})},
+    "kc05_implicit_dot.py": {"thing": _contract()},
+    "kc05_f16_dot.py": {"thing": _contract()},
+    "kc06_float64.py": {"thing": _contract()},
+    "kc07_exp_in_parity.py": {"thing": _contract()},
+    "kc08_accum_dtype.py": {"thing": _contract()},
+}
+
+
+@dataclasses.dataclass
+class CaseResult:
+    """One corpus case: expected rule ids vs what the checker found."""
+
+    name: str
+    expected: List[str]
+    found: List[str]
+
+    @property
+    def ok(self) -> bool:
+        """True when every expected rule id was reported."""
+        return set(self.expected) <= set(self.found)
+
+    def __str__(self) -> str:
+        mark = "ok  " if self.ok else "FAIL"
+        return (f"{mark} {self.name}: expected {sorted(self.expected)}, "
+                f"found {sorted(set(self.found))}")
+
+
+def run_case(path: Path, spec: Dict) -> CaseResult:
+    """Run the checker named by ``spec['checker']`` over one case file."""
+    checker = spec["checker"]
+    if checker == "bench":
+        findings = engine_rules.check_bench_keys(path)
+    else:
+        sf = astutil.load(path)
+        if checker == "kernel":
+            findings = kernel_rules.check_kernel_file(
+                path, sf.tree, sf.text,
+                CORPUS_CONTRACTS.get(path.name, {}))
+        elif checker == "ops":
+            findings = oracle_rules.check_dispatchers_in_tree(
+                sf.tree, path, ref_names=set())
+        elif checker == "duplicate":
+            a, b = spec["pair"]
+            findings = oracle_rules.check_duplicate_pair(
+                (path, a), (path, b))
+        elif checker == "store":
+            findings = engine_rules.check_commit_paths_in_tree(
+                sf.tree, path)
+        elif checker == "faults":
+            findings, _ = engine_rules.check_trip_calls_in_tree(
+                sf.tree, path, set(CORPUS_FAULT_SITES))
+        else:
+            raise ValueError(f"{path.name}: unknown checker {checker!r}")
+    return CaseResult(name=path.name, expected=list(spec["rules"]),
+                      found=[f.rule for f in findings])
+
+
+def run_corpus(corpus_dir: Path) -> List[CaseResult]:
+    """Run every case listed in ``corpus_dir/manifest.json``."""
+    manifest = json.loads((corpus_dir / "manifest.json").read_text())
+    results = []
+    for name in sorted(manifest):
+        results.append(run_case(corpus_dir / name, manifest[name]))
+    return results

@@ -1,0 +1,206 @@
+"""Rule family (c): engine invariants (EN01–EN03).
+
+EN01: every public state-store/engine path that performs a raw durable
+write must reach the single atomic LATEST commit site
+(``atomic_write_json``) — a write path that bypasses it can leave a
+torn manifest after a crash.  EN02: fault-injection site names form a
+closed registry — a ``trip("...")`` with an unregistered name silently
+never fires, so the chaos suite stops covering that crash window.
+EN03: ``BENCH_updates.json`` summary keys must follow the naming
+convention ``repro.analysis.bench_schema`` classifies, or the trend
+gate cannot tell a gated metric from an informational one.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.bench_schema import classify_summary_key
+from repro.analysis.report import Finding
+
+# The one function allowed to write the LATEST manifest; reaching it is
+# what makes a durable-write path "committed".
+COMMIT_SINK = "atomic_write_json"
+
+
+def _f(rule: str, path: Path, line: int, msg: str) -> Finding:
+    return Finding(rule=rule, path=str(path), line=line, message=msg)
+
+
+def _is_public(qualname: str) -> bool:
+    return not any(part.startswith("_") for part in qualname.split("."))
+
+
+def check_commit_paths_in_tree(tree: ast.Module,
+                               path: Path) -> List[Finding]:
+    """EN01 over one parsed module."""
+    findings: List[Finding] = []
+    funcs = astutil.collect_functions(tree)
+    edges = astutil.call_edges(funcs)
+    writers = {q for q, info in funcs.items()
+               if q != COMMIT_SINK and q.rsplit(".", 1)[-1] != COMMIT_SINK
+               and astutil.writes_raw(info.node)}
+    if not writers:
+        return findings
+    commit_names = {q for q in funcs
+                    if q.rsplit(".", 1)[-1] == COMMIT_SINK}
+    for q, info in sorted(funcs.items()):
+        if not _is_public(q):
+            continue
+        reach = astutil.transitive_closure(q, edges)
+        if not reach & writers:
+            continue
+        reaches_commit = bool(reach & commit_names) or \
+            COMMIT_SINK in astutil.referenced_names(info.node)
+        if not reaches_commit:
+            findings.append(_f(
+                "EN01", path, info.node.lineno,
+                f"public `{q}` reaches a raw durable write "
+                f"({sorted(reach & writers)}) without reaching the "
+                f"atomic commit site `{COMMIT_SINK}`"))
+    return findings
+
+
+def check_commit_paths(root: Path) -> List[Finding]:
+    """EN01 over the streaming state-store and engine modules."""
+    findings: List[Finding] = []
+    for rel in ("streaming/state_store.py", "streaming/engine.py"):
+        path = root / "src" / "repro" / rel
+        if path.exists():
+            sf = astutil.load(path)
+            findings += check_commit_paths_in_tree(sf.tree, path)
+    return findings
+
+
+def _resolve_tuple(expr: ast.expr,
+                   env: Dict[str, ast.expr]) -> Tuple[str, ...]:
+    """Evaluate a registry expression: string-tuple literals plus
+    ``NAME + (...)`` concatenation."""
+    if isinstance(expr, ast.Name) and expr.id in env:
+        return _resolve_tuple(env[expr.id], env)
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        out = []
+        for e in expr.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return tuple(out)
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Add):
+        return (_resolve_tuple(expr.left, env)
+                + _resolve_tuple(expr.right, env))
+    return ()
+
+
+def registered_fault_sites(faults_path: Path) -> Set[str]:
+    """The closed site registry parsed from ``faults.py`` (the union of
+    every ``*_SITES`` module-level tuple)."""
+    tree = astutil.load(faults_path).tree
+    env: Dict[str, ast.expr] = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            env[node.targets[0].id] = node.value
+    sites: Set[str] = set()
+    for name, value in env.items():
+        if name.endswith("_SITES"):
+            sites |= set(_resolve_tuple(value, env))
+    return sites
+
+
+def _trip_arg(node: ast.Call) -> Optional[ast.expr]:
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else \
+        getattr(f, "id", None)
+    if name == "trip" and node.args:
+        return node.args[0]
+    return None
+
+
+def check_trip_calls_in_tree(tree: ast.Module, path: Path,
+                             sites: Set[str]) -> Tuple[List[Finding],
+                                                       Set[str]]:
+    """EN02 over one module's ``trip(...)`` calls.
+
+    Returns (findings, covered-sites).  Literal args must be registered;
+    f-string args must end in a constant suffix matching a registered
+    site's tail (e.g. ``f"SHARDS.{tag}.pre_replace"`` never occurs —
+    the sharded sites use fixed names — but ``f"{prefix}.pre_replace"``
+    would cover every site ending in ``.pre_replace``).
+    """
+    findings: List[Finding] = []
+    covered: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        arg = _trip_arg(node)
+        if arg is None:
+            continue
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            if arg.value in sites:
+                covered.add(arg.value)
+            else:
+                findings.append(_f(
+                    "EN02", path, node.lineno,
+                    f"trip({arg.value!r}) names an unregistered fault "
+                    "site"))
+        elif isinstance(arg, ast.JoinedStr):
+            suffix = ""
+            if arg.values and isinstance(arg.values[-1], ast.Constant):
+                suffix = str(arg.values[-1].value)
+            matched = {s for s in sites if suffix and s.endswith(suffix)}
+            if matched:
+                covered |= matched
+            else:
+                findings.append(_f(
+                    "EN02", path, node.lineno,
+                    f"dynamic trip(f\"...{suffix}\") matches no "
+                    "registered fault site"))
+        else:
+            findings.append(_f(
+                "EN02", path, node.lineno,
+                "trip() argument is not a statically-checkable string"))
+    return findings, covered
+
+
+def check_fault_registry(root: Path) -> List[Finding]:
+    """EN02: all trip sites registered AND all registered sites tripped."""
+    faults_path = root / "src" / "repro" / "streaming" / "faults.py"
+    sites = registered_fault_sites(faults_path)
+    findings: List[Finding] = []
+    covered: Set[str] = set()
+    sdir = root / "src" / "repro" / "streaming"
+    for path in sorted(sdir.glob("*.py")):
+        if path.name == "faults.py":
+            continue
+        f, c = check_trip_calls_in_tree(astutil.load(path).tree, path,
+                                        sites)
+        findings += f
+        covered |= c
+    for site in sorted(sites - covered):
+        findings.append(_f(
+            "EN02", faults_path, 1,
+            f"registered fault site {site!r} is never tripped by any "
+            "streaming write path"))
+    return findings
+
+
+def check_bench_keys(json_path: Path) -> List[Finding]:
+    """EN03 over every run summary in a BENCH json file."""
+    findings: List[Finding] = []
+    if not json_path.exists():
+        return findings
+    try:
+        data = json.loads(json_path.read_text())
+    except (ValueError, OSError) as e:
+        return [_f("EN03", json_path, 1, f"unreadable bench json: {e}")]
+    for i, run in enumerate(data.get("runs", [])):
+        for key in run.get("summary", {}):
+            if classify_summary_key(key) == "unknown":
+                findings.append(_f(
+                    "EN03", json_path, 1,
+                    f"runs[{i}] ({run.get('bench', '?')}): summary key "
+                    f"{key!r} does not follow the gated/parity naming "
+                    "convention"))
+    return findings

@@ -1,0 +1,42 @@
+"""Repo-level driver: run every rule family and collect a Report.
+
+This is the only analysis module that imports repo code (the kernel
+modules, to populate the contract registry) — the rule modules stay
+pure-AST so the corpus can exercise known-bad snippets without
+importing them.
+"""
+from __future__ import annotations
+
+import importlib
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import engine_rules, kernel_rules, oracle_rules
+from repro.analysis.contracts import (DUPLICATE_PAIRS, KERNEL_MODULES,
+                                      REGISTRY)
+from repro.analysis.report import Report
+
+
+def default_root() -> Path:
+    """The repo root, resolved from this file (src/repro/analysis/)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def load_contracts() -> None:
+    """Import every kernel module so its register() block runs."""
+    for module in KERNEL_MODULES:
+        importlib.import_module(module)
+
+
+def lint_repo(root: Optional[Path] = None) -> Report:
+    """Run all KC/OR/EN rules over the repo at ``root``."""
+    root = Path(root) if root is not None else default_root()
+    load_contracts()
+    findings = []
+    findings += kernel_rules.check_kernels(root, REGISTRY)
+    findings += oracle_rules.check_oracle_pairing(root)
+    findings += oracle_rules.check_duplicates(root, DUPLICATE_PAIRS)
+    findings += engine_rules.check_commit_paths(root)
+    findings += engine_rules.check_fault_registry(root)
+    findings += engine_rules.check_bench_keys(root / "BENCH_updates.json")
+    return Report(findings=sorted(findings))

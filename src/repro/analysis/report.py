@@ -1,0 +1,86 @@
+"""Findings and the machine-readable lint report (DESIGN.md §10).
+
+A :class:`Finding` is one rule violation anchored to a file/line; a
+:class:`Report` is the full result of a lint run and serializes to the
+JSON document ``tools/lint_kernels.py --json`` emits (and CI archives).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List
+
+# Rule-id -> one-line description (the authoritative rule list; §10).
+RULES = {
+    "KC01": "pallas_call site without a registered KernelContract "
+            "(or a stale contract with no surviving site)",
+    "KC02": "grid rank / scalar-prefetch count does not match the "
+            "contract or the BlockSpec index-map arities",
+    "KC03": "analytic VMEM model missing, inconsistent with max_shapes, "
+            "or over the 16 MiB budget at declared max shapes",
+    "KC04": "non-divisible (cdiv) grid axis without a tail mask, or a "
+            "divisibility contract without an enforcing assert",
+    "KC05": "kernel-body dot without an explicit f32/i32 accumulation "
+            "dtype (preferred_element_type)",
+    "KC06": "float64 reference inside a kernel module",
+    "KC07": "approximate transcendental in an exact-parity kernel body",
+    "KC08": "VMEM scratch accumulator dtypes do not match the contract "
+            "(running accumulators must be f32/i32)",
+    "OR01": "ops.py dispatcher with no reachable kernels/ref.py oracle",
+    "OR02": "dispatcher/oracle pair never exercised together by a test",
+    "OR03": "intentional duplicate pair has drifted (AST-normalized "
+            "bodies differ)",
+    "EN01": "state-store write path does not reach the atomic commit "
+            "primitive (atomic_write_json)",
+    "EN02": "fault-site registry not closed (unknown trip site, or a "
+            "registered site with no hook)",
+    "EN03": "BENCH summary key matches neither the gated nor the "
+            "parity naming convention",
+}
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation: ``rule`` id, location, human message."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def to_dict(self) -> dict:
+        """Plain-dict form for the JSON report."""
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message,
+                "description": RULES.get(self.rule, "")}
+
+    def __str__(self) -> str:
+        """``path:line: RULE message`` (compiler-style)."""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class Report:
+    """A full lint run: sorted findings plus per-family counts."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        """True when the run produced no findings."""
+        return not self.findings
+
+    def counts(self) -> dict:
+        """Finding count per rule id (only rules that fired)."""
+        out: dict = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def to_json(self) -> str:
+        """The machine-readable report document."""
+        return json.dumps({
+            "ok": self.ok,
+            "counts": self.counts(),
+            "findings": [f.to_dict() for f in sorted(self.findings)],
+        }, indent=2, sort_keys=True)

@@ -1,5 +1,7 @@
-"""Personalised collaborative-filtering prediction (paper §2.2, last part)
-and ranking metrics (Recall@K, NDCG@K — paper §6.1).
+"""Personalised collaborative-filtering prediction and ranking metrics.
+
+Covers the paper's prediction step (§2.2, last part) and the evaluation
+metrics (Recall@K, NDCG@K — §6.1).
 
 Prediction:  p = alpha * u_target + (1 - alpha) * mean(top-k neighbours).
 
@@ -87,9 +89,12 @@ def predict(queries, corpus, k: int, alpha: float,
 def streaming_topk(queries, corpus, k: int, metric: str = "euclidean",
                    chunk: int = 65536, exclude_self: bool = False,
                    query_ids=None):
-    """Top-k without materializing [Q, M] scores: scan corpus chunks with
-    a running top-k merge — the pure-JAX rendition of kernels.knn_topk
-    (the Pallas kernel is the on-chip TPU version of this schedule)."""
+    """Top-k without materializing the [Q, M] score matrix.
+
+    Scans corpus chunks with a running top-k merge — the pure-JAX
+    rendition of kernels.knn_topk (the Pallas kernel is the on-chip TPU
+    version of this schedule).
+    """
     q_n, d = queries.shape
     m = corpus.shape[0]
     # Remainder rows are handled as one extra masked tail block (padding
@@ -179,8 +184,10 @@ def distributed_predict(queries, corpus, k: int, alpha: float, mesh, rules,
 
 
 def chunked_neighbor_mean(corpus, idx, chunk_k: int = 8):
-    """mean(corpus[idx], axis=1) accumulated over neighbour chunks —
-    avoids the [Q, k, I] gather (Q=4096, k=300, I=16k ⇒ 80 GB)."""
+    """mean(corpus[idx], axis=1) accumulated over neighbour chunks.
+
+    Avoids the [Q, k, I] gather (Q=4096, k=300, I=16k ⇒ 80 GB).
+    """
     q_n, k = idx.shape
     # Pad the neighbour list to a chunk multiple (index -1, masked in the
     # body) rather than shrinking chunk_k to 1 for prime k.

@@ -17,7 +17,7 @@ Two state representations coexist (see DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,7 @@ class TifuParams:
     k_neighbors: int = 300
     alpha: float = 0.7
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not (0.0 < self.r_b <= 1.0):
             raise ValueError(f"r_b must be in (0, 1], got {self.r_b}")
         if not (0.0 < self.r_g <= 1.0):
@@ -145,14 +145,15 @@ class StreamState:
     uv_scale: jax.Array
     lgv_scale: jax.Array
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> Tuple[Tuple[jax.Array, ...], None]:
         children = (self.user_vecs, self.last_group_vecs, self.history,
                     self.group_sizes, self.n_baskets, self.n_groups,
                     self.err_mult, self.uv_scale, self.lgv_scale)
         return children, None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: None,
+                       children: Tuple[jax.Array, ...]) -> "StreamState":
         return cls(*children)
 
     # -- true-value accessors -------------------------------------------------
@@ -188,7 +189,7 @@ class StreamState:
     @staticmethod
     def zeros(n_users: int, n_items: int, max_baskets: int,
               max_basket_size: int, max_groups: int | None = None,
-              dtype=jnp.float32) -> "StreamState":
+              dtype: Any = jnp.float32) -> "StreamState":
         if max_groups is None:
             max_groups = max_baskets  # worst case: all groups of size 1
         return StreamState(
@@ -230,12 +231,13 @@ class UpdateBatch:
     basket_pos: jax.Array
     item: jax.Array
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> Tuple[Tuple[jax.Array, ...], None]:
         return (self.kind, self.user, self.basket_items, self.basket_pos,
                 self.item), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: None,
+                       children: Tuple[jax.Array, ...]) -> "UpdateBatch":
         return cls(*children)
 
     @property
@@ -299,11 +301,12 @@ class AddBatch:
     items: jax.Array
     valid: jax.Array
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> Tuple[Tuple[jax.Array, ...], None]:
         return (self.user, self.items, self.valid), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: None,
+                       children: Tuple[jax.Array, ...]) -> "AddBatch":
         return cls(*children)
 
     @property
@@ -311,7 +314,8 @@ class AddBatch:
         return self.user.shape[0]
 
     @staticmethod
-    def build(users, baskets, max_basket_size: int, pad_cap: int = 0,
+    def build(users: Sequence[int], baskets: Sequence[Any],
+              max_basket_size: int, pad_cap: int = 0,
               pad_to: int = 0) -> "AddBatch":
         """From parallel host lists of user ids and item-id sequences.
 
@@ -348,11 +352,12 @@ class DelBasketBatch:
     pos: jax.Array
     valid: jax.Array
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> Tuple[Tuple[jax.Array, ...], None]:
         return (self.user, self.pos, self.valid), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: None,
+                       children: Tuple[jax.Array, ...]) -> "DelBasketBatch":
         return cls(*children)
 
     @property
@@ -360,8 +365,8 @@ class DelBasketBatch:
         return self.user.shape[0]
 
     @staticmethod
-    def build(users, positions, pad_cap: int = 0,
-              pad_to: int = 0) -> "DelBasketBatch":
+    def build(users: Sequence[int], positions: Sequence[int],
+              pad_cap: int = 0, pad_to: int = 0) -> "DelBasketBatch":
         n = len(users)
         u = _resolve_pad(n, pad_cap, pad_to)
         user = np.zeros(u, np.int32)
@@ -390,11 +395,12 @@ class DelItemBatch:
     item: jax.Array
     valid: jax.Array
 
-    def tree_flatten(self):
+    def tree_flatten(self) -> Tuple[Tuple[jax.Array, ...], None]:
         return (self.user, self.pos, self.item, self.valid), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: None,
+                       children: Tuple[jax.Array, ...]) -> "DelItemBatch":
         return cls(*children)
 
     @property
@@ -402,7 +408,8 @@ class DelItemBatch:
         return self.user.shape[0]
 
     @staticmethod
-    def build(users, positions, items, pad_cap: int = 0,
+    def build(users: Sequence[int], positions: Sequence[int],
+              items: Sequence[int], pad_cap: int = 0,
               pad_to: int = 0) -> "DelItemBatch":
         n = len(users)
         u = _resolve_pad(n, pad_cap, pad_to)

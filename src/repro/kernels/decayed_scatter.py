@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem as _avmem
+from repro.analysis.contracts import KernelContract, register
+
 
 def _kernel(ids_ref, w_ref, out_ref, acc, *, bi: int):
     ii = pl.program_id(0)
@@ -78,3 +81,17 @@ def batched_decayed_scatter(ids, weights, n_items: int,
     return jax.vmap(lambda i, w: decayed_scatter(i, w, n_items,
                                                  interpret=interpret))(
         ids, weights)
+
+
+# Kernel contract (DESIGN.md §10.1): both grid axes are exact divisions
+# guarded by the assert in the entry (divisible=True).
+register(KernelContract(
+    module="repro.kernels.decayed_scatter",
+    entry="decayed_scatter",
+    body="_kernel",
+    grid_rank=2,
+    divisible=True,
+    accumulators=("float32",),
+    vmem_model=_avmem.decayed_scatter_block_bytes,
+    max_shapes={"b": 512, "bn": 256, "bi": 512},
+))

@@ -20,6 +20,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem as _avmem
+from repro.analysis.contracts import KernelContract, register
+
 NEG_INF = -1e30
 
 
@@ -100,3 +103,20 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
         interpret=interpret,
     )(qf, kf, vf)
     return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+# Kernel contract (DESIGN.md §10.1).  The S/KV grid axes are exact
+# divisions guarded by the entry assert; exact_parity=False because the
+# online softmax uses jnp.exp — its oracle (ref.flash_attention_ref)
+# compares allclose, not bitwise.
+register(KernelContract(
+    module="repro.kernels.flash_attention",
+    entry="flash_attention",
+    body="_kernel",
+    grid_rank=3,
+    divisible=True,
+    exact_parity=False,
+    accumulators=("float32", "float32", "float32"),
+    vmem_model=_avmem.flash_attention_block_bytes,
+    max_shapes={"d": 256, "bq": 256, "bk": 256},
+))

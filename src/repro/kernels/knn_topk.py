@@ -56,6 +56,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem as _avmem
+from repro.analysis.contracts import OOB_WRITE, KernelContract, register
+
 
 def _kernel(qid_ref, q_ref, c_ref, cn_ref, vals_ref, idx_ref, acc_vals,
             acc_idx, *, k: int, bm: int, metric: str, m: int,
@@ -341,3 +344,29 @@ def knn_topk_dtiled(queries, corpus, k: int, bq: int = 128, bm: int = 512,
         interpret=interpret,
     )(query_gids.astype(jnp.int32), queries, corpus, cnorm, qnorm,
       q_scale, c_scale)
+
+
+# Kernel contracts (DESIGN.md §10.1): what tools/lint_kernels.py holds
+# the pallas_call sites above to.  Grid axis 0 tails via Pallas OOB
+# write masking; the corpus/D axes tail via the in-kernel masks quoted.
+register(KernelContract(
+    module="repro.kernels.knn_topk",
+    entry="knn_topk",
+    body="_kernel",
+    grid_rank=2,
+    tail={0: OOB_WRITE, 1: "tile_idx >= m"},
+    accumulators=("float32", "int32"),
+    vmem_model=_avmem.knn_topk_block_bytes,
+    max_shapes={"d": 4096, "k": 512, "bq": 128, "bm": 512},
+))
+register(KernelContract(
+    module="repro.kernels.knn_topk",
+    entry="knn_topk_dtiled",
+    body="_dtiled_kernel",
+    grid_rank=3,
+    tail={0: OOB_WRITE, 1: "tile_idx >= m", 2: "lane < d"},
+    accumulators=("float32", "float32", "int32"),
+    vmem_model=_avmem.knn_topk_dtiled_block_bytes,
+    max_shapes={"d": 1 << 20, "k": 512, "bq": 128, "bm": 512,
+                "bd": 512},
+))

@@ -15,10 +15,12 @@ from __future__ import annotations
 
 import contextlib
 import functools
+from typing import Any, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import vmem as _analysis_vmem
 from repro.kernels import ref, tile_plan
 from repro.kernels.decayed_scatter import (batched_decayed_scatter,
                                            decayed_scatter)
@@ -38,7 +40,7 @@ _DEFAULT_IMPL = "auto"
 
 
 @contextlib.contextmanager
-def default_impl(impl: str):
+def default_impl(impl: str) -> Iterator[None]:
     """Process-wide impl override (auto | pallas | interpret | ref).
 
     Jitted callers (core.updates) capture the dispatch decision at trace
@@ -56,7 +58,7 @@ def default_impl(impl: str):
         jax.clear_caches()
 
 
-def _resolve(impl):
+def _resolve(impl: Optional[str]) -> str:
     return _DEFAULT_IMPL if impl is None else impl
 
 
@@ -64,7 +66,9 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
+def knn_topk(queries: jax.Array, corpus: jax.Array, k: int,
+             impl: str | None = None,
+             **kw: Any) -> Tuple[jax.Array, jax.Array]:
     """Fused similarity + top-k (paper §2.2 neighbour search).
 
     O(Q·M·I) compute over corpus tiles with an on-chip [Q, k] running
@@ -80,8 +84,9 @@ def knn_topk(queries, corpus, k: int, impl: str | None = None, **kw):
                        **kw)
 
 
-def knn_topk_dtiled(queries, corpus, k: int, bd: int = 512,
-                    impl: str | None = None, **kw):
+def knn_topk_dtiled(queries: jax.Array, corpus: jax.Array, k: int,
+                    bd: int = 512, impl: str | None = None,
+                    **kw: Any) -> Tuple[jax.Array, jax.Array]:
     """D-tiled streaming top-k (DESIGN.md §8.4): VMEM flat in D.
 
     Same contract as :func:`knn_topk` (euclidean only) with the item
@@ -103,15 +108,18 @@ def knn_topk_dtiled(queries, corpus, k: int, bd: int = 512,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "topn", "metric"))
-def _fused_recommend_ref(corpus, user_ids, alpha, k, topn, metric):
+def _fused_recommend_ref(corpus: jax.Array, user_ids: jax.Array,
+                         alpha: float, k: int, topn: int,
+                         metric: str) -> jax.Array:
     return ref.fused_recommend_ref(corpus, user_ids, k, alpha, topn, metric)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "alpha", "topn", "metric",
                                     "interpret"))
-def _fused_recommend_pallas(corpus, user_ids, k, alpha, topn, metric,
-                            interpret):
+def _fused_recommend_pallas(corpus: jax.Array, user_ids: jax.Array,
+                            k: int, alpha: float, topn: int, metric: str,
+                            interpret: bool) -> jax.Array:
     queries = corpus[user_ids]
     _, idx = _knn_pallas(queries, corpus, k, metric=metric,
                          query_gids=user_ids, interpret=interpret)
@@ -121,7 +129,9 @@ def _fused_recommend_pallas(corpus, user_ids, k, alpha, topn, metric,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "topn", "bd"))
-def _fused_recommend_dtiled_ref(corpus, user_ids, alpha, k, topn, bd):
+def _fused_recommend_dtiled_ref(corpus: jax.Array, user_ids: jax.Array,
+                                alpha: float, k: int, topn: int,
+                                bd: int) -> jax.Array:
     queries = corpus[user_ids]
     _, idx = ref.dtiled_topk_ref(queries, corpus, k, bd=bd,
                                  query_gids=user_ids)
@@ -131,8 +141,9 @@ def _fused_recommend_dtiled_ref(corpus, user_ids, alpha, k, topn, bd):
 @functools.partial(jax.jit,
                    static_argnames=("k", "alpha", "topn", "bd",
                                     "interpret"))
-def _fused_recommend_dtiled_pallas(corpus, user_ids, k, alpha, topn, bd,
-                                   interpret):
+def _fused_recommend_dtiled_pallas(corpus: jax.Array, user_ids: jax.Array,
+                                   k: int, alpha: float, topn: int,
+                                   bd: int, interpret: bool) -> jax.Array:
     queries = corpus[user_ids]
     _, idx = _knn_dtiled_pallas(queries, corpus, k, bd=bd,
                                 query_gids=user_ids, interpret=interpret)
@@ -142,8 +153,9 @@ def _fused_recommend_dtiled_pallas(corpus, user_ids, k, alpha, topn, bd,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "topn", "bd"))
-def _fused_recommend_quant_ref(corpus_q, c_scale, user_ids, alpha, k,
-                               topn, bd):
+def _fused_recommend_quant_ref(corpus_q: jax.Array, c_scale: jax.Array,
+                               user_ids: jax.Array, alpha: float, k: int,
+                               topn: int, bd: int) -> jax.Array:
     return ref.fused_recommend_quant_ref(corpus_q, c_scale, user_ids, k,
                                          alpha, topn, bd)
 
@@ -151,8 +163,10 @@ def _fused_recommend_quant_ref(corpus_q, c_scale, user_ids, alpha, k,
 @functools.partial(jax.jit,
                    static_argnames=("k", "alpha", "topn", "bd",
                                     "interpret"))
-def _fused_recommend_quant_pallas(corpus_q, c_scale, user_ids, k, alpha,
-                                  topn, bd, interpret):
+def _fused_recommend_quant_pallas(corpus_q: jax.Array, c_scale: jax.Array,
+                                  user_ids: jax.Array, k: int,
+                                  alpha: float, topn: int, bd: int,
+                                  interpret: bool) -> jax.Array:
     queries_q = corpus_q[user_ids]
     q_scale = c_scale[user_ids]
     _, idx = _knn_dtiled_pallas(queries_q, corpus_q, k, bd=bd,
@@ -166,9 +180,10 @@ def _fused_recommend_quant_pallas(corpus_q, c_scale, user_ids, k, alpha,
     return ids
 
 
-def fused_recommend(corpus, user_ids, k: int, alpha: float, topn: int,
-                    metric: str = "euclidean", impl: str | None = None,
-                    bd: int | None = None):
+def fused_recommend(corpus: jax.Array, user_ids: jax.Array, k: int,
+                    alpha: float, topn: int, metric: str = "euclidean",
+                    impl: str | None = None,
+                    bd: int | None = None) -> jax.Array:
     """Fused serving path: corpus rows → top-n item ids, one program.
 
     ``corpus`` f32[M, I] (the cached serving corpus), ``user_ids``
@@ -211,9 +226,10 @@ def fused_recommend(corpus, user_ids, k: int, alpha: float, topn: int,
         metric=metric, interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def fused_recommend_quant(corpus_q, c_scale, user_ids, k: int,
+def fused_recommend_quant(corpus_q: jax.Array, c_scale: jax.Array,
+                          user_ids: jax.Array, k: int,
                           alpha: float, topn: int, bd: int = 512,
-                          impl: str | None = None):
+                          impl: str | None = None) -> jax.Array:
     """Int8 fused serving (DESIGN.md §8.4): quantized corpus → top-n ids.
 
     ``corpus_q`` int8[M, I] with per-row ``c_scale`` f32[M]
@@ -244,16 +260,20 @@ def fused_recommend_quant(corpus_q, c_scale, user_ids, k: int,
 
 @functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
                                              "metric"))
-def _shard_topk_ref(queries, corpus, query_gids, k, shard, n_shards,
-                    metric):
+def _shard_topk_ref(queries: jax.Array, corpus: jax.Array,
+                    query_gids: Optional[jax.Array], k: int, shard: int,
+                    n_shards: int,
+                    metric: str) -> Tuple[jax.Array, jax.Array]:
     return ref.shard_topk_ref(queries, corpus, k, shard, n_shards,
                               query_gids, metric)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
                                              "metric", "interpret"))
-def _shard_topk_pallas(queries, corpus, query_gids, k, shard, n_shards,
-                       metric, interpret):
+def _shard_topk_pallas(queries: jax.Array, corpus: jax.Array,
+                       query_gids: jax.Array, k: int, shard: int,
+                       n_shards: int, metric: str,
+                       interpret: bool) -> Tuple[jax.Array, jax.Array]:
     vals, idx = _knn_pallas(queries, corpus, k, metric=metric,
                             query_gids=query_gids, col_offset=shard,
                             col_stride=n_shards, sub_qnorm=True,
@@ -267,9 +287,10 @@ def _shard_topk_pallas(queries, corpus, query_gids, k, shard, n_shards,
     return vals, jnp.where(jnp.isneginf(vals), query_gids[:, None], gids)
 
 
-def shard_topk(queries, corpus, k: int, shard: int, n_shards: int,
-               query_gids=None, metric: str = "euclidean",
-               impl: str | None = None):
+def shard_topk(queries: jax.Array, corpus: jax.Array, k: int, shard: int,
+               n_shards: int, query_gids: jax.Array | None = None,
+               metric: str = "euclidean",
+               impl: str | None = None) -> Tuple[jax.Array, jax.Array]:
     """Per-shard neighbour candidates ``([Q, k'] scores, global ids)``.
 
     ``k' = min(k, M_s)``.  The TPU path streams corpus tiles through the
@@ -300,8 +321,11 @@ def shard_topk(queries, corpus, k: int, shard: int, n_shards: int,
 
 @functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
                                              "bd"))
-def _shard_topk_quant_ref(queries_q, q_scale, corpus_q, c_scale,
-                          query_gids, k, shard, n_shards, bd):
+def _shard_topk_quant_ref(queries_q: jax.Array, q_scale: jax.Array,
+                          corpus_q: jax.Array, c_scale: jax.Array,
+                          query_gids: jax.Array, k: int, shard: int,
+                          n_shards: int,
+                          bd: int) -> Tuple[jax.Array, jax.Array]:
     vals, idx = ref.dtiled_topk_ref(queries_q, corpus_q, k, bd=bd,
                                     query_gids=query_gids,
                                     col_offset=shard, col_stride=n_shards,
@@ -313,9 +337,12 @@ def _shard_topk_quant_ref(queries_q, q_scale, corpus_q, c_scale,
 
 @functools.partial(jax.jit, static_argnames=("k", "shard", "n_shards",
                                              "bd", "interpret"))
-def _shard_topk_quant_pallas(queries_q, q_scale, corpus_q, c_scale,
-                             query_gids, k, shard, n_shards, bd,
-                             interpret):
+def _shard_topk_quant_pallas(queries_q: jax.Array, q_scale: jax.Array,
+                             corpus_q: jax.Array, c_scale: jax.Array,
+                             query_gids: jax.Array, k: int, shard: int,
+                             n_shards: int, bd: int,
+                             interpret: bool
+                             ) -> Tuple[jax.Array, jax.Array]:
     vals, idx = _knn_dtiled_pallas(queries_q, corpus_q, k, bd=bd,
                                    query_gids=query_gids,
                                    col_offset=shard, col_stride=n_shards,
@@ -326,9 +353,12 @@ def _shard_topk_quant_pallas(queries_q, q_scale, corpus_q, c_scale,
     return vals, jnp.where(jnp.isneginf(vals), query_gids[:, None], gids)
 
 
-def shard_topk_quant(queries_q, q_scale, corpus_q, c_scale, k: int,
-                     shard: int, n_shards: int, query_gids=None,
-                     bd: int = 512, impl: str | None = None):
+def shard_topk_quant(queries_q: jax.Array, q_scale: jax.Array,
+                     corpus_q: jax.Array, c_scale: jax.Array, k: int,
+                     shard: int, n_shards: int,
+                     query_gids: jax.Array | None = None,
+                     bd: int = 512, impl: str | None = None
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Per-shard int8 neighbour candidates ``([Q, k'] scores, gids)``.
 
     The quantized twin of :func:`shard_topk` — D-tiled stage A over one
@@ -359,18 +389,22 @@ def shard_topk_quant(queries_q, q_scale, corpus_q, c_scale, k: int,
 
 
 @functools.partial(jax.jit, static_argnames=("topn",))
-def _blend_rows_ref(queries, neighbor_rows, alpha, topn):
+def _blend_rows_ref(queries: jax.Array, neighbor_rows: jax.Array,
+                    alpha: float, topn: int) -> jax.Array:
     return ref.blend_topn_rows_ref(queries, neighbor_rows, alpha, topn)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "topn", "interpret"))
-def _blend_rows_pallas(queries, neighbor_rows, alpha, topn, interpret):
+def _blend_rows_pallas(queries: jax.Array, neighbor_rows: jax.Array,
+                       alpha: float, topn: int,
+                       interpret: bool) -> jax.Array:
     return _blend_rows(queries, neighbor_rows, alpha=alpha, topn=topn,
                        interpret=interpret)[1]
 
 
-def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
-                    impl: str | None = None):
+def blend_topn_rows(queries: jax.Array, neighbor_rows: jax.Array,
+                    alpha: float, topn: int,
+                    impl: str | None = None) -> jax.Array:
     """Cross-shard final stage: fetched rows [Q, k, I] → top-n ids.
 
     Mean over k + alpha blend + top-n; the TPU path fuses them per item
@@ -386,24 +420,29 @@ def blend_topn_rows(queries, neighbor_rows, alpha: float, topn: int,
 
 
 @functools.partial(jax.jit, static_argnames=("topn",))
-def _blend_rows_quant_ref(queries_q, q_scale, neighbor_rows_q, n_scale,
-                          alpha, topn):
+def _blend_rows_quant_ref(queries_q: jax.Array, q_scale: jax.Array,
+                          neighbor_rows_q: jax.Array, n_scale: jax.Array,
+                          alpha: float, topn: int) -> jax.Array:
     return ref.blend_topn_rows_quant_ref(queries_q, q_scale,
                                          neighbor_rows_q, n_scale, alpha,
                                          topn)
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "topn", "interpret"))
-def _blend_rows_quant_pallas_ids(queries_q, q_scale, neighbor_rows_q,
-                                 n_scale, alpha, topn, interpret):
+def _blend_rows_quant_pallas_ids(queries_q: jax.Array, q_scale: jax.Array,
+                                 neighbor_rows_q: jax.Array,
+                                 n_scale: jax.Array, alpha: float,
+                                 topn: int,
+                                 interpret: bool) -> jax.Array:
     return _blend_rows_quant_pallas(queries_q, q_scale, neighbor_rows_q,
                                     n_scale, alpha=alpha, topn=topn,
                                     interpret=interpret)[1]
 
 
-def blend_topn_rows_quant(queries_q, q_scale, neighbor_rows_q, n_scale,
+def blend_topn_rows_quant(queries_q: jax.Array, q_scale: jax.Array,
+                          neighbor_rows_q: jax.Array, n_scale: jax.Array,
                           alpha: float, topn: int,
-                          impl: str | None = None):
+                          impl: str | None = None) -> jax.Array:
     """Quantized cross-shard final stage: int8 rows [Q, k, I] → top-n.
 
     The int8 twin of :func:`blend_topn_rows`: the k fetched rows cross
@@ -443,24 +482,19 @@ def stage_a_vmem_bytes(d: int, k: int, bq: int = 128, bm: int = 512,
                        itemsize: int = 4) -> int:
     """Analytic peak VMEM residency (bytes) of one stage-A grid step.
 
-    Monolithic (``bd=None``): the [bq, D] query and [bm, D] corpus
-    blocks dominate — linear in the item count D, the ~64k-item wall
-    (16 MiB VMEM / (bq+bm)·4 B).  D-tiled: [bq, bd] + [bm, bd] operand
-    blocks (``itemsize`` bytes: 4 fp32, 1 int8) + the f32 [bq, bm]
-    accumulator — flat in D.  Both include the f32+i32 [bq, k] running
-    top-k.  This is the model `benchmarks/bench_serving.py --scale`
-    records per sweep point (DESIGN.md §8.2's table is generated from
-    it); it counts double-buffered operand blocks once, so real
-    residency is ≤ 2× for the streamed inputs.
+    Re-exported from :mod:`repro.analysis.vmem`, which owns this
+    capacity-planning model alongside the exact per-kernel block models
+    the contract linter budgets against (DESIGN.md §10.2); see
+    :func:`repro.analysis.vmem.stage_a_vmem_bytes` for the full model
+    notes.  Kept as a function (not an alias) so the signature stays in
+    this module's API docs.
     """
-    topk = bq * k * (4 + 4)
-    if bd is None:
-        return (bq * d + bm * d) * itemsize + bq * bm * 4 + topk
-    bd = min(bd, d)
-    return (bq * bd + bm * bd) * itemsize + bq * bm * 4 + topk
+    return _analysis_vmem.stage_a_vmem_bytes(d, k, bq=bq, bm=bm, bd=bd,
+                                             itemsize=itemsize)
 
 
-def multihot_scatter(ids, weights, n_items: int, impl: str | None = None):
+def multihot_scatter(ids: jax.Array, weights: jax.Array, n_items: int,
+                     impl: str | None = None) -> jax.Array:
     """Weighted multi-hot scatter (the Eq. 1+2 from-scratch builder).
 
     One decayed-average user/group vector per call: O(N·B) input ids
@@ -491,7 +525,8 @@ def plan_bi(n_items: int) -> int | None:
     return None
 
 
-def _plan_dims(n_items: int, ids, t_max_cap: int = 0):
+def _plan_dims(n_items: int, ids: jax.Array,
+               t_max_cap: int = 0) -> Tuple[int, int] | None:
     """(bi, t_max) for the tile-planned kernels, or None → ref fallback.
 
     ``bi`` is the largest lane-aligned tile dividing ``n_items``;
@@ -515,8 +550,9 @@ def _plan_dims(n_items: int, ids, t_max_cap: int = 0):
     return bi, min(_pow2_pad(tile_plan.max_touched_tiles(ids, bi)), cap)
 
 
-def sparse_row_scatter(table, rows, ids, vals, impl: str | None = None,
-                       t_max_cap: int = 0):
+def sparse_row_scatter(table: jax.Array, rows: jax.Array, ids: jax.Array,
+                       vals: jax.Array, impl: str | None = None,
+                       t_max_cap: int = 0) -> jax.Array:
     """Sparse per-row scatter-add into a [M, I] table (add-path deltas).
 
     XLA's native scatter is already O(U·W) on CPU/GPU; the tile-planned
@@ -538,8 +574,9 @@ def sparse_row_scatter(table, rows, ids, vals, impl: str | None = None,
         interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def sparse_row_gather(table, rows, ids, impl: str | None = None,
-                      t_max_cap: int = 0):
+def sparse_row_gather(table: jax.Array, rows: jax.Array, ids: jax.Array,
+                      impl: str | None = None,
+                      t_max_cap: int = 0) -> jax.Array:
     """Sparse per-row gather from a [M, I] table (update-path supports).
 
     XLA's native gather is already O(U·W) on CPU/GPU; the tile-planned
@@ -559,8 +596,9 @@ def sparse_row_gather(table, rows, ids, impl: str | None = None,
         interpret=(impl == "interpret" or not _on_tpu()))
 
 
-def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    impl: str | None = None, **kw):
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    impl: str | None = None, **kw: Any) -> jax.Array:
     """Blocked attention: [B,S,H,D] each → [B,S,H,D].
 
     O(S²·D) compute with O(S·D) memory (never an [S, S] score matrix in

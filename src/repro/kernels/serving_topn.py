@@ -40,6 +40,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem as _avmem
+from repro.analysis.contracts import OOB_WRITE, KernelContract, register
+
 
 def _merge_topn(top_vals, top_idx, pred, item_ids, n: int):
     """Merge a [bq, bi] prediction tile into the running [bq, n] buffer."""
@@ -306,3 +309,39 @@ def blend_topn_rows_quant(queries_q, q_scale, neighbor_rows_q, n_scale,
         ],
         interpret=interpret,
     )(queries_q, q_scale, neighbor_rows_q, n_scale)
+
+
+# Kernel contracts (DESIGN.md §10.1).  Query-axis tails are handled by
+# Pallas OOB write masking; item/corpus axes by the quoted in-kernel
+# masks.
+register(KernelContract(
+    module="repro.kernels.serving_topn",
+    entry="blend_topn_onehot",
+    body="_onehot_kernel",
+    grid_rank=3,
+    tail={0: OOB_WRITE, 1: "item_ids >= n_items", 2: "row_col < m"},
+    accumulators=("float32", "float32", "float32", "int32"),
+    vmem_model=_avmem.blend_topn_onehot_block_bytes,
+    max_shapes={"k": 1024, "topn": 512, "bq": 128, "bm": 512,
+                "bi": 512},
+))
+register(KernelContract(
+    module="repro.kernels.serving_topn",
+    entry="blend_topn_rows",
+    body="_rows_kernel",
+    grid_rank=2,
+    tail={0: OOB_WRITE, 1: "item_ids >= n_items"},
+    accumulators=("float32", "int32"),
+    vmem_model=_avmem.blend_topn_rows_block_bytes,
+    max_shapes={"k": 900, "topn": 512, "bq": 8, "bi": 512},
+))
+register(KernelContract(
+    module="repro.kernels.serving_topn",
+    entry="blend_topn_rows_quant",
+    body="_rows_quant_kernel",
+    grid_rank=2,
+    tail={0: OOB_WRITE, 1: "item_ids >= n_items"},
+    accumulators=("float32", "int32"),
+    vmem_model=_avmem.blend_topn_rows_quant_block_bytes,
+    max_shapes={"k": 900, "topn": 512, "bq": 8, "bi": 512},
+))

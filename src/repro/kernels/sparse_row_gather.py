@@ -33,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem as _avmem
+from repro.analysis.contracts import KernelContract, register
 from repro.kernels.tile_plan import build_plan
 
 
@@ -96,3 +98,19 @@ def sparse_row_gather(table, rows, ids, bi: int = 512,
         out_shape=jax.ShapeDtypeStruct((u, w), table.dtype),
         interpret=interpret,
     )(plan.batch, plan.row, plan.tile, plan.valid, ids, table)
+
+
+# Kernel contract (DESIGN.md §10.1): plan-driven grid, no scratch (the
+# [1, W] output block is the run-resident accumulator); divisible=True
+# records the I % bi == 0 precondition asserted above.
+register(KernelContract(
+    module="repro.kernels.sparse_row_gather",
+    entry="sparse_row_gather",
+    body="_kernel",
+    grid_rank=2,
+    scalar_prefetch=4,
+    divisible=True,
+    accumulators=(),
+    vmem_model=_avmem.sparse_row_gather_block_bytes,
+    max_shapes={"w": 4096, "bi": 512},
+))

@@ -38,6 +38,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import vmem as _avmem
+from repro.analysis.contracts import KernelContract, register
 from repro.kernels.tile_plan import build_plan
 
 
@@ -78,10 +80,11 @@ def _kernel(pbatch_ref, prow_ref, ptile_ref, pvalid_ref, ids_ref, vals_ref,
 @functools.partial(jax.jit, static_argnames=("bi", "t_max", "interpret"))
 def sparse_row_scatter(table, rows, ids, vals, bi: int = 512,
                        t_max: int | None = None, interpret: bool = False):
-    """table f32[M, I] (+)= scatter(rows i32[U], ids i32[U, W] PAD=-1,
-    vals f32[U, W]).  Returns the updated table (aliased in place).
+    """Scatter-add sparse per-row deltas into ``table`` in place.
 
-    Duplicate rows are handled (the tile plan sorts every (row, tile)
+    table f32[M, I] += scatter(rows i32[U], ids i32[U, W] PAD=-1,
+    vals f32[U, W]); returns the updated table (aliased via
+    ``input_output_aliases``).  Duplicate rows are handled (the tile plan sorts every (row, tile)
     block's visits onto consecutive grid steps, accumulating).  Requires
     I % bi == 0 and ``t_max`` >= the largest per-row touched-tile count
     (None picks the always-safe ``min(W, I/bi)``); the ops.py dispatcher
@@ -125,3 +128,19 @@ def sparse_row_scatter(table, rows, ids, vals, bi: int = 512,
         input_output_aliases={6: 0},   # table (after prefetch + ids/vals)
         interpret=interpret,
     )(plan.batch, plan.row, plan.tile, plan.valid, ids_s, vals_s, table)
+
+
+# Kernel contract (DESIGN.md §10.1).  The (U, T_max) grid axes are
+# plan-driven (neither cdiv nor exact division of an array axis);
+# divisible=True records the I % bi == 0 precondition asserted above.
+register(KernelContract(
+    module="repro.kernels.sparse_row_scatter",
+    entry="sparse_row_scatter",
+    body="_kernel",
+    grid_rank=2,
+    scalar_prefetch=4,
+    divisible=True,
+    accumulators=("float32",),
+    vmem_model=_avmem.sparse_row_scatter_block_bytes,
+    max_shapes={"w": 4096, "bi": 512},
+))

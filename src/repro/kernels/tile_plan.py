@@ -121,10 +121,13 @@ def build_plan(rows, ids, *, bi: int, t_max: int,
 
 
 def plan_dma_tiles(plan: TilePlan) -> int:
-    """Number of table tiles the plan DMAs: consecutive steps mapping the
-    same ``(row, tile)`` block share one fetch, so this is the count of
-    block-index changes + 1.  The acceptance contract pins it to the
-    touched-tile count (never ``U · I/bi``)."""
+    """Number of table tiles the plan DMAs (block-index changes + 1).
+
+    Consecutive steps mapping the same ``(row, tile)`` block share one
+    fetch, so the DMA count is the number of block-index changes + 1.
+    The acceptance contract pins it to the touched-tile count (never
+    ``U · I/bi``).
+    """
     r, t = np.asarray(plan.row), np.asarray(plan.tile)
     if r.size == 0:
         return 0
@@ -135,7 +138,8 @@ def max_touched_tiles(ids, bi: int) -> int:
     """Largest per-row touched-tile count (host-side, concrete ids only).
 
     The ops dispatcher uses this to shrink ``T_max`` below the static
-    ``min(W, I/bi)`` worst case when the batch is available on host."""
+    ``min(W, I/bi)`` worst case when the batch is available on host.
+    """
     t = np.asarray(ids)
     t = np.where(t >= 0, t // bi, -1)
     best = 1

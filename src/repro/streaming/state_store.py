@@ -31,7 +31,7 @@ import os
 import time
 import zipfile
 import zlib
-from typing import Callable, Optional, Set
+from typing import Any, Callable, Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,7 +94,7 @@ def _fsync_dir(path: str) -> None:
 
 def with_io_retries(fn: Callable, what: str, retries: int = 4,
                     base_delay_s: float = 0.005,
-                    on_retry: Optional[Callable] = None):
+                    on_retry: Optional[Callable] = None) -> Any:
     """Run ``fn`` retrying transient OSErrors with exponential backoff.
 
     Bounded budget: ``retries`` re-attempts (delays ``base_delay_s · 2^i``)
@@ -125,7 +125,7 @@ def _meta_crc(payload: dict) -> int:
     return zlib.crc32(json.dumps(probe, sort_keys=True).encode())
 
 
-def _file_crc(path: str) -> tuple:
+def _file_crc(path: str) -> Tuple[int, int]:
     """``(crc32, n_bytes)`` of a file, read in chunks."""
     crc, n = 0, 0
     with open(path, "rb") as f:
@@ -155,7 +155,7 @@ def atomic_write_json(path: str, payload: dict, retries: int = 4,
     payload["meta_crc32"] = _meta_crc(payload)
     base = os.path.basename(path)
 
-    def write():
+    def write() -> None:
         tmp = path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(payload, f)
@@ -183,7 +183,7 @@ def load_json_checked(path: str, retries: int = 4,
     """
     base = os.path.basename(path)
 
-    def read():
+    def read() -> bytes:
         faults.trip(f"{base}.read")
         # bytes, decoded below: a bit flip can produce invalid UTF-8,
         # which is corruption, not an I/O error to retry
@@ -209,7 +209,7 @@ def load_json_checked(path: str, retries: int = 4,
     return meta
 
 
-def _load_commit(directory: str, meta: dict):
+def _load_commit(directory: str, meta: dict) -> Dict[str, np.ndarray]:
     """Load + verify the state npz a commit's metadata names.
 
     Raises :class:`CorruptCheckpointError` when the npz misses the CRC
@@ -227,7 +227,7 @@ def _load_commit(directory: str, meta: dict):
                 f"{path} failed its CRC check (recorded {want}, computed "
                 f"{crc} over {n} bytes): torn or bit-flipped")
 
-    def read():
+    def read() -> Dict[str, np.ndarray]:
         faults.trip("npz.read")
         with np.load(path) as data:
             return {k: np.asarray(data[k]) for k in data.files}
@@ -245,7 +245,8 @@ def _load_commit(directory: str, meta: dict):
     return leaves
 
 
-def load_checkpoint_arrays(directory: str):
+def load_checkpoint_arrays(
+        directory: str) -> Tuple[dict, Dict[str, np.ndarray]]:
     """Read the newest VERIFIED commit as host arrays: ``(meta, leaves)``.
 
     Reads the ``LATEST`` metadata (the atomic commit point), verifies
@@ -285,7 +286,7 @@ def load_checkpoint_arrays(directory: str):
         + "; ".join(errors))
 
 
-def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
+def state_shardings(cfg: StoreConfig, mesh: Any) -> StreamState:
     """PartitionSpecs for every leaf of the state pytree."""
     u = P(cfg.user_axes)
     ui = P(cfg.user_axes, cfg.item_axes)
@@ -303,7 +304,9 @@ def state_shardings(cfg: StoreConfig, mesh) -> StreamState:
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _refresh_corpus_rows(corpus, user_vecs, uv_scale, rows):
+def _refresh_corpus_rows(corpus: jax.Array, user_vecs: jax.Array,
+                         uv_scale: jax.Array,
+                         rows: jax.Array) -> jax.Array:
     """Refresh ``corpus[rows] = uv_scale[rows] * user_vecs[rows]`` in place.
 
     ``rows`` may contain duplicates (pow2 padding repeats the first dirty
@@ -313,7 +316,9 @@ def _refresh_corpus_rows(corpus, user_vecs, uv_scale, rows):
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
-def _requantize_rows(corpus_q, scales, corpus, rows):
+def _requantize_rows(corpus_q: jax.Array, scales: jax.Array,
+                     corpus: jax.Array,
+                     rows: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Re-quantize exactly the touched rows of the int8 serving corpus.
 
     ``corpus_q`` int8[M, I] / ``scales`` f32[M] are updated in place
@@ -333,7 +338,7 @@ class StateStore:
     shardings above; on the CPU test runner they are single-device.
     """
 
-    def __init__(self, cfg: StoreConfig, mesh=None):
+    def __init__(self, cfg: StoreConfig, mesh: Any = None) -> None:
         self.cfg = cfg
         self.mesh = mesh
         self.state = StreamState.zeros(
@@ -372,7 +377,7 @@ class StateStore:
 
     # -- serving corpus cache (DESIGN.md §3.6) --------------------------------
 
-    def invalidate_users(self, users) -> None:
+    def invalidate_users(self, users: Any) -> None:
         """Mark user rows of the serving corpus stale.
 
         The engine calls this after every micro-batch / stability
@@ -546,7 +551,7 @@ class StateStore:
             "lgv_scale": np.asarray(self.state.lgv_scale),
         }
 
-        def write_npz():
+        def write_npz() -> Tuple[int, int]:
             faults.trip("npz.pre_write")
             with open(tmp, "wb") as f:
                 np.savez_compressed(f, **leaves)
@@ -596,7 +601,7 @@ class StateStore:
         if not os.path.exists(cur):
             return
 
-        def copy():
+        def copy() -> None:
             with open(cur, "rb") as f:
                 raw = f.read()
             tmp = cur + ".prev.tmp"

@@ -1,0 +1,13 @@
+"""Corpus case: trip() on an unregistered fault-site name (EN02).
+
+The site name is misspelled ("pre_wriet"), so the fault injector never
+fires there and the chaos suite silently stops covering that crash
+window.
+"""
+from repro.streaming import faults
+
+
+def commit(path, payload):
+    faults.trip("npz.pre_wriet")
+    with open(path, "w") as f:
+        f.write(payload)

@@ -1,0 +1,31 @@
+"""Corpus case: index-map arity != grid rank (expected KC02).
+
+The grid has rank 2 but every BlockSpec index map takes three
+arguments — a copy-paste from a 3-axis kernel that Pallas only rejects
+at trace time.
+"""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref, *, m):
+    tile = pl.program_id(1)
+    vals = x_ref[...]
+    vals = jnp.where(tile >= m, 0.0, vals)
+    acc_ref[...] = vals
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, n, m, bq=128, bm=256):
+    grid = (pl.cdiv(n, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bm), lambda qi, mi, di: (qi, mi))],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi, di: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x)

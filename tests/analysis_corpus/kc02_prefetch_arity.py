@@ -1,0 +1,34 @@
+"""Corpus case: undeclared scalar prefetch (expected KC02).
+
+The site uses PrefetchScalarGridSpec(num_scalar_prefetch=1) but its
+contract declares scalar_prefetch=0, so every index-map arity the
+contract implies is off by one.
+"""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(plan_ref, x_ref, o_ref, acc_ref, *, m):
+    tile = pl.program_id(1)
+    vals = x_ref[...]
+    vals = jnp.where(tile >= m, 0.0, vals)
+    acc_ref[...] = vals
+    o_ref[...] = acc_ref[...]
+
+
+def thing(plan, x, n, m, bq=128, bm=256):
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(pl.cdiv(n, bq), pl.cdiv(m, bm)),
+        in_specs=[
+            pl.BlockSpec((bq, bm), lambda qi, mi, plan_ref: (qi, mi)),
+        ],
+        out_specs=pl.BlockSpec((bq, bm),
+                               lambda qi, mi, plan_ref: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )
+    kernel = functools.partial(_kernel, m=m)
+    return pl.pallas_call(kernel, grid_spec=grid_spec)(plan, x)

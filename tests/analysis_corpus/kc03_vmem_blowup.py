@@ -1,0 +1,31 @@
+"""Corpus case: VMEM model over budget at max shapes (expected KC03).
+
+The kernel is fine at small shapes; its contract declares
+max_shapes d=2**20 with a model linear in d, which evaluates to
+512 MiB — far past the 16 MiB budget.
+"""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref, *, m):
+    tile = pl.program_id(1)
+    vals = x_ref[...]
+    vals = jnp.where(tile >= m, 0.0, vals)
+    acc_ref[...] = vals
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, n, m, bq=128, bm=256):
+    grid = (pl.cdiv(n, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi))],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x)

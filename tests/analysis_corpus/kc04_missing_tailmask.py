@@ -1,0 +1,28 @@
+"""Corpus case: cdiv grid axis with no tail handling (expected KC04).
+
+Axis 1 tiles m with pl.cdiv but the contract declares no tail entry
+for it — the tail block would reduce over garbage lanes.
+"""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    vals = x_ref[...]
+    acc_ref[...] = vals * jnp.float32(2.0)
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, n, m, bq=128, bm=256):
+    grid = (pl.cdiv(n, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi))],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x)

@@ -1,0 +1,25 @@
+"""Corpus case: exact-division grid without the precondition (KC04).
+
+Both grid axes use plain floor division but the contract does not
+declare divisible=True (and there is no divisibility assert), so a
+non-multiple input silently drops its tail elements.
+"""
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    acc_ref[...] = x_ref[...]
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, n, m, bq=128, bm=256):
+    grid = (n // bq, m // bm)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi))],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x)

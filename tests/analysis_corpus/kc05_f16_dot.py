@@ -1,0 +1,36 @@
+"""Corpus case: dot accumulating in float16 (expected KC05).
+
+preferred_element_type is present but names a low-precision dtype —
+the contract requires f32 (or i32 for int8 operands).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, m):
+    tile = pl.program_id(1)
+    scores = jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float16)
+    scores = jnp.where(tile >= m, 0.0, scores)
+    acc_ref[...] = scores
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, w, n, m, bq=128, bm=256):
+    grid = (pl.cdiv(n, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+            pl.BlockSpec((bm, bm), lambda qi, mi: (mi, mi)),
+        ],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x, w)

@@ -1,0 +1,31 @@
+"""Corpus case: float64 in a kernel module (expected KC06).
+
+TPUs have no f64 unit; under jax's default x64-disabled config the
+cast silently degrades to f32, and with x64 enabled it would fail to
+lower — either way the annotation is a lie.
+"""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref, *, m):
+    tile = pl.program_id(1)
+    vals = x_ref[...].astype(jnp.float64)
+    vals = jnp.where(tile >= m, 0.0, vals)
+    acc_ref[...] = vals.astype(jnp.float32)
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, n, m, bq=128, bm=256):
+    grid = (pl.cdiv(n, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi))],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x)

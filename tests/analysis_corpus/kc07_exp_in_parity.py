@@ -1,0 +1,32 @@
+"""Corpus case: approximate transcendental in an exact-parity kernel
+body (expected KC07).
+
+jnp.exp lowers to a polynomial approximation on TPU; a kernel whose
+oracle is compared bitwise cannot use it (the flash-attention kernel
+opts out via exact_parity=False — this contract does not).
+"""
+import functools
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref, *, m):
+    tile = pl.program_id(1)
+    vals = jnp.exp(x_ref[...])
+    vals = jnp.where(tile >= m, 0.0, vals)
+    acc_ref[...] = vals
+    o_ref[...] = acc_ref[...]
+
+
+def thing(x, n, m, bq=128, bm=256):
+    grid = (pl.cdiv(n, bq), pl.cdiv(m, bm))
+    kernel = functools.partial(_kernel, m=m)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi))],
+        out_specs=pl.BlockSpec((bq, bm), lambda qi, mi: (qi, mi)),
+        scratch_shapes=[pltpu.VMEM((bq, bm), jnp.float32)],
+    )(x)

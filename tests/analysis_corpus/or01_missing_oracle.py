@@ -1,0 +1,10 @@
+"""Corpus case: dispatcher with no reference oracle (expected OR01).
+
+A public dispatcher that never consults `ref.*` has no ground truth —
+nothing can catch its kernel silently drifting.
+"""
+from repro.kernels.knn_topk import knn_topk as _knn_pallas
+
+
+def thing(queries, corpus, k, impl=None):
+    return _knn_pallas(queries, corpus, k)

@@ -1,0 +1,24 @@
+"""Corpus case: intentional duplicate whose body drifted (OR03).
+
+tiled_thing_ref spells its tile count with floor division instead of
+ceil division — the classic off-by-one-tile drift the normalized body
+comparison exists to catch (cdiv(a, b) normalizes to -(-a // b), which
+is NOT a // b).
+"""
+from jax.experimental import pallas as pl
+
+
+def tiled_thing(x, d, bd=256):
+    nt = pl.cdiv(d, bd)
+    acc = 0.0
+    for t in range(nt):
+        acc = acc + x[t]
+    return acc
+
+
+def tiled_thing_ref(x, d, bd=256):
+    nt = d // bd
+    acc = 0.0
+    for t in range(nt):
+        acc = acc + x[t]
+    return acc

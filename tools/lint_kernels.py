@@ -1,0 +1,63 @@
+#!/usr/bin/env python
+"""Kernel-contract + engine-invariant linter CLI (DESIGN.md §10).
+
+Usage::
+
+    python tools/lint_kernels.py             # lint the repo, human output
+    python tools/lint_kernels.py --json out.json
+    python tools/lint_kernels.py --selftest  # run the seeded-bad corpus
+
+Exit status is 0 only when the repo lints clean (or, with --selftest,
+when every corpus case is flagged with its expected rule ids).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import corpus as corpus_mod  # noqa: E402
+from repro.analysis import linter  # noqa: E402
+
+
+def _selftest(root: Path) -> int:
+    results = corpus_mod.run_corpus(root / "tests" / "analysis_corpus")
+    for r in results:
+        print(r)
+    bad = [r for r in results if not r.ok]
+    print(f"{len(results) - len(bad)}/{len(results)} corpus cases ok")
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=ROOT,
+                    help="repo root to lint (default: this checkout)")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="also write the machine-readable report here")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the seeded-violation corpus instead")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        return _selftest(args.root)
+
+    report = linter.lint_repo(args.root)
+    if args.json is not None:
+        args.json.write_text(report.to_json() + "\n")
+    for finding in report.findings:
+        print(finding)
+    counts = report.counts()
+    if report.ok:
+        print("lint_kernels: clean "
+              f"({len(linter.REGISTRY)} contracts checked)")
+        return 0
+    print(f"lint_kernels: {len(report.findings)} finding(s) {counts}")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
