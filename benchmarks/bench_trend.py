@@ -15,6 +15,10 @@ Rules:
     ISSUE 5) are enforced as UPPER BOUNDS: the new count may never
     exceed the committed one — counts are load-insensitive, so there is
     no tolerance and no floor;
+  * ``*slo*`` summary keys (the compliance arm's deletion-latency
+    budgets, ISSUE 9) are normalized measured/objective fractions and
+    must stay ``<= 1.0`` — the SLO itself is the contract, so the gate
+    ignores the committed value and enforces the constant bound;
   * metrics whose BASELINE value is below ``--floor`` (default 1.5x) are
     reported but not enforced — smoke-scale ratios near 1x are noise;
   * ``interpret``-backend runs are never enforced (interpret-mode Pallas
@@ -115,6 +119,14 @@ def main(argv=None) -> int:
                                         f"+{nv - bv:.0f} compiled "
                                         f"shape(s)"))
                 compared += 1
+            elif cls == "gated-slo" and key[0] != "interpret":
+                # normalized SLO fractions: the objective is the bound,
+                # not the committed value — enforce the constant 1.0
+                if nv > 1.0:
+                    status = f"SLO BREACH {nv:.2f} > 1.00"
+                    regressions.append((key, metric, bv, nv,
+                                        f"{nv:.2f}x of its objective"))
+                compared += 1
             elif enforced and bv > 0:
                 drop = 1.0 - nv / bv
                 if drop > args.tolerance:
@@ -130,8 +142,9 @@ def main(argv=None) -> int:
                   f"({status})")
     if regressions:
         print(f"\n{len(regressions)} summary metric(s) regressed "
-              f"(speedups by more than {args.tolerance:.0%}, or compiled-"
-              f"program counts that increased):")
+              f"(speedups by more than {args.tolerance:.0%}, compiled-"
+              f"program counts that increased, or SLO fractions above "
+              f"1.0):")
         for key, metric, bv, nv, what in regressions:
             print(f"  [{_key_name(key)}] {metric}: {bv:.2f} -> {nv:.2f} "
                   f"({what})")

@@ -8,12 +8,18 @@ must classify as one of:
   ratio above its floor (interpret-backend runs never enforced).
 * ``gated-bound`` — contains ``compiled``: a compiled-program count the
   trend gate enforces as a hard upper bound (bucketing regressions).
+* ``gated-slo`` — contains ``slo``: a normalized service-level
+  fraction (measured / objective) the trend gate enforces as a hard
+  ``<= 1.0`` bound — the SLO itself is the contract, not the committed
+  baseline value (interpret-backend runs never enforced).
 * ``parity`` — an informational fact the trend report prints but does
   not gate: latency/recovery percentiles and means (``_ms``), growth
   ratios, throughput (``qps``/``per_s``), capacity/extent markers
   (``max_``, ``vmem``, ``hbm``), agreement metrics (``parity``,
-  ``overlap``), sweep descriptors (``swept``, ``grid``, ``shards``)
-  and robustness counters (``dead_letters``, ``rejections``).
+  ``overlap``), sweep descriptors (``swept``, ``grid``, ``shards``),
+  robustness counters (``dead_letters``, ``rejections``) and the
+  compliance arm's drift/certification facts (``drift``,
+  ``certified``).
 
 Anything else is ``unknown`` — EN03 in the linter, and a hard failure
 in ``bench_trend.py`` (a silently-ignored key is how a renamed speedup
@@ -25,6 +31,7 @@ from __future__ import annotations
 PARITY_MARKERS = (
     "parity", "growth", "qps", "per_s", "overlap", "hbm", "vmem",
     "swept", "grid", "dead_letters", "rejections", "max_", "_ms",
+    "drift", "certified",
 )
 
 # Keys that are parity facts by exact name (no marker substring).
@@ -32,11 +39,17 @@ PARITY_EXACT = frozenset({"shards"})
 
 
 def classify_summary_key(key: str) -> str:
-    """'gated-ratio' | 'gated-bound' | 'parity' | 'unknown' for ``key``."""
+    """Classify ``key`` under the EN03 naming convention.
+
+    Returns one of 'gated-ratio' | 'gated-bound' | 'gated-slo' |
+    'parity' | 'unknown'.
+    """
     if "speedup" in key:
         return "gated-ratio"
     if "compiled" in key:
         return "gated-bound"
+    if "slo" in key:
+        return "gated-slo"
     if key in PARITY_EXACT or any(m in key for m in PARITY_MARKERS):
         return "parity"
     return "unknown"

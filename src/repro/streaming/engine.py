@@ -157,6 +157,32 @@ class Event:
     seqno: int = -1
 
 
+@dataclasses.dataclass(frozen=True)
+class ForgetReceipt:
+    """Receipt of one ``forget_user`` call (the GDPR front door).
+
+    ``seqnos`` are the deletion events emitted on the user's behalf (the
+    audit trail tying the forget to the exactly-once log),
+    ``purged_dead_letters`` the quarantined events of theirs that were
+    dropped, and ``residue`` the post-scrub :meth:`StateStore.row_residue`
+    measurement — ``clean`` is True iff every artifact reads zero.  The
+    receipt is the per-call half of the compliance story; the full
+    certificate is ``repro.compliance.certify`` over the event log.
+    """
+
+    user: int
+    n_baskets_deleted: int
+    seqnos: tuple
+    purged_dead_letters: int
+    latency_s: float
+    residue: dict
+
+    @property
+    def clean(self) -> bool:
+        """True iff no live artifact still holds the user's data."""
+        return all(v == 0.0 for v in self.residue.values())
+
+
 @dataclasses.dataclass
 class EngineMetrics:
     """Counters one engine accumulates over its lifetime.
@@ -459,6 +485,66 @@ class StreamingEngine:
     def delete_item(self, user: int, pos: int, item: int) -> None:
         """Enqueue deletion of ``item`` from basket ``pos`` (Eq. 13)."""
         self.submit([Event(KIND_DEL_ITEM, user, pos=pos, item=item)])
+
+    # -- unlearning front door (DESIGN.md §11) ----------------------------------
+
+    def forget_user(self, user: int) -> ForgetReceipt:
+        """Erase ``user``'s entire history and every live trace of it.
+
+        The GDPR right-to-be-forgotten front door: drains the pending
+        queues (so the user's in-flight events land first), emits one
+        ``KIND_DEL_BASKET`` per remaining basket — last position first,
+        so every position stays valid — through the normal exactly-once
+        path, then scrubs the float dust the deletion arithmetic may
+        leave outside the final support (`_scrub_user`) and purges the
+        user's dead-letter entries (quarantined events carry payloads —
+        residue too).  Synchronous: returns only after the state is
+        clean, with a :class:`ForgetReceipt` tying the emitted seqnos to
+        the measured residue.  Cost: the user's O(n_baskets) deletion
+        events plus one O(n_items) row scrub.  Idempotent.
+        """
+        t0 = time.perf_counter()
+        self.run_until_drained()
+        nb = int(np.asarray(self.store.state.n_baskets)[user])
+        first = self._next_seqno
+        if nb:
+            self.submit([Event(KIND_DEL_BASKET, user, pos=p)
+                         for p in range(nb - 1, -1, -1)])
+            self.run_until_drained()
+        self._scrub_user(user)
+        purged = self._purge_dead_letters(user)
+        return ForgetReceipt(
+            user=user, n_baskets_deleted=nb,
+            seqnos=tuple(range(first, first + nb)),
+            purged_dead_letters=purged,
+            latency_s=time.perf_counter() - t0,
+            residue=self.store.row_residue([user]))
+
+    def _scrub_user(self, user: int) -> None:
+        """Zero a forgotten user's row exactly, caches included.
+
+        The deletion arithmetic zeroes the support cells of the final
+        history exactly (scenario 3 scatters the exact negation), but
+        earlier item deletes can leave f32 dust at cells OUTSIDE that
+        support — `refresh_users` on the now-empty history recomputes
+        the row from the integer leaves alone: exact zeros, scales
+        reset to 1.  `scrub_rows` then pushes the zeros into whichever
+        serving caches exist.
+        """
+        rows = jnp.asarray([user], jnp.int32)
+        self.store.state = refresh_users(self.store.state, rows,
+                                         self.params)
+        self.store.scrub_rows([user])
+
+    def _purge_dead_letters(self, user: int) -> int:
+        """Drop the user's quarantined events (they carry payloads)."""
+        kept = [(ev, why) for ev, why in self.dead_letter
+                if ev.user != user]
+        purged = len(self.dead_letter) - len(kept)
+        if purged:
+            self.dead_letter.clear()
+            self.dead_letter.extend(kept)
+        return purged
 
     # -- micro-batch processing -------------------------------------------------
 
@@ -1070,6 +1156,48 @@ class ShardedStreamingEngine:
     def delete_item(self, user: int, pos: int, item: int) -> None:
         """Enqueue deletion of ``item`` from basket ``pos`` (Eq. 13)."""
         self.submit([Event(KIND_DEL_ITEM, user, pos=pos, item=item)])
+
+    # -- unlearning front door (DESIGN.md §11) ----------------------------------
+
+    def forget_user(self, user: int) -> ForgetReceipt:
+        """Erase global ``user``'s history and every live trace of it.
+
+        Same contract as :meth:`StreamingEngine.forget_user`, with the
+        deletion events submitted THROUGH THE ROUTER: the router owns
+        the global seqno counter, and a shard-local submit would
+        self-assign seqnos that collide with future router-assigned
+        ones — silently deduping later legitimate traffic.  Scrubs at
+        the owner shard and purges both the router's dead letters
+        (global ids) and the shard's (local rows).
+        """
+        if not 0 <= user < self.spec.n_users:
+            raise InvalidEventError(
+                Event(KIND_DEL_BASKET, user),
+                f"user {user} outside the deployment's "
+                f"[0, {self.spec.n_users}) global range")
+        t0 = time.perf_counter()
+        self.run_until_drained()
+        sh = self.shards[self.spec.shard_of(user)]
+        local = int(self.spec.local_row(user))
+        nb = int(np.asarray(sh.store.state.n_baskets)[local])
+        first = self._next_seqno
+        if nb:
+            self.submit([Event(KIND_DEL_BASKET, user, pos=p)
+                         for p in range(nb - 1, -1, -1)])
+            self.run_until_drained()
+        sh._scrub_user(local)
+        purged = sh._purge_dead_letters(local)
+        kept = [(ev, why) for ev, why in self.dead_letter
+                if ev.user != user]
+        purged += len(self.dead_letter) - len(kept)
+        self.dead_letter.clear()
+        self.dead_letter.extend(kept)
+        return ForgetReceipt(
+            user=user, n_baskets_deleted=nb,
+            seqnos=tuple(range(first, first + nb)),
+            purged_dead_letters=purged,
+            latency_s=time.perf_counter() - t0,
+            residue=sh.store.row_residue([local]))
 
     # -- micro-batch processing -----------------------------------------------
 

@@ -21,6 +21,7 @@ import pytest
 
 import jax.numpy as jnp
 
+from repro.compliance import certify, retained_histories
 from repro.core import RefEngine, TifuParams, knn
 from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
 from repro.parallel.sharding import UserShardSpec
@@ -263,3 +264,102 @@ def test_chaos_quick(n_shards, sched, baseline, tmp_path):
                               for s in all_schedules(n)])
 def test_chaos_soak(n_shards, sched, baseline, tmp_path):
     run_schedule(n_shards, sched, baseline, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Deletion-burst (forget) schedules: GDPR compliance under faults
+# (ISSUE 9) — a crash mid-burst, then restore + at-least-once replay,
+# must still end in a certifiably compliant, no-trace state.
+# ---------------------------------------------------------------------------
+
+FORGET_USERS = (2, 5)
+
+
+def forget_burst(events):
+    """Explicit-seqno burst erasing FORGET_USERS' history after `events`."""
+    hist = retained_histories(events, M)
+    burst, seqno = [], len(events)
+    for u in FORGET_USERS:
+        for p in range(len(hist[u]) - 1, -1, -1):
+            burst.append(Event(KIND_DEL_BASKET, u, pos=p, seqno=seqno))
+            seqno += 1
+    return burst
+
+
+def run_forget_schedule(n_shards, sched, baseline, tmp_path):
+    """Checkpoint, crash mid-deletion-burst, restore, replay at-least-
+    once, scrub via ``forget_user`` (idempotent on the erased users) and
+    certify the recovered engine against the full event log."""
+    kind, site, hit, redeliver_seed = sched
+    events = baseline["events"][:SEG1]
+    burst = forget_burst(events)
+    ck = str(tmp_path / "ck")
+
+    eng = build(n_shards)
+    eng.submit(events)
+    eng.run_until_drained()
+    eng.checkpoint(ck, 1)
+    eng.submit(burst)
+    eng.step()
+    eng.step()                           # burst partially applied
+    if kind == "crash":
+        plan = faults.FaultPlan(crash_site=site, crash_on_hit=hit)
+        with faults.inject(plan):
+            try:
+                eng.checkpoint(ck, 2)
+                crashed = False
+            except faults.InjectedCrash:
+                crashed = True
+        assert crashed, f"schedule never reached fault site {site!r}"
+
+    # "process restart": restore, replay everything at-least-once
+    eng2 = build(n_shards)
+    eng2.restore(ck)
+    eng2.submit(events)
+    eng2.submit(burst)
+    eng2.submit(faults.redelivered(burst, seed=redeliver_seed))
+    eng2.run_until_drained()
+
+    # the front-door scrub must be idempotent: the burst already erased
+    # the histories, so the receipts report zero deletions and no trace
+    for u in FORGET_USERS:
+        receipt = eng2.forget_user(u)
+        assert receipt.n_baskets_deleted == 0
+        assert receipt.clean, f"user {u} residue: {receipt.residue}"
+    report = certify(eng2, events + burst,
+                     forgotten_users=FORGET_USERS,
+                     checkpoint_dir=str(tmp_path / "cert_ck"))
+    assert report.compliant, report.summary()
+
+
+def forget_schedules(n_shards):
+    """(kind, site, hit, redelivery_seed): crash at every commit site
+    mid-burst, plus crash-free redelivery-only schedules."""
+    scheds = [("none", None, 1, rs) for rs in (0, 1)]
+    sites = (faults.SHARD_CRASH_SITES if n_shards > 1
+             else faults.CRASH_SITES)
+    for site in sites:
+        for rs in (0, 1):
+            scheds.append(("crash", site, 1, rs))
+    return scheds
+
+
+FORGET_QUICK = [(2, ("crash", "npz.pre_replace", 1, 0))]
+
+
+@pytest.mark.parametrize("n_shards,sched", FORGET_QUICK,
+                         ids=[f"S{n}-forget-{_sched_id(s)}"
+                              for n, s in FORGET_QUICK])
+def test_forget_burst_quick(n_shards, sched, baseline, tmp_path):
+    run_forget_schedule(n_shards, sched, baseline, tmp_path)
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("n_shards,sched",
+                         [(n, s) for n in (1, 2, 4)
+                          for s in forget_schedules(n)],
+                         ids=[f"S{n}-forget-{_sched_id(s)}"
+                              for n in (1, 2, 4)
+                              for s in forget_schedules(n)])
+def test_forget_burst_soak(n_shards, sched, baseline, tmp_path):
+    run_forget_schedule(n_shards, sched, baseline, tmp_path)

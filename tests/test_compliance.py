@@ -1,0 +1,323 @@
+"""Compliance subsystem tests (ISSUE 9, DESIGN.md §11).
+
+Certification on randomized deletion-burst streams (single + sharded),
+seeded-violation detection (a skipped deletion MUST fail the
+certificate), ``forget_user`` receipts and no-trace guarantees
+(including the quantized cache, dead letters and checkpoint
+round-trips), the envelope derivation, and the post-forget seqno
+discipline of the sharded router.
+"""
+import numpy as np
+import pytest
+
+from repro.compliance import (basket_weights, certify,
+                              divergence_envelope, retained_histories)
+from repro.core.tifu import default_group_sizes, user_vector_ragged
+from repro.core.types import (KIND_ADD_BASKET, KIND_DEL_BASKET,
+                              KIND_DEL_ITEM, TifuParams)
+from repro.parallel.sharding import UserShardSpec
+from repro.streaming import (Event, ForgetReceipt,
+                             ShardedStreamingEngine, StateStore,
+                             StoreConfig, StreamingEngine)
+
+P = TifuParams(n_items=29, group_size=3, k_neighbors=4)
+M, N, B = 8, 24, 6
+
+
+def build(n_shards):
+    """Single or sharded engine at the module-level geometry."""
+    if n_shards == 1:
+        store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
+                                       max_baskets=N, max_basket_size=B))
+        return StreamingEngine(store, P, batch_size=16)
+    return ShardedStreamingEngine.create(
+        UserShardSpec(M, n_shards), P, max_baskets=N, max_basket_size=B,
+        batch_size=16)
+
+
+def gen_stream(rng, n_events=100, skip=()):
+    """Randomized interleaved add/del_basket/del_item stream."""
+    events, nb = [], [0] * M
+    for _ in range(n_events):
+        u = int(rng.integers(0, M))
+        if u in skip:
+            continue
+        r = rng.random()
+        if nb[u] > 0 and r < 0.25:
+            pos = int(rng.integers(0, nb[u]))
+            if r < 0.15:
+                events.append(Event(KIND_DEL_BASKET, u, pos=pos))
+                nb[u] -= 1
+            else:
+                events.append(Event(KIND_DEL_ITEM, u, pos=pos,
+                                    item=int(rng.integers(0, P.n_items))))
+        else:
+            items = rng.choice(P.n_items, size=int(rng.integers(1, 5)),
+                               replace=False)
+            events.append(Event(KIND_ADD_BASKET, u, items=items.tolist()))
+            nb[u] = min(nb[u] + 1, N - 2)
+    return events
+
+
+def forget_log(receipt):
+    """The deletion events a forget receipt corresponds to."""
+    return [Event(KIND_DEL_BASKET, receipt.user, pos=p)
+            for p in range(receipt.n_baskets_deleted - 1, -1, -1)]
+
+
+# ---------------------------------------------------------------------------
+# retained_histories: the semantic replay oracle
+# ---------------------------------------------------------------------------
+
+def test_retained_histories_semantics():
+    """Out-of-range/absent deletions noop; baskets dedup, sort, vanish."""
+    ev = [Event(KIND_ADD_BASKET, 0, items=[1, 2, 3]),
+          Event(KIND_ADD_BASKET, 0, items=[4, 5]),
+          Event(KIND_DEL_BASKET, 0, pos=0),          # drops {1,2,3}
+          Event(KIND_DEL_BASKET, 0, pos=5),          # out of range: noop
+          Event(KIND_DEL_ITEM, 0, pos=0, item=4),    # {4,5} -> {5}
+          Event(KIND_DEL_ITEM, 0, pos=0, item=9),    # absent: noop
+          Event(KIND_DEL_ITEM, 0, pos=0, item=5)]    # basket vanishes
+    hist = retained_histories(ev, 2)
+    assert hist[0] == [] and hist[1] == []
+
+    ev2 = [Event(KIND_ADD_BASKET, 1, items=[7, 7, 2])]
+    hist = retained_histories(ev2, 2)
+    assert hist[1][0].tolist() == [2, 7]              # deduped + sorted
+
+
+# ---------------------------------------------------------------------------
+# The §4.3 path-dependence envelope
+# ---------------------------------------------------------------------------
+
+def test_basket_weights_match_closed_form():
+    """Per-basket weights reproduce the Eq. 1+2 ragged oracle."""
+    sizes = [3, 3, 2]
+    w = basket_weights(sizes, P.r_b, P.r_g)
+    assert w.shape == (8,)
+    # weights ARE the linear coefficients of Eq. 1+2: a one-item basket
+    # stream reproduces the ragged oracle exactly
+    hist = [np.array([i % P.n_items]) for i in range(8)]
+    v = user_vector_ragged(hist, sizes, P)
+    manual = np.zeros(P.n_items)
+    for t, b in enumerate(hist):
+        manual[b[0]] += w[t]
+    np.testing.assert_allclose(v, manual, rtol=1e-12)
+
+
+def test_divergence_envelope_is_a_bound():
+    """E_u bounds the fit gap over random alternative partitions."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(1, 12))
+        hist = [rng.choice(P.n_items, size=int(rng.integers(1, 4)),
+                           replace=False) for _ in range(n)]
+        canon = default_group_sizes(n, P.group_size)
+        # a random alternative partition of the same n baskets
+        alt, left = [], n
+        while left:
+            tau = int(rng.integers(1, left + 1))
+            alt.append(tau)
+            left -= tau
+        env = divergence_envelope(alt, canon, P.r_b, P.r_g)
+        d = np.abs(user_vector_ragged(hist, alt, P)
+                   - user_vector_ragged(hist, canon, P)).max()
+        assert d <= env + 1e-12
+
+
+def test_divergence_envelope_rejects_mismatched_partitions():
+    """Partitions of different basket counts raise ValueError."""
+    with pytest.raises(ValueError):
+        divergence_envelope([2, 2], [3], P.r_b, P.r_g)
+
+
+# ---------------------------------------------------------------------------
+# Certification: randomized burst streams + violation detection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2])
+@pytest.mark.parametrize("seed", range(3))
+def test_certify_randomized_burst_stream(seed, n_shards, tmp_path):
+    """Clean burst streams + a forget certify at 1 and 2 shards."""
+    rng = np.random.default_rng(seed)
+    eng = build(n_shards)
+    events = gen_stream(rng)
+    eng.submit(events)
+    eng.run_until_drained()
+    victim = int(rng.integers(0, M))
+    receipt = eng.forget_user(victim)
+    assert receipt.clean
+    report = certify(eng, events + forget_log(receipt),
+                     forgotten_users=[victim],
+                     checkpoint_dir=str(tmp_path / "ck"))
+    assert report.compliant, report.summary()
+    assert report.envelope_slack <= 0.0
+    assert victim in report.forgotten_users
+
+
+def test_certify_detects_skipped_deletion():
+    """A deletion the engine never applied fails the certificate."""
+    rng = np.random.default_rng(7)
+    events = gen_stream(rng)
+    skipped = next(e for e in events if e.kind == KIND_DEL_BASKET)
+    eng = build(1)
+    eng.submit([e for e in events if e is not skipped])
+    eng.run_until_drained()
+    report = certify(eng, events)
+    assert not report.compliant
+    assert any(c.name == "structural-retained-equivalence"
+               for c in report.violations)
+
+
+def test_certify_detects_phantom_deletion():
+    # the engine processed a deletion the log does not contain
+    """A deletion absent from the log fails the certificate."""
+    rng = np.random.default_rng(8)
+    events = gen_stream(rng)
+    eng = build(1)
+    eng.submit(events)
+    eng.run_until_drained()
+    u = next(u for u in range(M)
+             if int(np.asarray(eng.store.state.n_baskets)[u]) > 0)
+    eng.delete_basket(u, 0)
+    eng.run_until_drained()
+    report = certify(eng, events)
+    assert not report.compliant
+
+
+def test_certify_detects_unforgotten_user():
+    # claiming a user was forgotten when their data is still live
+    """Claiming a live user was forgotten fails the no-trace check."""
+    rng = np.random.default_rng(9)
+    events = gen_stream(rng)
+    eng = build(1)
+    eng.submit(events)
+    eng.run_until_drained()
+    u = next(u for u in range(M)
+             if int(np.asarray(eng.store.state.n_baskets)[u]) > 0)
+    report = certify(eng, events, forgotten_users=[u])
+    assert not report.compliant
+    assert any(c.name == "no-trace-live" for c in report.violations)
+
+
+def test_certify_pure_add_stream_is_bitwise():
+    """A deletion-free stream certifies via the bitwise replay path."""
+    rng = np.random.default_rng(3)
+    events = [e for e in gen_stream(rng)
+              if e.kind == KIND_ADD_BASKET]
+    eng = build(1)
+    eng.submit(events)
+    eng.run_until_drained()
+    report = certify(eng, events)
+    assert report.compliant, report.summary()
+    assert report.pure_add_users and not report.deletion_users
+    bitwise = next(c for c in report.checks
+                   if c.name == "pure-add-bitwise")
+    assert "bitwise-equal" in bitwise.detail
+
+
+# ---------------------------------------------------------------------------
+# forget_user: receipts, caches, dead letters, seqno discipline
+# ---------------------------------------------------------------------------
+
+def test_forget_receipt_and_cache_scrub():
+    """forget_user scrubs both serving caches and is idempotent."""
+    rng = np.random.default_rng(11)
+    eng = build(1)
+    eng.submit(gen_stream(rng))
+    eng.run_until_drained()
+    # warm BOTH serving caches so stale rows would be visible residue
+    eng.store.corpus()
+    eng.store.quantized_corpus()
+    nb3 = int(np.asarray(eng.store.state.n_baskets)[3])
+    assert nb3 > 0
+    receipt = eng.forget_user(3)
+    assert isinstance(receipt, ForgetReceipt)
+    assert receipt.n_baskets_deleted == nb3
+    assert len(receipt.seqnos) == nb3
+    assert receipt.clean, receipt.residue
+    assert {"corpus_absmax", "quant_nonzero"} <= set(receipt.residue)
+    assert float(np.abs(np.asarray(eng.store.corpus())[3]).max()) == 0.0
+    q, _ = eng.store.quantized_corpus()
+    assert int((np.asarray(q)[3] != 0).sum()) == 0
+    # idempotent: a second forget is a clean no-op
+    again = eng.forget_user(3)
+    assert again.n_baskets_deleted == 0 and again.clean
+
+
+def test_forget_purges_dead_letters():
+    """forget_user drops the user's quarantined dead-letter payloads."""
+    eng = build(1)
+    eng.add_basket(2, [1, 2])
+    eng.run_until_drained()
+    # quarantined deletion for user 2 (position out of range at apply)
+    eng.submit([Event(KIND_DEL_BASKET, 2, pos=17)])
+    eng.run_until_drained()
+    assert any(ev.user == 2 for ev, _ in eng.dead_letter)
+    receipt = eng.forget_user(2)
+    assert receipt.purged_dead_letters >= 1
+    assert not any(ev.user == 2 for ev, _ in eng.dead_letter)
+
+
+def test_forget_during_frozen_serving_reports_residue():
+    """A pinned frozen snapshot makes the receipt honestly unclean."""
+    eng = build(1)
+    eng.add_basket(1, [4, 5])
+    eng.run_until_drained()
+    eng.freeze_serving()
+    receipt = eng.forget_user(1)
+    # the pinned snapshot still serves the old values: NOT clean, and
+    # the receipt says so instead of lying
+    assert not receipt.clean
+    assert receipt.residue["frozen_absmax"] > 0.0
+    eng.thaw_serving()
+    assert eng.store.row_residue([1])["user_vec_absmax"] == 0.0
+
+
+def test_sharded_forget_routes_seqnos_through_router():
+    """Sharded forget consumes router seqnos; later traffic admits."""
+    rng = np.random.default_rng(13)
+    eng = build(2)
+    events = gen_stream(rng)
+    eng.submit(events)
+    eng.run_until_drained()
+    receipt = eng.forget_user(5)
+    assert receipt.clean
+    # post-forget traffic must be fully admitted: a shard-local seqno
+    # assignment in forget_user would collide with these router seqnos
+    # and silently dedup legitimate events
+    more = gen_stream(np.random.default_rng(14), n_events=30, skip=(5,))
+    res = eng.submit(more)
+    assert res.admitted == len(more) and res.deduped == 0
+    eng.run_until_drained()
+    report = certify(eng, events + forget_log(receipt) + more,
+                     forgotten_users=[5])
+    assert report.compliant, report.summary()
+
+
+def test_sharded_forget_rejects_out_of_range_user():
+    """Unknown user ids raise InvalidEventError, not a silent noop."""
+    eng = build(2)
+    from repro.streaming import InvalidEventError
+    with pytest.raises(InvalidEventError):
+        eng.forget_user(M + 3)
+
+
+def test_checkpoint_round_trip_has_no_residue(tmp_path):
+    """A forgotten row stays zero through checkpoint + restore."""
+    rng = np.random.default_rng(17)
+    eng = build(1)
+    events = gen_stream(rng)
+    eng.submit(events)
+    eng.run_until_drained()
+    receipt = eng.forget_user(0)
+    ck = str(tmp_path / "ck")
+    eng.checkpoint(ck, 1)
+    eng2 = build(1)
+    eng2.restore(ck)
+    assert eng2.store.row_residue([0])["user_vec_absmax"] == 0.0
+    assert int(np.asarray(eng2.store.state.n_baskets)[0]) == 0
+    report = certify(eng2, events + forget_log(receipt),
+                     forgotten_users=[0],
+                     checkpoint_dir=str(tmp_path / "ck2"))
+    assert report.compliant, report.summary()

@@ -1,0 +1,87 @@
+"""Tier-1 coverage for the Table-2 predictive path (ISSUE 9).
+
+Two layers: the ranking-metric helpers in ``core/knn.py`` pinned
+against hand-computed values on a 3-user fixture (they previously had
+no direct unit tests), and ``benchmarks/table2_predictive.py`` run
+end-to-end on a tiny synthetic dataset — the exactness claim
+(incremental == baseline) and metric sanity, at seconds of runtime.
+"""
+import os
+import sys
+
+import numpy as np
+
+from repro.core import knn
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import table2_predictive  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Hand-computed 3-user fixture
+# ---------------------------------------------------------------------------
+
+# user 0: hits ranks 1 and 3 of {1, 3}; user 1: no hits of {9};
+# user 2: EMPTY truth — must be skipped, not averaged as zero.
+RECS = np.array([[1, 2, 3], [4, 5, 6], [7, 8, 9]])
+TRUTH = [np.array([1, 3]), np.array([9]), np.array([], np.int64)]
+
+D2 = 1.0 / np.log2(3.0)          # rank-2 discount 1/log2(2+1)
+D3 = 0.5                         # rank-3 discount 1/log2(4)
+
+
+def test_recall_at_k_hand_computed():
+    # k=2: user 0 recalls 1 of 2 truth items, user 1 none of 1
+    """Recall@k against hand-computed fixture values."""
+    assert knn.recall_at_k(RECS, TRUTH, 2) == (0.5 + 0.0) / 2
+    # k=3: user 0 recalls both truth items
+    assert knn.recall_at_k(RECS, TRUTH, 3) == (1.0 + 0.0) / 2
+
+
+def test_ndcg_at_k_hand_computed():
+    # user 0 @3: rel = [1, 0, 1] -> DCG = 1 + D3, IDCG = 1 + D2
+    """NDCG@k against hand-computed DCG/IDCG values."""
+    ndcg0 = (1.0 + D3) / (1.0 + D2)
+    np.testing.assert_allclose(knn.ndcg_at_k(RECS, TRUTH, 3),
+                               (ndcg0 + 0.0) / 2, rtol=1e-12)
+    # user 0 @2: rel = [1, 0] -> DCG = 1, IDCG = 1 + D2 (2 truth items)
+    np.testing.assert_allclose(knn.ndcg_at_k(RECS, TRUTH, 2),
+                               (1.0 / (1.0 + D2)) / 2, rtol=1e-12)
+
+
+def test_metrics_skip_users_with_empty_truth():
+    # only empty-truth users -> defined as 0.0, not NaN
+    """Empty-truth users are skipped, never averaged as zero."""
+    assert knn.recall_at_k(RECS[:1], [np.array([])], 2) == 0.0
+    assert knn.ndcg_at_k(RECS[:1], [np.array([])], 2) == 0.0
+
+
+def test_perfect_and_miss_extremes():
+    """Both metrics hit exactly 1.0 and 0.0 at the extremes."""
+    recs = np.array([[3, 1, 2]])
+    assert knn.recall_at_k(recs, [np.array([1, 2, 3])], 3) == 1.0
+    assert knn.ndcg_at_k(recs, [np.array([1, 2, 3])], 3) == 1.0
+    assert knn.recall_at_k(recs, [np.array([9])], 3) == 0.0
+    assert knn.ndcg_at_k(recs, [np.array([9])], 3) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# End-to-end smoke through benchmarks/table2_predictive.py
+# ---------------------------------------------------------------------------
+
+def test_table2_tiny_end_to_end():
+    """table2_predictive.run on a tiny corpus: exactness + sanity."""
+    rows, max_vec_diff = table2_predictive.run("tafeng", scale=0.002,
+                                               seed=0)
+    # the paper's exactness claim: incremental == baseline
+    assert max_vec_diff < 1e-10
+    metrics = {r[1]: r for r in rows}
+    assert set(metrics) == {"recall@10", "ndcg@10", "recall@20",
+                            "ndcg@20"}
+    for _, _, base, incr, decr in rows:
+        assert base == incr          # same vectors -> same metrics
+        for v in (base, incr, decr):
+            assert 0.0 <= v <= 1.0
+    # ranking on a real corpus must find SOME signal at k=20
+    assert metrics["recall@20"][2] > 0.0
