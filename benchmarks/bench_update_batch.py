@@ -35,6 +35,13 @@ of the kernel-path grid it measures end-to-end add latency through a
 records one ``arm="sharded"`` entry — the acceptance claim is that add
 latency stays flat in the shard count.
 
+``--device-resident`` switches to the **engine hot-path arm**
+(DESIGN.md §12): ``step()`` add/del p50/p99, the measured
+``transfers_per_step`` (contract: exactly one fused summary fetch), and
+a sync-vs-async checkpointed-step comparison whose
+``async_ckpt_p99_speedup_vs_sync`` ratio is the gated claim that the
+background writer keeps serialize/fsync out of the hot path's p99.
+
 Each result row records its backend, and BENCH_updates.json accumulates
 one entry per (backend, mode, arm) in ``runs`` — re-running a backend
 replaces only that entry, so CPU and TPU numbers are tracked
@@ -393,6 +400,132 @@ def bench_recovery(cfg: BenchConfig, backend: str) -> tuple:
     return results, summary
 
 
+def bench_device_resident(cfg: BenchConfig, backend: str) -> tuple:
+    """Engine hot-path latency under the §12 device-residency contract.
+
+    Times ``StreamingEngine.step()`` end to end for add-only and
+    delete-only micro-batches (p50/p99) and reports the measured
+    ``transfers_per_step`` — the fused-step-summary contract says a
+    healthy step performs exactly ONE device→host transfer, pinned by
+    tests/test_transfer_budget.py and tracked here as a parity fact.
+    Then times a *checkpointed* step (step + commit initiation) with
+    the synchronous §9 writer vs the §12 async snapshot-then-write
+    path on the SAME engine: the gated claim is that moving
+    serialize/fsync off the hot path beats the inline write at p99
+    (``async_ckpt_p99_speedup_vs_sync``).  The async arm's flush —
+    where writer errors surface and durability is guaranteed — happens
+    once, outside the timed region, exactly as a deployment would
+    sync at a barrier rather than per micro-batch.
+    """
+    import shutil
+    import tempfile
+
+    from repro.streaming import (AsyncCheckpointer, StateStore,
+                                 StoreConfig, StreamingEngine)
+
+    n_items = cfg.n_items_grid[min(1, len(cfg.n_items_grid) - 1)]
+    params = make_params(n_items)
+    store = StateStore(StoreConfig(
+        n_users=cfg.m_users, n_items=n_items,
+        max_baskets=cfg.max_baskets, max_basket_size=cfg.max_bsize))
+    eng = StreamingEngine(store, params, batch_size=cfg.batch)
+    rng = np.random.default_rng(0)
+    nb = np.zeros(cfg.m_users, np.int64)   # host mirror of basket counts
+    user_sets = [np.arange(lo, lo + cfg.batch, dtype=np.int32)
+                 for lo in range(0, cfg.m_users, cfg.batch)]
+
+    def feed(kind: str, i: int):
+        for u in user_sets[i % len(user_sets)]:
+            u = int(u)
+            if kind == "add" or nb[u] == 0:
+                eng.add_basket(u, rng.choice(
+                    n_items, size=int(rng.integers(2, cfg.max_bsize // 2)),
+                    replace=False))
+                nb[u] += 1
+            else:
+                eng.delete_basket(u, int(nb[u] - 1))
+                nb[u] -= 1
+
+    for i in range(4):                       # seed history + compile
+        feed("add", i)
+        eng.run_until_drained()
+
+    results = []
+    steps = max(12, cfg.iters)
+    transfers, steps_timed = 0, 0
+    for kind in ("add", "del"):
+        for i in range(3):                   # warmup this phase's buckets
+            feed(kind, i)
+            eng.run_until_drained()
+        times = []
+        fetches0 = eng.metrics.host_fetches  # timed steps only: warmup
+        for i in range(steps):               # drains pay flush fetches
+            feed(kind, i)
+            t0 = time.perf_counter()
+            eng.step()
+            times.append(time.perf_counter() - t0)
+            assert eng.n_pending == 0
+        transfers += eng.metrics.host_fetches - fetches0
+        steps_timed += steps
+        times = np.asarray(times)
+        r = {"kind": kind, "path": "engine_step", "backend": backend,
+             "n_items": n_items, "batch": cfg.batch, "iters": steps,
+             "mean_ms": float(times.mean() * 1e3),
+             "p50_ms": float(np.median(times) * 1e3),
+             "p99_ms": float(np.quantile(times, 0.99) * 1e3),
+             "events_per_s": float(cfg.batch / times.mean())}
+        results.append(r)
+        print(f"engine_step {kind:10s} n_items={n_items:>6d} "
+              f"p50={r['p50_ms']:8.2f} ms p99={r['p99_ms']:8.2f} ms  "
+              f"({r['events_per_s']:,.0f} ev/s)")
+    transfers_per_step = transfers / steps_timed
+
+    # checkpointed step: commit initiation on the hot path, sync vs async
+    ck_iters = max(6, cfg.dense_iters + 2)
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_device_resident_")
+    ck = AsyncCheckpointer()
+    ckpt_p99 = {}
+    try:
+        for mode in ("sync", "async"):
+            eng.checkpointer = ck if mode == "async" else None
+            eng.checkpoint(os.path.join(ckpt_dir, mode), 0)  # warm path
+            times = []
+            for i in range(ck_iters):
+                feed("add", i)
+                t0 = time.perf_counter()
+                eng.step()
+                eng.checkpoint(os.path.join(ckpt_dir, mode), i + 1)
+                times.append(time.perf_counter() - t0)
+            eng.flush_checkpoints()          # durability barrier,
+            times = np.asarray(times)        # outside the timed region
+            ckpt_p99[mode] = float(np.quantile(times, 0.99) * 1e3)
+            results.append({
+                "kind": "add", "path": f"ckpt_{mode}_step",
+                "backend": backend, "n_items": n_items,
+                "batch": cfg.batch, "iters": ck_iters,
+                "mean_ms": float(times.mean() * 1e3),
+                "p50_ms": float(np.median(times) * 1e3),
+                "p99_ms": ckpt_p99[mode]})
+            print(f"ckpt_{mode:5s} step      n_items={n_items:>6d} "
+                  f"p50={np.median(times) * 1e3:8.2f} ms "
+                  f"p99={ckpt_p99[mode]:8.2f} ms")
+        ck.close()
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+    add, dele = results[0], results[1]
+    summary = {
+        "transfers_per_step": transfers_per_step,
+        "add_p50_ms": add["p50_ms"], "add_p99_ms": add["p99_ms"],
+        "del_p50_ms": dele["p50_ms"], "del_p99_ms": dele["p99_ms"],
+        "sync_ckpt_step_p99_ms": ckpt_p99["sync"],
+        "async_ckpt_step_p99_ms": ckpt_p99["async"],
+        "async_ckpt_p99_speedup_vs_sync":
+            ckpt_p99["sync"] / ckpt_p99["async"],
+    }
+    return results, summary
+
+
 def bench(path: str, params, rng, kind: str, iters: int,
           cfg: BenchConfig, backend: str) -> dict:
     apply_fn = PATHS[path]
@@ -524,6 +657,12 @@ def main() -> int:
                          "counters) instead of the kernel-path grid; "
                          "records one arm='recovery' entry (DESIGN.md "
                          "§9)")
+    ap.add_argument("--device-resident", action="store_true",
+                    help="run the engine hot-path arm: step() add/del "
+                         "p50/p99, measured transfers/step, and the "
+                         "sync-vs-async checkpointed-step comparison; "
+                         "records one arm='device_resident' entry "
+                         "(DESIGN.md §12)")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_updates.json"))
     args = ap.parse_args()
@@ -537,14 +676,18 @@ def main() -> int:
         ap.error("--backend interpret is interpret-mode Pallas (orders of "
                  "magnitude slower): only allowed with --smoke")
 
-    if args.shards and args.recovery:
-        ap.error("--shards and --recovery are separate arms; run them "
-                 "as two invocations (each records its own entry)")
+    if sum(map(bool, (args.shards, args.recovery,
+                      args.device_resident))) > 1:
+        ap.error("--shards/--recovery/--device-resident are separate "
+                 "arms; run them as distinct invocations (each records "
+                 "its own entry)")
     with ops.default_impl(BACKEND_IMPL[backend]):
         if args.shards:
             results, summary = bench_sharded(cfg, args.shards, backend)
         elif args.recovery:
             results, summary = bench_recovery(cfg, backend)
+        elif args.device_resident:
+            results, summary = bench_device_resident(cfg, backend)
         else:
             results = run_grid(cfg, backend, args.quick)
             summary = summarize(results, cfg)
@@ -555,6 +698,8 @@ def main() -> int:
             note = "  (acceptance: < 1.5x)"
         elif k == "add_latency_growth_max_vs_min_shards":
             note = "  (acceptance: flat, ~1x)"
+        elif k == "async_ckpt_p99_speedup_vs_sync":
+            note = "  (acceptance: > 1x)"
         elif k.startswith(("del_basket", "del_item")):
             note = "  (acceptance: >= 5x)"
         print(f"  {k}: {v:.2f}{note}" if isinstance(v, float)
@@ -574,6 +719,8 @@ def main() -> int:
         entry["shards"] = summary["shards"]
     elif args.recovery:
         entry["arm"] = "recovery"
+    elif args.device_resident:
+        entry["arm"] = "device_resident"
     out = os.path.abspath(args.out)
     payload = merge_runs(out, entry)
     with open(out, "w") as f:

@@ -3,7 +3,13 @@
 EN01: every public state-store/engine path that performs a raw durable
 write must reach the single atomic LATEST commit site
 (``atomic_write_json``) — a write path that bypasses it can leave a
-torn manifest after a crash.  EN02: fault-injection site names form a
+torn manifest after a crash.  Background writer threads are held to the
+same discipline regardless of visibility: a ``threading.Thread`` whose
+``target`` transitively writes raw without reaching the commit sink is
+flagged even from a private spawner, because the thread outlives its
+caller and so escapes any public path's commit reasoning (the §12 async
+checkpointer stays clean by construction — its worker runs opaque jobs,
+and the jobs the engine submits END in the atomic replace).  EN02: fault-injection site names form a
 closed registry — a ``trip("...")`` with an unregistered name silently
 never fires, so the chaos suite stops covering that crash window.
 EN03: ``BENCH_updates.json`` summary keys must follow the naming
@@ -34,6 +40,42 @@ def _is_public(qualname: str) -> bool:
     return not any(part.startswith("_") for part in qualname.split("."))
 
 
+def _thread_target(node: ast.Call) -> Optional[ast.expr]:
+    """The ``target=`` expression of a ``threading.Thread(...)`` call."""
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else getattr(f, "id",
+                                                               None)
+    if name != "Thread":
+        return None
+    for kw in node.keywords:
+        if kw.arg == "target":
+            return kw.value
+    return None
+
+
+def _target_qualname(expr: ast.expr, cls: Optional[str],
+                     funcs: Dict[str, "astutil.FuncInfo"]) -> Optional[str]:
+    """Resolve a thread target to a module-local qualname, or None."""
+    if isinstance(expr, ast.Name) and expr.id in funcs:
+        return expr.id
+    if (isinstance(expr, ast.Attribute) and cls is not None
+            and isinstance(expr.value, ast.Name)
+            and expr.value.id == "self"
+            and f"{cls}.{expr.attr}" in funcs):
+        return f"{cls}.{expr.attr}"
+    return None
+
+
+def _reaches_commit(reach: Set[str], funcs: Dict[str, "astutil.FuncInfo"],
+                    commit_names: Set[str]) -> bool:
+    """True when any function in ``reach`` hits the commit sink —
+    as a module-local definition or an imported name."""
+    if reach & commit_names:
+        return True
+    return any(COMMIT_SINK in astutil.referenced_names(funcs[q].node)
+               for q in reach if q in funcs)
+
+
 def check_commit_paths_in_tree(tree: ast.Module,
                                path: Path) -> List[Finding]:
     """EN01 over one parsed module."""
@@ -53,21 +95,44 @@ def check_commit_paths_in_tree(tree: ast.Module,
         reach = astutil.transitive_closure(q, edges)
         if not reach & writers:
             continue
-        reaches_commit = bool(reach & commit_names) or \
-            COMMIT_SINK in astutil.referenced_names(info.node)
-        if not reaches_commit:
+        if not _reaches_commit(reach, funcs, commit_names):
             findings.append(_f(
                 "EN01", path, info.node.lineno,
                 f"public `{q}` reaches a raw durable write "
                 f"({sorted(reach & writers)}) without reaching the "
                 f"atomic commit site `{COMMIT_SINK}`"))
+    # Thread targets: the spawned function escapes every synchronous
+    # call path's commit reasoning, so it is held to the discipline
+    # directly — private spawners included.
+    for q, info in sorted(funcs.items()):
+        for node in ast.walk(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            target = _thread_target(node)
+            if target is None:
+                continue
+            tq = _target_qualname(target, info.cls, funcs)
+            if tq is None:
+                continue
+            reach = astutil.transitive_closure(tq, edges)
+            if not reach & writers:
+                continue
+            if not _reaches_commit(reach, funcs, commit_names):
+                findings.append(_f(
+                    "EN01", path, node.lineno,
+                    f"`{q}` spawns a thread on `{tq}`, which reaches a "
+                    f"raw durable write ({sorted(reach & writers)}) "
+                    f"without reaching the atomic commit site "
+                    f"`{COMMIT_SINK}`"))
     return findings
 
 
 def check_commit_paths(root: Path) -> List[Finding]:
-    """EN01 over the streaming state-store and engine modules."""
+    """EN01 over the streaming state-store, engine, and async-writer
+    modules."""
     findings: List[Finding] = []
-    for rel in ("streaming/state_store.py", "streaming/engine.py"):
+    for rel in ("streaming/state_store.py", "streaming/engine.py",
+                "streaming/async_checkpoint.py"):
         path = root / "src" / "repro" / rel
         if path.exists():
             sf = astutil.load(path)

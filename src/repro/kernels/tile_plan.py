@@ -73,6 +73,69 @@ def row_tiles(ids, bi: int):
     return jnp.where(t == _SENTINEL, -1, t).astype(jnp.int32)
 
 
+def row_tile_counts(ids, bi: int):
+    """Per-row touched-tile counts, floored at 1: i32[U].
+
+    ``ids i32[U, W]`` (PAD = −1) → number of distinct item tiles each
+    row touches (an all-PAD row counts 1: every plan reserves at least
+    one guarded step).  Traceable under jit — this is the device half
+    of the ``T_max`` measurement that :func:`max_touched_tiles` does on
+    host, used by the streaming engine's fused step summary so the
+    bound rides the single per-step transfer instead of forcing its
+    own history fetch (DESIGN.md §12).
+    """
+    t = row_tiles(ids, bi)
+    return jnp.maximum(jnp.sum((t >= 0).astype(jnp.int32), axis=1),
+                       1).astype(jnp.int32)
+
+
+def history_support_tile_bound(history, n_baskets, extra_ids, valid,
+                               *, bi: int):
+    """Scalar touched-tile bound for delete supports, on device.
+
+    The delete appliers' support for user row ``r`` is the whole live
+    history window ``history[r, :n_baskets[r]]`` plus (for item
+    deletes) the deleted id itself — passed as ``extra_ids i32[U]``
+    with −1 for "none".  ``valid bool[U]`` masks padding rows (their
+    count is forced to 1, never 0, so the max stays a sound plan
+    size).  Returns the i32[] max over rows; jit-traceable with static
+    ``bi``.
+    """
+    u, n, b = history.shape
+    live = jnp.arange(n, dtype=jnp.int32)[None, :, None] \
+        < n_baskets[:, None, None]
+    ids = jnp.where(live, history, -1).reshape(u, n * b)
+    ids = jnp.concatenate([ids, extra_ids[:, None].astype(jnp.int32)],
+                          axis=1)
+    counts = jnp.where(valid, row_tile_counts(ids, bi), 1)
+    return jnp.max(counts)
+
+
+def add_support_tile_bound(history, group_sizes, n_baskets, n_groups,
+                           new_ids, valid, *, bi: int):
+    """Scalar touched-tile bound for the add support, on device.
+
+    The add applier touches the new basket's ids (``new_ids i32[U, W]``,
+    PAD = −1) plus the user's LAST group window
+    ``history[r, n−tau : n]`` where ``tau`` is the last group's size —
+    the rows Eq. 8's group-vector update re-reads.  Same masking
+    contract as :func:`history_support_tile_bound`; returns the i32[]
+    max over valid rows.
+    """
+    u, n, b = history.shape
+    rows = jnp.arange(u, dtype=jnp.int32)
+    tau = jnp.where(
+        n_groups > 0,
+        group_sizes[rows, jnp.maximum(n_groups - 1, 0)], 0)
+    lo = jnp.maximum(n_baskets - tau, 0)
+    pos = jnp.arange(n, dtype=jnp.int32)[None, :]
+    live = (pos >= lo[:, None]) & (pos < n_baskets[:, None])
+    ids = jnp.where(live[:, :, None], history, -1).reshape(u, n * b)
+    ids = jnp.concatenate([ids, new_ids.astype(jnp.int32)], axis=1)
+    counts = jnp.where(valid, row_tile_counts(ids, bi), 1)
+    return jnp.max(counts)
+
+
 def build_plan(rows, ids, *, bi: int, t_max: int,
                order: str = "target") -> TilePlan:
     """Build the step plan for ``rows i32[U]``, ``ids i32[U, W]``.

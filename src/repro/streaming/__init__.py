@@ -2,6 +2,7 @@
 analog — paper §5), exactly-once recovery, stability-triggered refresh,
 the user-axis sharded deployment (DESIGN.md §7), and the durable
 ingestion / fault-injection layer (DESIGN.md §9)."""
+from repro.streaming.async_checkpoint import AsyncCheckpointer
 from repro.streaming.engine import (AdmissionResult, Backpressure, Event,
                                     ForgetReceipt, InvalidEventError,
                                     ShardedStreamingEngine,
@@ -12,7 +13,8 @@ from repro.streaming.state_store import (CorruptCheckpointError, StateStore,
                                          load_json_checked, state_shardings,
                                          with_io_retries)
 
-__all__ = ["Event", "ForgetReceipt", "StreamingEngine",
+__all__ = ["AsyncCheckpointer",
+           "Event", "ForgetReceipt", "StreamingEngine",
            "ShardedStreamingEngine",
            "StateStore", "StoreConfig", "state_shardings",
            "load_checkpoint_arrays", "AdmissionResult", "Backpressure",

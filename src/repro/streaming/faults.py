@@ -55,7 +55,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 __all__ = [
-    "CRASH_SITES", "SHARD_CRASH_SITES", "READ_SITES",
+    "CRASH_SITES", "SHARD_CRASH_SITES", "READ_SITES", "ASYNC_CRASH_SITES",
     "InjectedCrash", "InjectedIOError", "FaultPlan",
     "inject", "active_plan", "trip",
     "tear_file", "bitflip_file", "redelivered",
@@ -80,6 +80,17 @@ SHARD_CRASH_SITES = CRASH_SITES + (
 
 # Restore-path read sites (targets for transient I/O errors).
 READ_SITES = ("LATEST.read", "npz.read")
+
+# Background-writer sites of an async (snapshot-then-write) checkpoint:
+# the worker thread trips "async.dequeue" just before it starts a
+# dequeued commit job and "async.post_commit" right after the job's
+# atomic LATEST replace.  A crash at either point dies on the *writer*
+# thread — the engine keeps streaming and must observe the failure at
+# the next flush/commit boundary (DESIGN.md §12).
+ASYNC_CRASH_SITES = (
+    "async.dequeue",
+    "async.post_commit",
+)
 
 
 class InjectedCrash(BaseException):

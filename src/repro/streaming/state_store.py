@@ -31,7 +31,8 @@ import os
 import time
 import zipfile
 import zlib
-from typing import Any, Callable, Dict, Optional, Sequence, Set, Tuple
+from typing import (TYPE_CHECKING, Any, Callable, Dict, Optional, Sequence,
+                    Set, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core.types import StreamState, _pow2_pad
 from repro.optim.compression import quantize_int8_rows
 from repro.streaming import faults
+
+if TYPE_CHECKING:  # type-only: the writer runs opaque commit closures
+    from repro.streaming.async_checkpoint import AsyncCheckpointer
 
 
 class CorruptCheckpointError(RuntimeError):
@@ -587,34 +591,86 @@ class StateStore:
 
     # -- persistence (exactly-once recovery substrate) -----------------------
 
+    def _snapshot_leaves(self) -> Dict[str, np.ndarray]:
+        """Copy every state leaf to host memory, owned by the caller.
+
+        ``np.array(..., copy=True)`` rather than ``np.asarray`` on
+        purpose: on the CPU backend a jax→numpy conversion can be a
+        zero-copy *view* of the device buffer, and the engine's donated
+        appliers invalidate that buffer on the very next micro-batch —
+        a background writer holding a view would serialize garbage
+        (read-after-free).  The deep copy is the "snapshot" half of
+        snapshot-then-write (DESIGN.md §12) and the only O(state) cost
+        that stays on the caller's hot path.
+        """
+        st = self.state
+        return {
+            "user_vecs": np.array(st.user_vecs, copy=True),
+            "last_group_vecs": np.array(st.last_group_vecs, copy=True),
+            "history": np.array(st.history, copy=True),
+            "group_sizes": np.array(st.group_sizes, copy=True),
+            "n_baskets": np.array(st.n_baskets, copy=True),
+            "n_groups": np.array(st.n_groups, copy=True),
+            "err_mult": np.array(st.err_mult, copy=True),
+            "uv_scale": np.array(st.uv_scale, copy=True),
+            "lgv_scale": np.array(st.lgv_scale, copy=True),
+        }
+
     def checkpoint(self, directory: str, step: int,
                    extra_meta: Optional[dict] = None) -> str:
         """Write one atomic checkpoint commit; returns the npz path.
 
-        The state npz is made durable FIRST; the ``LATEST`` metadata
-        write (which carries ``extra_meta``, e.g. the engine's
-        exactly-once log, plus the npz's CRC32) is the single atomic
-        commit point — see the comment at the write below.  The previous
+        Synchronous snapshot-then-write: :meth:`_snapshot_leaves` now,
+        :meth:`_write_commit` inline.  The state npz is made durable
+        FIRST; the ``LATEST`` metadata write (which carries
+        ``extra_meta``, e.g. the engine's exactly-once log, plus the
+        npz's CRC32) is the single atomic commit point.  The previous
         ``LATEST`` survives as ``LATEST.prev`` (byte-for-byte, its
         self-CRC stays valid), giving restore a verified fallback commit
         when the newest one is later found corrupted (DESIGN.md §9).
         Transient I/O errors retry under the config's bounded budget.
         Cost: one O(state) device fetch + compressed write.
         """
+        return self._write_commit(directory, step, self._snapshot_leaves(),
+                                  extra_meta)
+
+    def checkpoint_async(self, checkpointer: "AsyncCheckpointer",
+                         directory: str, step: int,
+                         extra_meta: Optional[dict] = None) -> str:
+        """Snapshot now, commit on the background writer; returns npz path.
+
+        The caller-thread cost is one :meth:`_snapshot_leaves` copy; the
+        serialize/fsync/atomic-replace sequence (identical bytes and
+        identical fault sites to :meth:`checkpoint`) runs as a FIFO job
+        on ``checkpointer``'s worker thread.  Exactly-once is preserved
+        because the job *ends in* the atomic ``LATEST`` replace: until
+        that replace lands, restore sees the previous commit, never a
+        torn one.  A writer-thread failure (including an injected
+        crash) surfaces at the checkpointer's next ``submit``/``flush``
+        — callers must flush before trusting the returned path exists.
+        """
+        leaves = self._snapshot_leaves()
+        path = os.path.join(directory, f"state_{step:010d}.npz")
+        checkpointer.submit(
+            lambda: self._write_commit(directory, step, leaves, extra_meta),
+            label=f"{directory}@{step}")
+        return path
+
+    def _write_commit(self, directory: str, step: int,
+                      leaves: Dict[str, np.ndarray],
+                      extra_meta: Optional[dict] = None) -> str:
+        """Serialize ``leaves`` and land the atomic ``LATEST`` commit.
+
+        The write half of snapshot-then-write: runs inline for
+        :meth:`checkpoint`, or as the background writer's job for
+        :meth:`checkpoint_async`.  ``leaves`` must be host-owned copies
+        (see :meth:`_snapshot_leaves`) — this function never touches
+        ``self.state``, so the engine may keep donating buffers while
+        it writes.
+        """
         os.makedirs(directory, exist_ok=True)
         path = os.path.join(directory, f"state_{step:010d}.npz")
         tmp = path + ".tmp"
-        leaves = {
-            "user_vecs": np.asarray(self.state.user_vecs),
-            "last_group_vecs": np.asarray(self.state.last_group_vecs),
-            "history": np.asarray(self.state.history),
-            "group_sizes": np.asarray(self.state.group_sizes),
-            "n_baskets": np.asarray(self.state.n_baskets),
-            "n_groups": np.asarray(self.state.n_groups),
-            "err_mult": np.asarray(self.state.err_mult),
-            "uv_scale": np.asarray(self.state.uv_scale),
-            "lgv_scale": np.asarray(self.state.lgv_scale),
-        }
 
         def write_npz() -> Tuple[int, int]:
             faults.trip("npz.pre_write")

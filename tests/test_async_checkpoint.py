@@ -1,0 +1,159 @@
+"""AsyncCheckpointer unit contract + snapshot-then-write semantics
+(DESIGN.md §12): FIFO commit order, process-like failure fencing
+(first error freezes the writer; queued jobs are discarded whole, never
+half-run), bitwise sync/async commit equivalence, and snapshot
+isolation — a commit serialized long after the engine mutated on must
+still land the snapshot-time state.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import TifuParams
+from repro.streaming import (AsyncCheckpointer, StateStore, StoreConfig,
+                             StreamingEngine, load_checkpoint_arrays)
+
+P = TifuParams(n_items=23, group_size=3, r_b=0.9, r_g=0.7)
+
+
+def small_store():
+    return StateStore(StoreConfig(n_users=4, n_items=P.n_items,
+                                  max_baskets=12, max_basket_size=4))
+
+
+def warmed_engine(n_events=24, checkpointer=None, store=None):
+    """An engine with some nontrivial state to checkpoint."""
+    rng = np.random.default_rng(3)
+    eng = StreamingEngine(store or small_store(), P, batch_size=4,
+                          checkpointer=checkpointer)
+    for _ in range(n_events):
+        items = rng.choice(P.n_items, size=3, replace=False)
+        eng.add_basket(int(rng.integers(0, 4)), items)
+    assert eng.run_until_drained() == n_events
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# AsyncCheckpointer unit contract
+# ---------------------------------------------------------------------------
+
+def test_fifo_order_and_completed_labels():
+    ck = AsyncCheckpointer()
+    ran = []
+    for i in range(5):
+        ck.submit(lambda i=i: ran.append(i), label=f"job{i}")
+    ck.flush()
+    assert ran == [0, 1, 2, 3, 4]
+    assert list(ck.completed_labels) == [f"job{i}" for i in range(5)]
+    assert ck.pending == 0
+    assert ck.error is None
+    ck.close()
+
+
+def test_error_fences_queue_and_surfaces_everywhere():
+    ck = AsyncCheckpointer()
+    gate = threading.Event()
+    ran_after = []
+    ck.submit(lambda: gate.wait(timeout=30), label="blocker")
+    ck.submit(lambda: (_ for _ in ()).throw(ValueError("disk gone")),
+              label="boom")
+    # queued BEHIND the failing job: must be discarded whole, never run
+    ck.submit(lambda: ran_after.append(1), label="after")
+    gate.set()
+    with pytest.raises(ValueError, match="disk gone"):
+        ck.flush()
+    assert ran_after == []
+    assert list(ck.completed_labels) == ["blocker"]
+    assert ck.error is not None
+    # every later sync point keeps surfacing the recorded failure
+    with pytest.raises(ValueError):
+        ck.submit(lambda: None)
+    with pytest.raises(ValueError):
+        ck.flush()
+    ck.close()
+
+
+def test_closed_checkpointer_rejects_submit():
+    ck = AsyncCheckpointer()
+    ck.submit(lambda: None)
+    ck.close()
+    with pytest.raises(RuntimeError):
+        ck.submit(lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# snapshot-then-write semantics on the store
+# ---------------------------------------------------------------------------
+
+def test_async_commit_bitwise_equals_sync(tmp_path):
+    store = warmed_engine().store
+    ck = AsyncCheckpointer()
+    store.checkpoint(str(tmp_path / "sync"), 5)
+    path = store.checkpoint_async(ck, str(tmp_path / "async"), 5)
+    ck.flush()
+    assert path.endswith("state_0000000005.npz")
+
+    meta_s, leaves_s = load_checkpoint_arrays(str(tmp_path / "sync"))
+    meta_a, leaves_a = load_checkpoint_arrays(str(tmp_path / "async"))
+    assert set(leaves_s) == set(leaves_a)
+    for name in leaves_s:
+        np.testing.assert_array_equal(leaves_s[name], leaves_a[name])
+    # identical leaves serialize to identical committed bytes
+    for key in ("step", "npz_crc32", "npz_bytes"):
+        assert meta_s[key] == meta_a[key]
+    ck.close()
+
+
+def test_snapshot_isolation_under_later_mutation(tmp_path):
+    """The commit lands the SNAPSHOT-time state, not the write-time one.
+
+    The worker is gated shut while the engine keeps mutating (its donated
+    appliers invalidate the old device buffers — the exact hazard the
+    deep-copy snapshot exists for); the commit that then lands must
+    restore bitwise to the state at ``checkpoint_async`` time.
+    """
+    ck = AsyncCheckpointer()
+    eng = warmed_engine(checkpointer=ck)
+    frozen = {k: v.copy()
+              for k, v in eng.store._snapshot_leaves().items()}
+
+    gate = threading.Event()
+    ck.submit(lambda: gate.wait(timeout=30), label="gate")
+    eng.store.checkpoint_async(ck, str(tmp_path / "ck"), 1)
+
+    # mutate well past the snapshot while the writer is still gated
+    rng = np.random.default_rng(9)
+    for _ in range(16):
+        eng.add_basket(int(rng.integers(0, 4)),
+                       rng.choice(P.n_items, size=3, replace=False))
+    eng.run_until_drained()
+    gate.set()
+    ck.flush()
+
+    _, leaves = load_checkpoint_arrays(str(tmp_path / "ck"))
+    for name, want in frozen.items():
+        np.testing.assert_array_equal(leaves[name], want)
+    # and the post-mutation live state genuinely moved on
+    assert not np.array_equal(
+        np.asarray(eng.store.state.n_baskets), frozen["n_baskets"])
+    ck.close()
+
+
+# ---------------------------------------------------------------------------
+# engine-level async roundtrip
+# ---------------------------------------------------------------------------
+
+def test_engine_async_checkpoint_roundtrip(tmp_path):
+    ck = AsyncCheckpointer()
+    eng = warmed_engine(checkpointer=ck)
+    eng.checkpoint(str(tmp_path / "ck"), 1)
+    eng.flush_checkpoints()
+    want = np.asarray(eng.store.state.materialized_user_vecs())
+
+    eng2 = StreamingEngine(small_store(), P, batch_size=4)
+    eng2.restore(str(tmp_path / "ck"))
+    np.testing.assert_array_equal(
+        np.asarray(eng2.store.state.materialized_user_vecs()), want)
+    assert eng2.watermark == eng.watermark
+    ck.close()

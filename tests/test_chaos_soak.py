@@ -1,7 +1,8 @@
 """Chaos soak (DESIGN.md §9, the PR's headline gate): the 520-event
 mixed stream driven under ~150 seeded fault schedules — a process crash
 at every commit site (killing a chosen shard's commit), torn and
-bit-flipped checkpoint files of every class, transient I/O errors, and
+bit-flipped checkpoint files of every class, transient I/O errors,
+crashes of the async background checkpoint writer mid-flight (§12), and
 seeded at-least-once redelivery — at 1, 2, and 4 shards.
 
 Every schedule must end with the recovered engine BITWISE identical to
@@ -25,7 +26,8 @@ from repro.compliance import certify, retained_histories
 from repro.core import RefEngine, TifuParams, knn
 from repro.core.types import KIND_ADD_BASKET, KIND_DEL_BASKET, KIND_DEL_ITEM
 from repro.parallel.sharding import UserShardSpec
-from repro.streaming import (Event, ShardedStreamingEngine, StateStore,
+from repro.streaming import (AsyncCheckpointer, Event,
+                             ShardedStreamingEngine, StateStore,
                              StoreConfig, StreamingEngine, faults)
 
 P = TifuParams(n_items=41, group_size=3, r_b=0.9, r_g=0.7)
@@ -34,15 +36,16 @@ TOPN, K_NN = 5, 4
 SEG1, SEG2 = 200, 380          # checkpoint boundaries in the 520 stream
 
 
-def build(n_shards):
+def build(n_shards, checkpointer=None):
     """A fresh engine: the flat single engine at 1, sharded above."""
     if n_shards == 1:
         store = StateStore(StoreConfig(n_users=M, n_items=P.n_items,
                                        max_baskets=N, max_basket_size=B))
-        return StreamingEngine(store, P, batch_size=16)
+        return StreamingEngine(store, P, batch_size=16,
+                               checkpointer=checkpointer)
     return ShardedStreamingEngine.create(
         UserShardSpec(M, n_shards), P, max_baskets=N, max_basket_size=B,
-        batch_size=16)
+        batch_size=16, checkpointer=checkpointer)
 
 
 def state_rows(eng):
@@ -264,6 +267,105 @@ def test_chaos_quick(n_shards, sched, baseline, tmp_path):
                               for s in all_schedules(n)])
 def test_chaos_soak(n_shards, sched, baseline, tmp_path):
     run_schedule(n_shards, sched, baseline, tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# Async (snapshot-then-write) crash-in-flight schedules (DESIGN.md §12):
+# the BACKGROUND writer dies mid-commit — at a §9 commit site or at one
+# of its own ASYNC_CRASH_SITES — while the engine keeps streaming.  The
+# crash must surface at flush, restore must land on the last *committed*
+# LATEST (never a torn one), and replay must reconverge bitwise.
+# ---------------------------------------------------------------------------
+
+
+def run_async_schedule(n_shards, sched, baseline, tmp_path):
+    """Crash the background checkpoint writer while a commit is in
+    flight and the hot path keeps processing events; restore + replay
+    must be indistinguishable from the synchronous crash schedules."""
+    site, hit, redeliver_seed = sched
+    events = baseline["events"]
+    ck = str(tmp_path / "ck")
+
+    eng = build(n_shards, checkpointer=AsyncCheckpointer())
+    eng.submit(events[:SEG1])
+    eng.run_until_drained()
+    eng.checkpoint(ck, 1)
+    eng.flush_checkpoints()              # commit 1 fully durable
+    eng.submit(events[SEG1:SEG2])
+    eng.run_until_drained()
+
+    plan = faults.FaultPlan(crash_site=site, crash_on_hit=hit)
+    crashed = False
+    with faults.inject(plan):
+        try:
+            eng.checkpoint(ck, 2)        # snapshot + enqueue, returns
+            eng.submit(events[SEG2:])    # hot path streams PAST the
+            eng.run_until_drained()      # in-flight commit
+            eng.flush_checkpoints()      # writer crash surfaces HERE
+        except faults.InjectedCrash:
+            crashed = True
+    assert crashed, f"async schedule never crashed at {site!r}"
+
+    # "process restart": fresh engine + fresh writer; restore must find
+    # the last committed LATEST (step 2's jobs at/behind the crash were
+    # discarded whole or committed atomically — never torn)
+    eng2 = build(n_shards, checkpointer=AsyncCheckpointer())
+    eng2.restore(ck)
+    eng2.submit(events)
+    dups = faults.redelivered(events, seed=redeliver_seed)
+    eng2.submit(dups)
+    eng2.step()
+    eng2.submit(dups)
+    eng2.run_until_drained()
+    eng2.submit(dups)
+    assert eng2.run_until_drained() == 0
+
+    got = state_rows(eng2)
+    np.testing.assert_array_equal(got, baseline["state"],
+                                  err_msg=f"state diverged: {sched}")
+    recs = eng2.recommend(np.arange(M), topn=TOPN, k=K_NN)
+    np.testing.assert_array_equal(recs, baseline["recs"],
+                                  err_msg=f"recs diverged: {sched}")
+
+
+def async_schedules(n_shards):
+    """(crash_site, crash_on_hit, redelivery_seed) for the async writer:
+    every §9 commit site (now tripped ON the writer thread) plus the
+    writer's own dequeue/post-commit sites."""
+    scheds = []
+    sites = (faults.SHARD_CRASH_SITES if n_shards > 1
+             else faults.CRASH_SITES) + faults.ASYNC_CRASH_SITES
+    for site in sites:
+        one_hit = site.startswith("SHARDS") or n_shards == 1
+        for hit in ((1,) if one_hit else (1, n_shards)):
+            for rs in (0, 1):
+                scheds.append((site, hit, rs))
+    return scheds
+
+
+ASYNC_QUICK = [
+    (1, ("async.dequeue", 1, 0)),
+    (2, ("npz.pre_replace", 2, 1)),
+    (1, ("LATEST.post_replace", 1, 0)),
+]
+
+
+@pytest.mark.parametrize("n_shards,sched", ASYNC_QUICK,
+                         ids=[f"S{n}-async-{_sched_id(s)}"
+                              for n, s in ASYNC_QUICK])
+def test_async_crash_quick(n_shards, sched, baseline, tmp_path):
+    run_async_schedule(n_shards, sched, baseline, tmp_path)
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("n_shards,sched",
+                         [(n, s) for n in (1, 2, 4)
+                          for s in async_schedules(n)],
+                         ids=[f"S{n}-async-{_sched_id(s)}"
+                              for n in (1, 2, 4)
+                              for s in async_schedules(n)])
+def test_async_crash_soak(n_shards, sched, baseline, tmp_path):
+    run_async_schedule(n_shards, sched, baseline, tmp_path)
 
 
 # ---------------------------------------------------------------------------
